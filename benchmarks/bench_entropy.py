@@ -1,0 +1,97 @@
+"""Paper Fig. 4 — symbolic-distribution entropy of SAX vs sSAX (Season)
+and SAX vs tSAX (Trend), by length, #segments, component strength, plus
+the real-world surrogates (A = A_res = 256 throughout, H_max = 8)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cached, emit_row
+from repro.core import SAX, SSAX, TSAX
+from repro.data.datasets import economy_like, metering_like
+from repro.data.synthetic import season_dataset, trend_dataset
+
+A = 256
+
+
+def entropy(symbols, alphabet: int) -> float:
+    """Eq. 32 over all symbols of a dataset representation."""
+    counts = np.bincount(np.asarray(symbols).reshape(-1),
+                         minlength=alphabet).astype(np.float64)
+    p = counts / counts.sum()
+    nz = p > 0
+    return float(-(p[nz] * np.log2(p[nz])).sum())
+
+
+def run():
+    rows = []
+    # -- Season: entropy by length (Fig 4a), strength fixed 50%
+    for T in [480, 960, 1440, 1920]:
+        X = cached(("season", T, 0.5),
+                   lambda T=T: season_dataset(1000, T, 10, 0.5, seed=4))
+        W = T // 20
+        sax = SAX(T=T, W=W, A=A)
+        ss = SSAX(T=T, W=W, L=10, A_seas=A, A_res=A, r2_season=0.5)
+        h_sax = entropy(sax.encode(jnp.asarray(X)), A)
+        h_ss = entropy(ss.encode(jnp.asarray(X))[1], A)
+        rows.append(("entropy/season_by_length",
+                     f"T={T} H_sax={h_sax:.3f} H_ssax={h_ss:.3f}"))
+    # -- Season: entropy by #segments (Fig 4b), T=960
+    X = cached(("season", 960, 0.5),
+               lambda: season_dataset(1000, 960, 10, 0.5, seed=4))
+    for W in [24, 48, 96]:
+        sax = SAX(T=960, W=W, A=A)
+        ss = SSAX(T=960, W=W, L=10, A_seas=A, A_res=A, r2_season=0.5)
+        h_sax = entropy(sax.encode(jnp.asarray(X)), A)
+        h_ss = entropy(ss.encode(jnp.asarray(X))[1], A)
+        rows.append(("entropy/season_by_segments",
+                     f"W={W} H_sax={h_sax:.3f} H_ssax={h_ss:.3f}"))
+    # -- Season: entropy by strength (Fig 4c)
+    for s in [0.1, 0.5, 0.9, 0.99]:
+        X = season_dataset(1000, 960, 10, s, seed=5)
+        sax = SAX(T=960, W=48, A=A)
+        ss = SSAX(T=960, W=48, L=10, A_seas=A, A_res=A, r2_season=s)
+        h_sax = entropy(sax.encode(jnp.asarray(X)), A)
+        h_ss = entropy(ss.encode(jnp.asarray(X))[1], A)
+        rows.append(("entropy/season_by_strength",
+                     f"R2={s} H_sax={h_sax:.3f} H_ssax={h_ss:.3f}"))
+    # -- Trend: by length / strength (Fig 4d-f)
+    for T in [480, 960, 1920]:
+        X = trend_dataset(1000, T, 0.5, seed=6)
+        W = T // 20
+        sax = SAX(T=T, W=W, A=A)
+        ts = TSAX(T=T, W=W, A_tr=A, A_res=A, r2_trend=0.5)
+        h_sax = entropy(sax.encode(jnp.asarray(X)), A)
+        h_ts = entropy(ts.encode(jnp.asarray(X))[1], A)
+        rows.append(("entropy/trend_by_length",
+                     f"T={T} H_sax={h_sax:.3f} H_tsax={h_ts:.3f}"))
+    for s in [0.1, 0.5, 0.9]:
+        X = trend_dataset(1000, 960, s, seed=7)
+        sax = SAX(T=960, W=48, A=A)
+        ts = TSAX(T=960, W=48, A_tr=A, A_res=A, r2_trend=s)
+        h_sax = entropy(sax.encode(jnp.asarray(X)), A)
+        h_ts = entropy(ts.encode(jnp.asarray(X))[1], A)
+        rows.append(("entropy/trend_by_strength",
+                     f"R2={s} H_sax={h_sax:.3f} H_tsax={h_ts:.3f}"))
+    # -- real-world surrogates (paper §5.1: 6.96 -> 7.09 and 7.92 -> 7.95)
+    Xm = metering_like(n=512, days=65)
+    Tm = Xm.shape[1]
+    sax = SAX(T=Tm, W=Tm // 48, A=A)
+    ss = SSAX(T=Tm, W=Tm // 48, L=48, A_seas=A, A_res=A, r2_season=0.183)
+    rows.append(("entropy/metering_like",
+                 f"H_sax={entropy(sax.encode(jnp.asarray(Xm)), A):.3f} "
+                 f"H_ssax={entropy(ss.encode(jnp.asarray(Xm))[1], A):.3f}"))
+    Xe = economy_like(n=512)
+    sax = SAX(T=300, W=20, A=A)
+    ts = TSAX(T=300, W=20, A_tr=A, A_res=A, r2_trend=0.6)
+    rows.append(("entropy/economy_like",
+                 f"H_sax={entropy(sax.encode(jnp.asarray(Xe)), A):.3f} "
+                 f"H_tsax={entropy(ts.encode(jnp.asarray(Xe))[1], A):.3f}"))
+    for name, derived in rows:
+        emit_row(name, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU
+(the Pallas path targets TPU; interpret mode is a correctness harness, not
+a performance surface) plus derived TPU-roofline throughput estimates for
+the kernel formulations (DESIGN.md §3)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import SAX, SSAX
+from repro.data.synthetic import season_dataset
+from repro.kernels import ops, ref
+
+HBM = 819e9          # B/s
+MXU = 197e12         # flop/s
+
+
+def run():
+    X = season_dataset(20_000, 960, 10, 0.5, seed=14)
+    sax = SAX(T=960, W=48, A=256)
+    syms = sax.encode(jnp.asarray(X))
+    tab = ops.make_sax_query_table(syms[0], sax.breakpoints)
+    t = time_fn(lambda: ops.sax_dist(syms, tab, use_kernel=False), iters=5)
+    n, w = syms.shape
+    a = tab.shape[1]
+    # TPU estimate: HBM-bound on int8 symbols vs MXU-bound on one-hot dot
+    t_mem = n * w * 1 / HBM
+    t_mxu = n * w * a * 2 / MXU
+    emit("kernel/sax_dist_cpu_ref", t,
+         f"N={n} W={w} A={a} cpu_gcand/s={n / t / 1e9:.3f} "
+         f"tpu_est_bound={'mxu' if t_mxu > t_mem else 'hbm'} "
+         f"tpu_est_s={max(t_mxu, t_mem):.2e}")
+
+    ss = SSAX(T=960, W=48, L=10, A_seas=64, A_res=64, r2_season=0.5)
+    s_syms, r_syms = ss.encode(jnp.asarray(X))
+    tabs = ops.make_ssax_query_tables(s_syms[0], r_syms[0],
+                                      ss.b_seas, ss.b_res)
+    t = time_fn(lambda: ops.ssax_dist(s_syms, r_syms, *tabs,
+                                      use_kernel=False), iters=5)
+    L = s_syms.shape[1]
+    t_vpu = n * L * w * 4 / (MXU / 16)       # cross-term on the VPU
+    emit("kernel/ssax_dist_cpu_ref", t,
+         f"N={n} L={L} W={w} cpu_gcand/s={n / t / 1e9:.3f} "
+         f"tpu_est_s={t_vpu:.2e}")
+
+    x = jnp.asarray(X)
+    t = time_fn(lambda: ops.paa_segments(x, 48, use_kernel=False), iters=5)
+    emit("kernel/paa_cpu_ref", t,
+         f"N={n} T=960 tpu_est_s={n * 960 * 4 / HBM:.2e} (stream-bound)")
+
+    q = x[0]
+    t = time_fn(lambda: ops.euclid_batch(x, q, use_kernel=False), iters=5)
+    emit("kernel/euclid_cpu_ref", t,
+         f"N={n} T=960 tpu_est_s={n * 960 * 4 / HBM:.2e} (stream-bound)")
+
+    # interpret-mode spot check cost (correctness harness latency)
+    small = syms[:2048]
+    t = time_fn(lambda: ops.sax_dist(small, tab), iters=2)
+    emit("kernel/sax_dist_interpret", t, "N=2048 (correctness mode)")
+    return []
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 6 — pruning power of exact matching, sSAX/tSAX vs SAX at
+equal representation size."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import cached, emit_row
+from repro.core import SAX, SSAX, TSAX
+from repro.core.matching import pairwise_euclidean, pruning_power
+from repro.data.synthetic import season_dataset, trend_dataset
+
+N_Q = 24
+
+
+def _pp(technique, Q, D):
+    rq = technique.encode(jnp.asarray(Q))
+    rx = technique.encode(jnp.asarray(D))
+    d = np.asarray(technique.pairwise_distance(rq, rx))
+    return float(np.mean([pruning_power(Q[i], d[i], D)
+                          for i in range(len(Q))]))
+
+
+def run():
+    rows = []
+    for s in [0.1, 0.5, 0.9]:
+        X = cached(("season", 960, s, "pp"),
+                   lambda s=s: season_dataset(400, 960, 10, s, seed=10))
+        Q, D = X[:N_Q], X[N_Q:]
+        pp_sax = max(_pp(SAX(T=960, W=32, A=1024), Q, D),
+                     _pp(SAX(T=960, W=48, A=64), Q, D))
+        pp_ss = max(_pp(SSAX(T=960, W=24, L=10, A_seas=256, A_res=1024,
+                             r2_season=s), Q, D),
+                    _pp(SSAX(T=960, W=48, L=10, A_seas=9, A_res=64,
+                             r2_season=s), Q, D))
+        rows.append(("pruning/season",
+                     f"R2={s} sax={pp_sax:.4f} ssax={pp_ss:.4f} "
+                     f"gain_pp={(pp_ss - pp_sax) * 100:.1f}"))
+    for s in [0.1, 0.5, 0.9]:
+        X = trend_dataset(400, 960, s, seed=11)
+        Q, D = X[:N_Q], X[N_Q:]
+        pp_sax = _pp(SAX(T=960, W=48, A=64), Q, D)
+        pp_ts = _pp(TSAX(T=960, W=48, A_tr=64, A_res=64, r2_trend=s), Q, D)
+        rows.append(("pruning/trend",
+                     f"R2={s} sax={pp_sax:.4f} tsax={pp_ts:.4f} "
+                     f"gain_pp={(pp_ts - pp_sax) * 100:.1f}"))
+    for name, derived in rows:
+        emit_row(name, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

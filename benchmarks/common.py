@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: timing, dataset cache, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+_DATA_CACHE = {}
+
+
+def cached(key, builder):
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = builder()
+    return _DATA_CACHE[key]
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5):
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """The runner's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.2f},{derived}")
+
+
+def emit_row(name: str, derived: str):
+    print(f"{name},,{derived}")

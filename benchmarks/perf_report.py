@@ -1,0 +1,84 @@
+"""§Perf generator: turn results/hillclimb.json into the
+hypothesis -> change -> before -> after -> verdict log, with roofline
+terms recomputed per variant (same methodology as benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import roofline_record, ICI_BW
+
+
+def _terms(rec):
+    if "compute_s" in rec:
+        return rec
+    return roofline_record(rec)
+
+
+def perf_log(path: str) -> str:
+    recs = json.load(open(path))
+    by_cell: dict = {}
+    for r in recs:
+        by_cell.setdefault(r["cell"], []).append(r)
+
+    out = []
+    for cell, rows in by_cell.items():
+        out.append(f"\n### Cell: {cell}\n")
+        base = None
+        for r in rows:
+            if r.get("status", "ok") != "ok":
+                out.append(f"* **{r['variant']}** — ERROR: {r.get('error')}")
+                continue
+            if cell == "matching-engine":
+                line = (f"| {r['variant']} | cpu {r['cpu_s']*1e3:.0f} ms/q | "
+                        f"tpu-bound {r['tpu_bound']:.2e} s "
+                        f"({r['n_candidates']/r['tpu_bound']/1e9:.2f} Gcand/s) |")
+                if base is None:
+                    base = r["tpu_bound"]
+                    verdict = "baseline"
+                else:
+                    gain = base / r["tpu_bound"]
+                    verdict = f"{gain:.2f}x vs baseline"
+                out.append(f"* **{r['variant']}** — {verdict}")
+                out.append(f"  * hypothesis: {r['hypothesis']}")
+                out.append(f"  * measured: {line}")
+                continue
+            rr = _terms(r)
+            terms = (f"compute {rr['compute_s']:.3e}s / memory "
+                     f"{rr['memory_s']:.3e}s / collective "
+                     f"{rr['collective_s']:.3e}s -> dominant "
+                     f"**{rr['dominant']}**, roofline frac "
+                     f"{rr['roofline_fraction']:.2f}")
+            if base is None:
+                base = rr
+                verdict = "baseline"
+            else:
+                b = max(base["compute_s"], base["memory_s"],
+                        base["collective_s"])
+                n = max(rr["compute_s"], rr["memory_s"], rr["collective_s"])
+                verdict = (f"step-time bound {b:.3e}s -> {n:.3e}s "
+                           f"({b/max(n,1e-30):.2f}x)")
+            out.append(f"* **{r['variant']}** — {verdict}")
+            out.append(f"  * hypothesis: {r['hypothesis']}")
+            out.append(f"  * measured: {terms}; collective bytes/dev "
+                       f"{rr['coll_bytes_per_dev']/1e6:.1f} MB")
+    return "\n".join(out) + "\n"
+
+
+def run():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "hillclimb.json")
+    if not os.path.exists(path):
+        print("perf/skipped,,no results/hillclimb.json")
+        return
+    log = perf_log(path)
+    out = os.path.join(os.path.dirname(path), "perf_log.md")
+    with open(out, "w") as f:
+        f.write("# §Perf — hillclimb log\n" + log)
+    print(f"perf/log,,written {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark runner — one module per paper table/figure plus the roofline
+report.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only entropy,tlb,...]
+
+Paper artifact map:
+    entropy  -> Fig. 4      tlb      -> Fig. 5     pruning -> Fig. 6
+    approx   -> Fig. 7      matching -> Table 5    kernels -> (engine)
+    roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+
+SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
+          "extensions", "roofline", "perf"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if suite not in chosen:
+            continue
+        t0 = time.time()
+        modname = {"roofline": "benchmarks.roofline",
+                   "perf": "benchmarks.perf_report"}.get(
+                       suite, f"benchmarks.bench_{suite}")
+        try:
+            mod = importlib.import_module(modname)
+            mod.run()
+            print(f"suite/{suite},{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:   # noqa: BLE001 — report, keep going
+            print(f"suite/{suite},,ERROR {type(e).__name__}: {e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: encode a seasonal dataset with SAX and sSAX, run a pruned
+exact match, and see the paper's effect first-hand.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SAX, SSAX, exact_match, season_strength
+from repro.core.matching import RawStore, pairwise_euclidean
+from repro.data.synthetic import season_dataset
+
+
+def main():
+    # 1. a dataset with a strong (90%) season of length 10
+    X = season_dataset(n=2000, T=960, L=10, strength=0.9, seed=0)
+    query, data = X[0], X[1:]
+    print(f"dataset: {data.shape[0]} series of T={data.shape[1]}, "
+          f"mean season strength "
+          f"{float(np.mean(np.asarray(season_strength(jnp.asarray(X), 10)))):.2f}")
+
+    # 2. encode with SAX and with sSAX at the SAME representation budget
+    sax = SAX(T=960, W=48, A=64)                      # 288 bits
+    ssax = SSAX(T=960, W=48, L=10, A_seas=9, A_res=32,
+                r2_season=0.9)                        # ~272 bits
+    d_sax = np.asarray(sax.pairwise_distance(
+        sax.encode(jnp.asarray(query[None])), sax.encode(jnp.asarray(data))))[0]
+    d_ssax = np.asarray(ssax.pairwise_distance(
+        ssax.encode(jnp.asarray(query[None])), ssax.encode(jnp.asarray(data))))[0]
+
+    # 3. pruned exact matching from a simulated HDD cold store
+    r_sax = exact_match(query, d_sax, RawStore.hdd(data))
+    r_ssax = exact_match(query, d_ssax, RawStore.hdd(data))
+    truth = int(np.argmin(np.asarray(pairwise_euclidean(
+        jnp.asarray(query[None]), jnp.asarray(data)))[0]))
+
+    print(f"true nearest neighbour: #{truth}")
+    for name, r in [("SAX ", r_sax), ("sSAX", r_ssax)]:
+        io = RawStore.hdd(data).modeled_io_seconds(r.raw_accesses)
+        print(f"  {name}: match #{r.index} (correct={r.index == truth})  "
+              f"raw reads {r.raw_accesses:5d} ({r.pruned_fraction:5.1%} pruned)"
+              f"  modeled HDD time {io:7.2f}s")
+    print("-> season-aware symbols prune harder, touch less cold storage, "
+          "and return the same exact answer (the paper's Table 5 effect).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end LM training driver: a ~20M-param smollm-family model for a
+few hundred steps on the synthetic motif stream, with checkpointing and
+an injected failure to show the restart path.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(The identical code path scales to the production mesh via
+``python -m repro.launch.train --scale full``.)
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+    train_main([
+        "--arch", "smollm-135m", "--scale", "reduced",
+        "--d-model", str(args.width), "--n-layers", str(args.layers),
+        "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm_ckpt", "--ckpt-every", "100",
+        "--inject-failures", str(args.steps // 2),
+        "--lr", "1e-3",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — season- and trend-aware symbolic approximation (sSAX/tSAX/stSAX)
+as a multi-pod JAX framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, Checkpointer)
+from repro.checkpoint.elastic import reshard_checkpoint  # noqa: F401

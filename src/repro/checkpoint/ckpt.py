@@ -1,0 +1,164 @@
+"""Sharded checkpointing with atomic manifest commit.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json            # tree structure, leaf shapes/dtypes, hash
+        shard_h000.npz           # this host's leaves (flat key -> array)
+    <dir>/LATEST                 # atomically-renamed pointer file
+
+Crash safety: everything is written into ``step_XXXX.tmp`` and renamed
+only after the manifest fsyncs — a torn write can never produce a
+readable-but-wrong checkpoint, and restore always follows LATEST.  On a
+real multi-host pod each process writes its own ``shard_hNNN.npz`` of
+locally-addressable shards; in this single-process container host 0 owns
+everything (the layout is already multi-host shaped, which is what the
+elastic re-shard tool consumes).
+
+Leaves are stored *logically unsharded* (host-gathered) so restore can
+re-shard onto any mesh — the elastic-scaling contract (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flat(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): v for p, v in leaves}, treedef
+
+
+def _config_hash(tree) -> str:
+    leaves, _ = _flat(tree)
+    desc = json.dumps({k: (list(np.shape(v)), str(np.asarray(v).dtype))
+                       for k, v in sorted(leaves.items())})
+    return hashlib.sha256(desc.encode()).hexdigest()[:16]
+
+
+def save_checkpoint(directory: str, step: int, state, *, host: int = 0,
+                    keep: int = 3) -> str:
+    """Write one checkpoint; returns its final path."""
+    leaves, _ = _flat(state)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays = {k: np.asarray(v) for k, v in leaves.items()}
+    np.savez(os.path.join(tmp, f"shard_h{host:03d}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "hash": _config_hash(state),
+        "hosts": 1,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+    }
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    # pointer file, atomically replaced
+    ptr_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str):
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    name = open(ptr).read().strip()
+    path = os.path.join(directory, name)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(directory: str, like, *, step=None,
+                       shardings=None):
+    """Restore into the structure of ``like`` (a state pytree or abstract
+    tree).  ``shardings``: optional matching tree of NamedSharding to
+    device_put each leaf onto (elastic re-shard on load)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    data = {}
+    for fn in sorted(os.listdir(path)):
+        if fn.startswith("shard_") and fn.endswith(".npz"):
+            with np.load(os.path.join(path, fn)) as z:
+                data.update({k: z[k] for k in z.files})
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh = [s for _, s in
+                   jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    out = []
+    for i, (p, leaf) in enumerate(leaves):
+        k = jax.tree_util.keystr(p)
+        if k not in data:
+            raise KeyError(f"checkpoint at step {step} missing leaf {k}")
+        arr = data[k]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"leaf {k}: checkpoint shape {arr.shape} != expected {want}")
+        if flat_sh is not None:
+            arr = jax.device_put(arr, flat_sh[i])
+        out.append(arr)
+    state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+    return state, manifest
+
+
+class Checkpointer:
+    """Cadence-based checkpointing helper for the training loop."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, step: int, state, force: bool = False):
+        if force or (self.every and step % self.every == 0 and step > 0):
+            return save_checkpoint(self.directory, step, state,
+                                   keep=self.keep)
+        return None
+
+    def restore_or_init(self, init_fn, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return init_fn(), 0
+        like = init_fn()
+        state, manifest = restore_checkpoint(
+            self.directory, like, step=step, shardings=shardings)
+        return state, manifest["step"]

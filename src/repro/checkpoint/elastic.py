@@ -1,0 +1,46 @@
+"""Elastic re-sharding: restore a checkpoint onto a different mesh.
+
+Checkpoints store logically-unsharded leaves (ckpt.py), so scaling the
+data-parallel degree up or down is a restore with new NamedShardings.
+``reshard_checkpoint`` is the offline tool (old dir -> new dir is not
+needed — the same checkpoint serves any mesh); what changes is the
+sharding tree handed to ``restore_checkpoint``.  The launcher calls
+``elastic_restore`` on boot with whatever mesh it actually got — that,
+plus the data pipeline re-splitting by new dp rank, is the whole elastic
+story for DP/FSDP axes.  (Changing the *model* axis degree would change
+padding of vocab-sharded tables; guarded against below.)
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.transformer import param_pspecs
+from repro.sharding.specs import ShardingRules
+from repro.train.state import train_state_pspecs
+
+
+def state_shardings_for_mesh(cfg, mesh: Mesh):
+    rules = ShardingRules.for_mesh(mesh)
+    ps = train_state_pspecs(cfg, rules)
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), ps,
+                        is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                        or type(x).__name__ == "PartitionSpec")
+
+
+def elastic_restore(directory: str, cfg, mesh: Mesh, abstract_state):
+    """Restore the latest checkpoint re-sharded onto ``mesh``."""
+    from repro.checkpoint.ckpt import restore_checkpoint
+    sh = state_shardings_for_mesh(cfg, mesh)
+    return restore_checkpoint(directory, abstract_state, shardings=sh)
+
+
+def reshard_checkpoint(directory: str, cfg, old_mesh: Mesh, new_mesh: Mesh,
+                       abstract_state):
+    """Validate old->new mesh compatibility and load re-sharded."""
+    if old_mesh.shape.get("model", 1) != new_mesh.shape.get("model", 1):
+        raise ValueError(
+            "elastic scaling changes only data-parallel axes; the model "
+            "axis degree is fixed by table padding (DESIGN.md §6)")
+    return elastic_restore(directory, cfg, new_mesh, abstract_state)

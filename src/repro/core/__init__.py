@@ -1,0 +1,17 @@
+"""The paper's contribution: season- and trend-aware symbolic approximation
+(sSAX / tSAX) with lower-bounding distances, plus the SAX / 1d-SAX
+baselines and the pruned exact / approximate matching engine.
+"""
+
+from repro.core.normalize import znormalize  # noqa: F401
+from repro.core.breakpoints import (  # noqa: F401
+    gaussian_breakpoints, uniform_breakpoints, discretize)
+from repro.core.paa import paa, paa_distance  # noqa: F401
+from repro.core.sax import SAX  # noqa: F401
+from repro.core.ssax import SSAX, season_mask, season_strength  # noqa: F401
+from repro.core.tsax import TSAX, trend_features, trend_strength  # noqa: F401
+from repro.core.onedsax import OneDSAX  # noqa: F401
+from repro.core.stsax import STSAX  # noqa: F401
+from repro.core.index import SSaxIndex  # noqa: F401
+from repro.core.matching import (  # noqa: F401
+    exact_match, approximate_match, euclidean)

@@ -1,0 +1,45 @@
+"""Breakpoint construction.
+
+SAX assumes N(0,1) segment means; sSAX/tSAX instead use component-aware
+scales (Eqs. 17/18/31) — Gaussian quantiles of N(0, sd) — and a *uniform*
+alphabet over [-phi_max, phi_max] for the tSAX trend angle (Eq. 29).
+A-1 interior breakpoints split R into A equiprobable intervals; symbol s
+occupies [b_{s-1}, b_s) (0-based: bp[s-1] .. bp[s]).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+def gaussian_breakpoints(alphabet: int, sd: float = 1.0):
+    """A-1 interior breakpoints of N(0, sd) with equal mass 1/A."""
+    assert alphabet >= 2
+    qs = jnp.arange(1, alphabet, dtype=jnp.float64 if False else jnp.float32)
+    qs = qs / alphabet
+    return sd * ndtri(qs)
+
+
+def uniform_breakpoints(alphabet: int, lo: float, hi: float):
+    """A-1 interior breakpoints splitting [lo, hi] uniformly."""
+    assert alphabet >= 2
+    i = jnp.arange(1, alphabet, dtype=jnp.float32)
+    return lo + (hi - lo) * i / alphabet
+
+
+def discretize(values, breakpoints):
+    """Map real values to 0-based symbols via the breakpoint grid."""
+    return jnp.searchsorted(breakpoints, values, side="right").astype(jnp.int32)
+
+
+def lower_bounds(breakpoints):
+    """Per-symbol lower interval edge; symbol 0 -> -inf."""
+    return jnp.concatenate([jnp.asarray([-jnp.inf], breakpoints.dtype),
+                            breakpoints])
+
+
+def upper_bounds(breakpoints):
+    """Per-symbol upper interval edge; last symbol -> +inf."""
+    return jnp.concatenate([breakpoints,
+                            jnp.asarray([jnp.inf], breakpoints.dtype)])

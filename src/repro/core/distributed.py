@@ -1,0 +1,125 @@
+"""Distributed matching engine: the paper's pipeline mapped onto a JAX mesh.
+
+The dataset of N series is sharded over the ("pod","data") axes; queries
+are replicated.  One ``shard_map`` pass per stage:
+
+  1. ``encode_sharded`` — representation construction (one pass/series,
+     exactly the paper's "Representation Time = 1 pass" property, batched).
+  2. ``repr_topk_sharded`` — symbolic distances on the local shard
+     (Pallas ``sax_dist`` kernel where available, jnp otherwise), local
+     top-k, then a global candidate merge via ``all_gather`` of k
+     candidates per shard (collective volume independent of N — the
+     property that scales to 1000+ nodes, DESIGN.md §3).
+  3. Raw verification of the surviving candidates against the cold store
+     (host side, via ``matching.exact_match`` semantics).
+
+The helpers take any encoder with ``encode`` + ``pairwise_distance`` —
+SAX, sSAX, tSAX and 1d-SAX all plug in.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def encode_sharded(encoder, dataset, mesh: Mesh):
+    """Encode a dataset sharded over the data axes.  dataset: (N, T)."""
+    axes = _data_axes(mesh)
+
+    def local(x):
+        return encoder.encode(x)
+
+    spec_in = P(axes, None)
+    rep_struct = jax.eval_shape(encoder.encode,
+                                jax.ShapeDtypeStruct(dataset.shape,
+                                                     dataset.dtype))
+    spec_out = jax.tree.map(lambda _: P(axes, *([None] * 0)), rep_struct)
+    # representation leaves keep their leading N axis sharded; trailing
+    # axes replicated
+    spec_out = jax.tree.map(
+        lambda s: P(axes, *([None] * (len(s.shape) - 1))), rep_struct)
+    fn = shard_map(local, mesh=mesh, in_specs=(spec_in,),
+                   out_specs=spec_out, check_rep=False)
+    return fn(dataset)
+
+
+def repr_distances_sharded(encoder, rep_query, rep_data, mesh: Mesh,
+                           pairwise: Callable | None = None):
+    """(Q, N) representation distances, N sharded.  Output replicated-Q,
+    N-sharded."""
+    axes = _data_axes(mesh)
+    pw = pairwise or encoder.pairwise_distance
+
+    def local(rq, rx):
+        return pw(rq, rx)
+
+    in_q = jax.tree.map(lambda s: P(*([None] * s.ndim)), rep_query)
+    in_x = jax.tree.map(
+        lambda s: P(axes, *([None] * (s.ndim - 1))), rep_data)
+    fn = shard_map(local, mesh=mesh, in_specs=(in_q, in_x),
+                   out_specs=P(None, axes), check_rep=False)
+    return fn(rep_query, rep_data)
+
+
+def repr_topk_sharded(encoder, rep_query, rep_data, mesh: Mesh, *,
+                      k: int = 64, pairwise: Callable | None = None):
+    """Global top-k candidate (distance, index) per query.
+
+    Local shard computes distances + local top-k; k*shards candidates are
+    all-gathered and reduced — collective volume O(Q*k*shards), never O(N).
+    Returns (dists (Q, k), global indices (Q, k)).
+    """
+    axes = _data_axes(mesh)
+    pw = pairwise or encoder.pairwise_distance
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+
+    def local(rq, rx):
+        d = pw(rq, rx)                                 # (Q, n_local)
+        n_local = d.shape[1]
+        kk = min(k, n_local)
+        neg, idx = jax.lax.top_k(-d, kk)               # smallest distances
+        # global index offset of this shard
+        shard_id = jax.lax.axis_index(axes[0])
+        if len(axes) == 2:
+            shard_id = shard_id * jax.lax.axis_size(axes[1]) + \
+                jax.lax.axis_index(axes[1])
+        gidx = idx + shard_id * n_local
+        cand_d = jax.lax.all_gather(-neg, axes, axis=1, tiled=True)
+        cand_i = jax.lax.all_gather(gidx, axes, axis=1, tiled=True)
+        best_neg, best_pos = jax.lax.top_k(-cand_d, min(k, cand_d.shape[1]))
+        best_i = jnp.take_along_axis(cand_i, best_pos, axis=1)
+        return -best_neg, best_i
+
+    in_q = jax.tree.map(lambda s: P(*([None] * s.ndim)), rep_query)
+    in_x = jax.tree.map(
+        lambda s: P(axes, *([None] * (s.ndim - 1))), rep_data)
+    fn = shard_map(local, mesh=mesh, in_specs=(in_q, in_x),
+                   out_specs=(P(None, None), P(None, None)),
+                   check_rep=False)
+    return fn(rep_query, rep_data)
+
+
+def make_matching_service(encoder, dataset, mesh: Mesh, *, k: int = 64,
+                          pairwise: Callable | None = None):
+    """Returns (rep_data, query_fn) — query_fn jitted end-to-end."""
+    rep_data = encode_sharded(encoder, dataset, mesh)
+
+    @jax.jit
+    def query_fn(queries):
+        rep_q = encoder.encode(queries)
+        return repr_topk_sharded(encoder, rep_q, rep_data, mesh, k=k,
+                                 pairwise=pairwise)
+
+    return rep_data, query_fn

@@ -1,0 +1,127 @@
+"""SAX extensions from the paper's §2.4 survey (Table 1), implemented as
+additional baselines: ESAX, SAX_SD, TD-SAX.
+
+These are *survey* baselines — the paper's own evaluation compares against
+SAX and 1d-SAX only; we include them for the Table-1 property benchmark
+(representation size / #lookups / lower-bounding) and for extra TLB
+ablations.  Distances follow the cited originals; each one states whether
+it is lower-bounding.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.breakpoints import discretize, gaussian_breakpoints
+from repro.core.paa import paa
+from repro.core.sax import cell_table
+
+
+@dataclass(frozen=True)
+class ESAX:
+    """ESAX (Lkhagva et al. 2006): (min, mean, max) symbol per segment.
+
+    Lower-bounding: the mean-symbol MINDIST term alone already
+    lower-bounds d_ED; the min/max terms are used only as tie-sharpeners
+    in the original (which proposes max over feature distances — NOT
+    guaranteed LB).  We use the safe variant: distance = SAX MINDIST on
+    the mean symbols (LB), and expose ``distance_maxfeat`` for the
+    original behaviour.
+    """
+
+    T: int
+    W: int
+    A: int
+
+    @property
+    def bits(self) -> float:
+        return 3 * self.W * math.log2(self.A)
+
+    def encode(self, x):
+        T, W = self.T, self.W
+        xs = x.reshape(*x.shape[:-1], W, T // W)
+        bp = gaussian_breakpoints(self.A, 1.0)
+        return (discretize(jnp.min(xs, -1), bp),
+                discretize(jnp.mean(xs, -1), bp),
+                discretize(jnp.max(xs, -1), bp))
+
+    def distance(self, ra, rb):
+        tab = cell_table(gaussian_breakpoints(self.A, 1.0))
+        c = tab[ra[1], rb[1]]
+        return jnp.sqrt(self.T / self.W) * \
+            jnp.sqrt(jnp.sum(jnp.square(c), axis=-1))
+
+    def distance_maxfeat(self, ra, rb):
+        tab = cell_table(gaussian_breakpoints(self.A, 1.0))
+        cs = jnp.stack([tab[ra[i], rb[i]] for i in range(3)], axis=0)
+        c = jnp.max(cs, axis=0)
+        return jnp.sqrt(self.T / self.W) * \
+            jnp.sqrt(jnp.sum(jnp.square(c), axis=-1))
+
+
+@dataclass(frozen=True)
+class SAXSD:
+    """SAX_SD (Zan & Yamana 2016): mean symbol + raw stddev per segment.
+
+    Distance adds the segment-stddev gap to MINDIST; LB per the original.
+    Representation grows by 32 bits/segment (Table 1).
+    """
+
+    T: int
+    W: int
+    A: int
+
+    @property
+    def bits(self) -> float:
+        return self.W * (math.log2(self.A) + 32)
+
+    def encode(self, x):
+        T, W = self.T, self.W
+        xs = x.reshape(*x.shape[:-1], W, T // W)
+        bp = gaussian_breakpoints(self.A, 1.0)
+        return discretize(jnp.mean(xs, -1), bp), jnp.std(xs, -1)
+
+    def distance(self, ra, rb):
+        tab = cell_table(gaussian_breakpoints(self.A, 1.0))
+        c = tab[ra[0], rb[0]]
+        sd_gap = jnp.abs(ra[1] - rb[1])
+        return jnp.sqrt(self.T / self.W) * \
+            jnp.sqrt(jnp.sum(jnp.square(c) + jnp.square(sd_gap), axis=-1))
+
+
+@dataclass(frozen=True)
+class TDSAX:
+    """TD-SAX (Sun et al. 2014): mean symbol + raw (start, end) trend values.
+
+    Distance: MINDIST + weighted trend distance on the real-valued
+    start/end deltas (not a LUT).  LB per the original's Theorem 1 with
+    weight <= 1; we use the conservative w=0 trend weight in exact
+    matching (pure MINDIST) and w=0.5 for accuracy experiments.
+    """
+
+    T: int
+    W: int
+    A: int
+    trend_weight: float = 0.5
+
+    @property
+    def bits(self) -> float:
+        return self.W * (math.log2(self.A) + 32) + 32
+
+    def encode(self, x):
+        T, W = self.T, self.W
+        xs = x.reshape(*x.shape[:-1], W, T // W)
+        bp = gaussian_breakpoints(self.A, 1.0)
+        return (discretize(jnp.mean(xs, -1), bp),
+                xs[..., 0], xs[..., -1])
+
+    def distance(self, ra, rb):
+        tab = cell_table(gaussian_breakpoints(self.A, 1.0))
+        c = tab[ra[0], rb[0]]
+        mind = (self.T / self.W) * jnp.sum(jnp.square(c), axis=-1)
+        tr = jnp.sum(jnp.square(ra[1] - rb[1]) + jnp.square(ra[2] - rb[2]),
+                     axis=-1)
+        return jnp.sqrt(mind + self.trend_weight * tr)

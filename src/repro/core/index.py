@@ -1,0 +1,213 @@
+"""sSAX-indexed search — an iSAX-style tree over season-aware words
+(beyond-paper; the paper's §6 notes its representations "have the
+potential to efficiently index ... much longer time series").
+
+Structure: binary iSAX splitting.  Every indexed series is a word of
+L + W dimensions (L season symbols at ``max_bits`` cardinality, W residual
+symbols likewise).  A node holds a per-dimension bit count; splitting
+promotes one dimension by one bit (round-robin over the highest-variance
+dims).  Leaves hold series ids.
+
+Pruning bound: season extraction leaves residuals with zero mean per
+phase, so season and residual components are orthogonal and
+
+    d_ED(x, q)^2  >=  (T/L) * sum_l gap(sigma_q_l, node_l)^2
+                    + (T/W) * sum_w gap(resbar_q_w, node_w)^2
+
+where gap(f, node-dim) is the distance from the query's real-valued
+feature to the node's breakpoint interval at its current cardinality —
+the standard (asymmetric) iSAX MINDIST generalized to the two-component
+word.  Exact matching then walks leaves in bound order with best-so-far
+verification against the raw store (same early-stop argument as
+core/matching.py).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.matching import MatchResult, RawStore
+
+
+def ndtri_np(q):
+    """Inverse normal CDF (Acklam's rational approximation, |err|<1.2e-8)
+    — keeps this host-side module importable without jax/scipy."""
+    q = np.asarray(q, np.float64)
+    a = [-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    out = np.empty_like(q)
+    lo = q < plow
+    hi = q > phigh
+    mid = ~(lo | hi)
+    if lo.any():
+        r = np.sqrt(-2 * np.log(q[lo]))
+        out[lo] = (((((c[0] * r + c[1]) * r + c[2]) * r + c[3]) * r + c[4])
+                   * r + c[5]) / ((((d[0] * r + d[1]) * r + d[2]) * r
+                                   + d[3]) * r + 1)
+    if hi.any():
+        r = np.sqrt(-2 * np.log(1 - q[hi]))
+        out[hi] = -((((((c[0] * r + c[1]) * r + c[2]) * r + c[3]) * r
+                      + c[4]) * r + c[5]) /
+                    ((((d[0] * r + d[1]) * r + d[2]) * r + d[3]) * r + 1))
+    if mid.any():
+        r = q[mid] - 0.5
+        t = r * r
+        out[mid] = (((((a[0] * t + a[1]) * t + a[2]) * t + a[3]) * t
+                     + a[4]) * t + a[5]) * r / \
+            (((((b[0] * t + b[1]) * t + b[2]) * t + b[3]) * t + b[4]) * t + 1)
+    return out
+
+
+def _gauss_breaks(card: int, sd: float) -> np.ndarray:
+    qs = np.arange(1, card) / card
+    return sd * ndtri_np(qs)
+
+
+@dataclass
+class _Node:
+    bits: np.ndarray                  # (D,) cardinality bits per dim
+    ids: Optional[np.ndarray] = None  # leaf payload
+    children: Optional[dict] = None   # symbol-prefix tuple -> _Node
+    split_dim: int = -1
+    lo: Optional[np.ndarray] = None   # (D,) feature bounding box (tight:
+    hi: Optional[np.ndarray] = None   # computed from actual members)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.children is None
+
+
+class SSaxIndex:
+    """iSAX-style index over sSAX words.
+
+    features: (sigma (N, L), resbar (N, W)) real-valued sPAA features
+    (keep them host-side; symbols are derived per cardinality).
+    """
+
+    def __init__(self, sigma: np.ndarray, resbar: np.ndarray, *, T: int,
+                 sd_seas: float, sd_res: float, max_bits: int = 8,
+                 leaf_capacity: int = 64):
+        self.sigma = np.asarray(sigma, np.float32)
+        self.resbar = np.asarray(resbar, np.float32)
+        self.T = T
+        self.L = self.sigma.shape[1]
+        self.W = self.resbar.shape[1]
+        self.D = self.L + self.W
+        self.max_bits = max_bits
+        self.leaf_capacity = leaf_capacity
+        self.feats = np.concatenate([self.sigma, self.resbar], axis=1)
+        self.sds = np.asarray([sd_seas] * self.L + [sd_res] * self.W,
+                              np.float32)
+        self.weights = np.asarray([T / self.L] * self.L +
+                                  [T / self.W] * self.W, np.float32)
+        # precompute breakpoint tables per bit level
+        self._breaks = {b: [_gauss_breaks(1 << b, float(sd))
+                            for sd in self.sds]
+                        for b in range(1, max_bits + 1)}
+        self.n_nodes = 1
+        self.root = _Node(bits=np.zeros(self.D, np.int8),
+                          ids=np.arange(self.feats.shape[0]))
+        self._split(self.root)
+
+    # -- construction ----------------------------------------------------
+    def _symbols(self, feats: np.ndarray, dim: int, bits: int) -> np.ndarray:
+        if bits == 0:
+            return np.zeros(feats.shape[0], np.int64)
+        bp = self._breaks[bits][dim]
+        return np.searchsorted(bp, feats[:, dim], side="right")
+
+    def _split(self, node: _Node):
+        rows = self.feats[node.ids]
+        node.lo = rows.min(axis=0)
+        node.hi = rows.max(axis=0)
+        if len(node.ids) <= self.leaf_capacity:
+            return
+        if node.bits.min() >= self.max_bits:
+            return                      # cannot refine further
+        # split the refinable dim with the highest feature variance
+        var = self.feats[node.ids].var(axis=0)
+        var[node.bits >= self.max_bits] = -1.0
+        dim = int(np.argmax(var))
+        node.split_dim = dim
+        new_bits = node.bits.copy()
+        new_bits[dim] += 1
+        syms = self._symbols(self.feats[node.ids], dim, int(new_bits[dim]))
+        node.children = {}
+        for s in np.unique(syms):
+            ids = node.ids[syms == s]
+            child = _Node(bits=new_bits.copy(), ids=ids)
+            node.children[int(s)] = child
+            self.n_nodes += 1
+            self._split(child)
+        node.ids = None
+
+    # -- search ----------------------------------------------------------
+    def _bbox_lb(self, q: np.ndarray, node: _Node) -> float:
+        """Weighted distance from the query features to the node's tight
+        member bounding box — a valid d_ED lower bound by the
+        season/residual orthogonality + PAA argument (module docstring).
+        Much tighter than breakpoint-interval MINDIST because every dim
+        contributes from the first split (DS-tree-style)."""
+        gap = np.maximum(0.0, np.maximum(node.lo - q, q - node.hi))
+        return math.sqrt(float(np.sum(self.weights * gap * gap)))
+
+    def _member_lb(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Exact d_sPAA (Table 2) per member: sqrt(T/(W*L) *
+        sum_{l,w}(d_sigma_l + d_res_w)^2), expanded to avoid the LxW
+        cross product:  T/L*|ds|^2 + T/W*|dr|^2 + 2T/(WL)*sum(ds)sum(dr)."""
+        ds = self.feats[ids, :self.L] - q[None, :self.L]
+        dr = self.feats[ids, self.L:] - q[None, self.L:]
+        t = (self.T / self.L) * np.sum(ds * ds, axis=1) \
+            + (self.T / self.W) * np.sum(dr * dr, axis=1) \
+            + 2.0 * self.T / (self.W * self.L) * ds.sum(1) * dr.sum(1)
+        return np.sqrt(np.maximum(t, 0.0))
+
+    def query(self, q_sigma: np.ndarray, q_resbar: np.ndarray,
+              store: RawStore, q_raw: np.ndarray) -> MatchResult:
+        """Exact NN via best-first leaf traversal + raw verification."""
+        q = np.concatenate([q_sigma, q_resbar]).astype(np.float32)
+        N = self.feats.shape[0]
+        heap = [(0.0, 0, self.root, 0.0)]
+        counter = 1
+        best_d, best_i = math.inf, -1
+        start = store.accesses
+        while heap:
+            lb, _, node, _ = heapq.heappop(heap)
+            if lb >= best_d:
+                break                   # everything else is pruned
+            if node.is_leaf:
+                # per-member sPAA lower bound from stored features (the
+                # paper's d_sPAA, Table 2 — tighter than any symbolic or
+                # bbox bound) filters the leaf before touching raw storage
+                mlb = self._member_lb(q, node.ids)
+                order = np.argsort(mlb)
+                for j0 in order:
+                    if mlb[j0] >= best_d:
+                        break
+                    row = store.fetch(node.ids[j0:j0 + 1])
+                    d = float(np.sqrt(np.sum((row[0] - q_raw) ** 2)))
+                    if d < best_d:
+                        best_d, best_i = d, int(node.ids[j0])
+                continue
+            for child in node.children.values():
+                heapq.heappush(heap, (self._bbox_lb(q, child), counter,
+                                      child, 0.0))
+                counter += 1
+        return MatchResult(index=best_i, distance=best_d,
+                           raw_accesses=store.accesses - start,
+                           pruned_fraction=1.0 - (store.accesses - start) / N)

@@ -1,0 +1,13 @@
+"""Z-normalization — the paper's precondition (4): zero sample mean, unit
+sample variance per series."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def znormalize(x, axis: int = -1, eps: float = 1e-12):
+    """Normalize each series to mean 0 / variance 1 along ``axis``."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    sd = jnp.std(x, axis=axis, keepdims=True)
+    return (x - mu) / jnp.maximum(sd, eps)

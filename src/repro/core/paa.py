@@ -1,0 +1,19 @@
+"""Piecewise Aggregate Approximation (Eq. 5) and its distance (Eq. 9)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paa(x, n_segments: int):
+    """x: (..., T) -> segment means (..., W).  W must divide T."""
+    T = x.shape[-1]
+    W = n_segments
+    assert T % W == 0, (T, W)
+    return jnp.mean(x.reshape(*x.shape[:-1], W, T // W), axis=-1)
+
+
+def paa_distance(a, b, T: int):
+    """d_PAA (Eq. 9): sqrt(T/W) * ||a - b||_2 along the last axis."""
+    W = a.shape[-1]
+    return jnp.sqrt(T / W) * jnp.sqrt(jnp.sum(jnp.square(a - b), axis=-1))

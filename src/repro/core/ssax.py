@@ -1,0 +1,142 @@
+"""sSAX — season-aware symbolic approximation (paper §3.1).
+
+Model: x = seas + res.  The season mask sigma (Eq. 13) is the per-phase
+mean over T/L periods; residual segment means are the PAA of x - seas.
+Representation: (sigma discretized into A_seas, res-means into A_res),
+with breakpoints from N(0, sd(seas)) / N(0, sd(res)) where
+sd(res) = sqrt(1 - R^2_seas) (Eqs. 16-18).
+
+Distance (Table 2 + Eq. 20): with c_s(a, a') = lower(a) - upper(a'),
+
+    cell(s, s', r, r') = max(0, c_s(s,s') + c_s(r,r'),
+                              c_s(s',s) + c_s(r',r))
+
+(the three-case Eq. 20 collapses to this max; condition
+c_s(s,s') >= -c_s(r,r') is exactly "the sum is >= 0").  The paper's
+4WL lookups become L + W gathers plus an (L, W) broadcast-add — same
+math, TPU-shaped (DESIGN.md §3).
+
+d_sSAX = sqrt(T/(W*L)) * sqrt(sum_{l,w} cell(...)^2), requiring W*L | T.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.breakpoints import (
+    discretize, gaussian_breakpoints, lower_bounds, upper_bounds)
+from repro.core.paa import paa
+
+
+def season_mask(x, L: int):
+    """Per-phase mean (Eq. 13).  x: (..., T) -> (..., L)."""
+    T = x.shape[-1]
+    assert T % L == 0, (T, L)
+    return jnp.mean(x.reshape(*x.shape[:-1], T // L, L), axis=-2)
+
+
+def season_strength(x, L: int):
+    """R^2_seas (Eq. 16) per series: 1 - var(res)/var(x)."""
+    seas = season_mask(x, L)
+    T = x.shape[-1]
+    res = x - jnp.tile(seas, (1,) * (x.ndim - 1) + (T // L,))
+    return 1.0 - jnp.var(res, axis=-1) / jnp.maximum(jnp.var(x, axis=-1),
+                                                     1e-12)
+
+
+def remove_season(x, L: int):
+    """(residuals, mask): x minus its tiled season mask."""
+    seas = season_mask(x, L)
+    T = x.shape[-1]
+    res = x - jnp.tile(seas, (1,) * (x.ndim - 1) + (T // L,))
+    return res, seas
+
+
+def cs_pair(sym_a, sym_b, lo, hi):
+    """c_s(a, b) = lower(a) - upper(b), broadcast over symbol arrays."""
+    return lo[sym_a] - hi[sym_b]
+
+
+@dataclass(frozen=True)
+class SSAX:
+    """Season-aware SAX for fixed (T, W, L, A_seas, A_res, R^2_seas)."""
+
+    T: int
+    W: int
+    L: int
+    A_seas: int
+    A_res: int
+    r2_season: float = 0.5      # dataset-level mean season strength
+
+    def __post_init__(self):
+        assert self.T % (self.W * self.L) == 0, \
+            f"W*L={self.W * self.L} must divide T={self.T}"
+
+    @property
+    def sd_res(self) -> float:
+        import math
+        return math.sqrt(max(1.0 - self.r2_season, 1e-9))      # Eq. 17
+
+    @property
+    def sd_seas(self) -> float:
+        import math
+        return math.sqrt(max(1.0 - self.sd_res ** 2, 1e-9))    # Eq. 18
+
+    @property
+    def b_seas(self):
+        return gaussian_breakpoints(self.A_seas, self.sd_seas)
+
+    @property
+    def b_res(self):
+        return gaussian_breakpoints(self.A_res, self.sd_res)
+
+    @property
+    def bits(self) -> float:
+        import math
+        return self.L * math.log2(self.A_seas) + self.W * math.log2(self.A_res)
+
+    # -- representation -------------------------------------------------
+    def features(self, x):
+        """sPAA features (Eq. 14): (sigma (..., L), res-means (..., W))."""
+        res, seas = remove_season(x, self.L)
+        return seas, paa(res, self.W)
+
+    def encode(self, x):
+        """-> (season symbols (..., L), residual symbols (..., W))."""
+        seas, res_bar = self.features(x)
+        return (discretize(seas, self.b_seas),
+                discretize(res_bar, self.b_res))
+
+    # -- distances -------------------------------------------------------
+    def spaa_distance(self, fa, fb):
+        """d_sPAA (Table 2) between feature pairs (sigma, res_bar)."""
+        dsig = fa[0] - fb[0]                      # (..., L)
+        dres = fa[1] - fb[1]                      # (..., W)
+        comb = dsig[..., :, None] + dres[..., None, :]
+        return jnp.sqrt(self.T / (self.W * self.L)) * \
+            jnp.sqrt(jnp.sum(jnp.square(comb), axis=(-2, -1)))
+
+    def distance(self, ra, rb):
+        """d_sSAX (Table 2/Eq. 20) between encoded reps (sig_sym, res_sym)."""
+        sa, wa = ra
+        sb, wb = rb
+        lo_s, hi_s = lower_bounds(self.b_seas), upper_bounds(self.b_seas)
+        lo_r, hi_r = lower_bounds(self.b_res), upper_bounds(self.b_res)
+        cs_ab = cs_pair(sa, sb, lo_s, hi_s)       # (..., L)
+        cs_ba = cs_pair(sb, sa, lo_s, hi_s)
+        cr_ab = cs_pair(wa, wb, lo_r, hi_r)       # (..., W)
+        cr_ba = cs_pair(wb, wa, lo_r, hi_r)
+        case1 = cs_ab[..., :, None] + cr_ab[..., None, :]
+        case2 = cs_ba[..., :, None] + cr_ba[..., None, :]
+        cell = jnp.maximum(0.0, jnp.maximum(case1, case2))   # (..., L, W)
+        return jnp.sqrt(self.T / (self.W * self.L)) * \
+            jnp.sqrt(jnp.sum(jnp.square(cell), axis=(-2, -1)))
+
+    def pairwise_distance(self, rq, rx):
+        """queries (Q,L)/(Q,W) x dataset (N,L)/(N,W) -> (Q, N)."""
+        sq, wq = rq
+        sx, wx = rx
+        return self.distance((sq[:, None], wq[:, None]),
+                             (sx[None, :], wx[None, :]))

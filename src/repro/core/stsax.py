@@ -1,0 +1,149 @@
+"""stSAX — season- AND trend-aware symbolic approximation.
+
+This implements the paper's stated FUTURE WORK (§6: "representing
+combinations of deterministic components ... seasonal components in
+combination with a trend").  Model:
+
+    x = tr + seas + res,
+
+extracted in order: linear-regression trend first (so Eqs. 23-25 hold for
+the detrended remainder), then the per-phase season mask of the detrended
+series, then residual segment means.  Representation:
+
+    (phi_hat, sigma_hat_1..L, res_hat_1..W)
+
+with the tSAX uniform trend alphabet and the sSAX Gaussian season/residual
+alphabets; strengths compose as sd(res) = sqrt(1 - R2_tr - R2_seas').
+
+Lower-bounding distance (proof sketch — both ingredients are the paper's):
+``seas + res`` IS the least-squares residual of the trend fit, so the
+trend difference is orthogonal to it (Eq. 24 applied to the combined
+remainder, as in Appendix A.4):
+
+    d_ED^2 = sum_t (d_tr_t)^2 + sum_t (d_seas_t + d_res_t)^2
+    >= c_t(phi, phi')^2                       [A.5: min trend distance]
+     + (T/(W*L)) * sum_{l,w} cell(sig, sig', res, res')^2
+                                              [A.1/A.2: sPAA/sSAX bound]
+
+so d_stSAX^2 = c_t^2 + d_sSAX-part^2 lower-bounds d_ED^2.  Verified by
+property tests in tests/test_stsax.py.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.breakpoints import (
+    discretize, gaussian_breakpoints, lower_bounds, uniform_breakpoints,
+    upper_bounds)
+from repro.core.paa import paa
+from repro.core.ssax import cs_pair, season_mask
+from repro.core.tsax import phi_max, remove_trend, time_variance
+
+
+@dataclass(frozen=True)
+class STSAX:
+    """Combined season+trend-aware SAX for fixed
+    (T, W, L, A_tr, A_seas, A_res, strengths)."""
+
+    T: int
+    W: int
+    L: int
+    A_tr: int
+    A_seas: int
+    A_res: int
+    r2_trend: float = 0.3
+    r2_season: float = 0.3      # season strength of the detrended series
+
+    def __post_init__(self):
+        assert self.T % (self.W * self.L) == 0, \
+            f"W*L={self.W * self.L} must divide T={self.T}"
+
+    # -- alphabets -------------------------------------------------------
+    @property
+    def phi_max(self) -> float:
+        return phi_max(self.T)
+
+    @property
+    def b_tr(self):
+        return uniform_breakpoints(self.A_tr, -self.phi_max, self.phi_max)
+
+    @property
+    def sd_detrended(self) -> float:
+        return math.sqrt(max(1.0 - self.r2_trend, 1e-9))
+
+    @property
+    def sd_seas(self) -> float:
+        # season variance within the detrended remainder
+        return self.sd_detrended * math.sqrt(max(self.r2_season, 1e-9))
+
+    @property
+    def sd_res(self) -> float:
+        return self.sd_detrended * math.sqrt(max(1.0 - self.r2_season, 1e-9))
+
+    @property
+    def b_seas(self):
+        return gaussian_breakpoints(self.A_seas, self.sd_seas)
+
+    @property
+    def b_res(self):
+        return gaussian_breakpoints(self.A_res, self.sd_res)
+
+    @property
+    def bits(self) -> float:
+        return (math.log2(self.A_tr) + self.L * math.log2(self.A_seas)
+                + self.W * math.log2(self.A_res))
+
+    # -- representation ---------------------------------------------------
+    def features(self, x):
+        """-> (phi (...,), sigma (..., L), res-means (..., W))."""
+        detr, _, t2 = remove_trend(x)
+        phi = jnp.arctan(t2)
+        seas = season_mask(detr, self.L)
+        res = detr - jnp.tile(seas, (1,) * (x.ndim - 1) + (self.T // self.L,))
+        return phi, seas, paa(res, self.W)
+
+    def encode(self, x):
+        phi, seas, res_bar = self.features(x)
+        return (discretize(phi, self.b_tr),
+                discretize(seas, self.b_seas),
+                discretize(res_bar, self.b_res))
+
+    # -- distance -----------------------------------------------------------
+    def ct_table(self):
+        edges = jnp.concatenate([jnp.asarray([-self.phi_max]), self.b_tr,
+                                 jnp.asarray([self.phi_max])])
+        lo = jnp.tan(edges[:-1])
+        hi = jnp.tan(edges[1:])
+        scale = math.sqrt(self.T * time_variance(self.T))
+        d = jnp.maximum(lo[:, None] - hi[None, :], lo[None, :] - hi[:, None])
+        return scale * jnp.maximum(d, 0.0)
+
+    def distance(self, ra, rb, ct=None):
+        """d_stSAX between encoded reps (phi_sym, sig_syms, res_syms)."""
+        pa, sa, wa = ra
+        pb, sb, wb = rb
+        ct = self.ct_table() if ct is None else ct
+        trend_term = jnp.square(ct[pa, pb])
+
+        lo_s, hi_s = lower_bounds(self.b_seas), upper_bounds(self.b_seas)
+        lo_r, hi_r = lower_bounds(self.b_res), upper_bounds(self.b_res)
+        cs_ab = cs_pair(sa, sb, lo_s, hi_s)
+        cs_ba = cs_pair(sb, sa, lo_s, hi_s)
+        cr_ab = cs_pair(wa, wb, lo_r, hi_r)
+        cr_ba = cs_pair(wb, wa, lo_r, hi_r)
+        case1 = cs_ab[..., :, None] + cr_ab[..., None, :]
+        case2 = cs_ba[..., :, None] + cr_ba[..., None, :]
+        cell = jnp.maximum(0.0, jnp.maximum(case1, case2))
+        seas_res_term = (self.T / (self.W * self.L)) * \
+            jnp.sum(jnp.square(cell), axis=(-2, -1))
+        return jnp.sqrt(trend_term + seas_res_term)
+
+    def pairwise_distance(self, rq, rx):
+        pq, sq, wq = rq
+        px, sx, wx = rx
+        return self.distance((pq[:, None], sq[:, None], wq[:, None]),
+                             (px[None, :], sx[None, :], wx[None, :]))

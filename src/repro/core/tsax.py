@@ -1,0 +1,153 @@
+"""tSAX — trend-aware symbolic approximation (paper §3.2).
+
+Model: x = tr + res with tr_t = theta1 + theta2*(t-1) from least squares.
+Normalization ties theta2 = -2*theta1/(T-1) (Eq. 25), so the single angle
+phi = arctan(theta2) (Eq. 26) captures the trend, bounded by
+phi_max = arctan(sqrt(1/var(t))) (Eq. 29).  phi is discretized against a
+*uniform* alphabet on [-phi_max, phi_max]; residual means against
+N(0, sqrt(1 - R^2_tr)) (Eq. 31).
+
+Distances (Table 2):
+  d_tPAA = sqrt(sum_t (d_theta1 + d_theta2*(t-1) + d_resbar_{seg(t)})^2)
+  d_tSAX = sqrt(c_t(phi, phi')^2 + (T/W) * sum_w cell(res_w, res'_w)^2)
+
+c_t is the minimum trend-component distance between two phi cells: with
+theta2 in [tan(lo), tan(hi)] per cell and
+||tr - tr'||_2 = |d_theta2| * sqrt(T * var(t)),
+
+  c_t(a, b) = sqrt(T*var(t)) * max(0, tan(lo_a) - tan(hi_b),
+                                      tan(lo_b) - tan(hi_a)).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.breakpoints import (
+    discretize, gaussian_breakpoints, uniform_breakpoints)
+from repro.core.paa import paa
+from repro.core.sax import cell_table
+
+
+def time_variance(T: int) -> float:
+    """Population variance of (1..T) == variance of (0..T-1)."""
+    return (T * T - 1) / 12.0
+
+
+def phi_max(T: int) -> float:
+    return math.atan(math.sqrt(1.0 / time_variance(T)))
+
+
+def trend_features(x):
+    """Least-squares (theta1, theta2) per series over s = 0..T-1."""
+    T = x.shape[-1]
+    s = jnp.arange(T, dtype=x.dtype)
+    s_bar = (T - 1) / 2.0
+    den = jnp.sum(jnp.square(s - s_bar))
+    theta2 = jnp.sum(x * (s - s_bar), axis=-1) / den
+    theta1 = jnp.mean(x, axis=-1) - theta2 * s_bar
+    return theta1, theta2
+
+
+def remove_trend(x):
+    """(residuals, theta1, theta2)."""
+    T = x.shape[-1]
+    t1, t2 = trend_features(x)
+    s = jnp.arange(T, dtype=x.dtype)
+    tr = t1[..., None] + t2[..., None] * s
+    return x - tr, t1, t2
+
+
+def trend_strength(x):
+    """R^2_tr (Eq. 30) per series."""
+    res, _, _ = remove_trend(x)
+    return 1.0 - jnp.var(res, axis=-1) / jnp.maximum(jnp.var(x, axis=-1),
+                                                     1e-12)
+
+
+@dataclass(frozen=True)
+class TSAX:
+    """Trend-aware SAX for fixed (T, W, A_tr, A_res, R^2_tr)."""
+
+    T: int
+    W: int
+    A_tr: int
+    A_res: int
+    r2_trend: float = 0.5
+
+    @property
+    def sd_res(self) -> float:
+        return float(math.sqrt(max(1.0 - self.r2_trend, 1e-9)))
+
+    @property
+    def phi_max(self) -> float:
+        return phi_max(self.T)
+
+    @property
+    def b_tr(self):
+        return uniform_breakpoints(self.A_tr, -self.phi_max, self.phi_max)
+
+    @property
+    def b_res(self):
+        return gaussian_breakpoints(self.A_res, self.sd_res)
+
+    @property
+    def bits(self) -> float:
+        return math.log2(self.A_tr) + self.W * math.log2(self.A_res)
+
+    # -- representation -------------------------------------------------
+    def features(self, x):
+        """tPAA features (Eq. 27): (phi (...,), res-means (..., W))."""
+        res, _, t2 = remove_trend(x)
+        phi = jnp.arctan(t2)
+        return phi, paa(res, self.W)
+
+    def encode(self, x):
+        """-> (phi symbol (...,), residual symbols (..., W))."""
+        phi, res_bar = self.features(x)
+        return (discretize(phi, self.b_tr), discretize(res_bar, self.b_res))
+
+    # -- distances -------------------------------------------------------
+    def tpaa_distance(self, fa, fb):
+        """d_tPAA (Table 2) between feature pairs (phi, res_bar)."""
+        T, W = self.T, self.W
+        s = jnp.arange(T, dtype=jnp.float32)
+        t2a = jnp.tan(fa[0])
+        t2b = jnp.tan(fb[0])
+        dt2 = t2a - t2b
+        dt1 = -dt2 * (T - 1) / 2.0                 # Eq. 25
+        dres = (fa[1] - fb[1])                     # (..., W)
+        seg = (s // (T // W)).astype(jnp.int32)
+        comb = dt1[..., None] + dt2[..., None] * s + dres[..., seg]
+        return jnp.sqrt(jnp.sum(jnp.square(comb), axis=-1))
+
+    def ct_table(self):
+        """(A_tr, A_tr) minimum trend-distance lookup table."""
+        edges = jnp.concatenate([jnp.asarray([-self.phi_max]), self.b_tr,
+                                 jnp.asarray([self.phi_max])])
+        lo = jnp.tan(edges[:-1])                   # theta2 cell edges
+        hi = jnp.tan(edges[1:])
+        scale = math.sqrt(self.T * time_variance(self.T))
+        d = jnp.maximum(lo[:, None] - hi[None, :], lo[None, :] - hi[:, None])
+        return scale * jnp.maximum(d, 0.0)
+
+    def distance(self, ra, rb, ct=None, cell=None):
+        """d_tSAX (Table 2) between encoded reps (phi_sym, res_syms)."""
+        pa, wa = ra
+        pb, wb = rb
+        ct = self.ct_table() if ct is None else ct
+        cell = cell_table(self.b_res) if cell is None else cell
+        trend_term = jnp.square(ct[pa, pb])
+        res_term = (self.T / self.W) * \
+            jnp.sum(jnp.square(cell[wa, wb]), axis=-1)
+        return jnp.sqrt(trend_term + res_term)
+
+    def pairwise_distance(self, rq, rx):
+        """queries x dataset -> (Q, N)."""
+        pq, wq = rq
+        px, wx = rx
+        return self.distance((pq[:, None], wq[:, None, :]),
+                             (px[None, :], wx[None, :, :]))

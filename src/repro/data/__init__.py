@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    random_walk, season_dataset, trend_dataset)
+from repro.data.datasets import (  # noqa: F401
+    metering_like, economy_like)

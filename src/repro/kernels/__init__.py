@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the matching engine's compute hot spots.
+
+The paper's hot loop is the representation-distance sweep over the
+candidate shard (its C implementation does W scalar LUT lookups per
+candidate).  TPU adaptation (DESIGN.md §3): the per-query lookup tables
+live in VMEM and the gather becomes a one-hot contraction on the MXU, so
+the sweep is bounded by candidate-symbol HBM bandwidth (W bytes/candidate)
+instead of scalar lookup latency.
+
+Kernels (each <name>.py + oracle in ref.py, jit'd dispatch in ops.py):
+  * sax_dist   — batched SAX MINDIST^2 sweep
+  * ssax_dist  — batched sSAX 4-symbol cell distance sweep (Eq. 20)
+  * paa        — segment-mean front-end (PAA, Eq. 5)
+  * euclid     — batched Euclidean verification of surviving candidates
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    sax_dist, ssax_dist, paa_segments, euclid_batch)

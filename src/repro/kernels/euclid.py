@@ -1,0 +1,52 @@
+"""Pallas kernel: batched Euclidean verification.
+
+d2[n] = sum_t (x[n, t] - q[t])^2 for the candidate batch that survived
+pruning.  Grid tiles (candidates x time); partial sums accumulate into the
+output block across the time-tile axis (the output BlockSpec revisits the
+same block for every j, so out_ref acts as the accumulator).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_N = 128
+BLK_T = 2048
+
+
+def _kernel(x_ref, q_ref, out_ref):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)        # (BLK_N, BLK_T)
+    q = q_ref[...].astype(jnp.float32)        # (1, BLK_T)
+    d = x - q
+    part = jnp.sum(d * d, axis=-1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+def euclid_pallas(x, q, *, interpret: bool = False):
+    """x: (N, T); q: (T,) -> (N,) f32 squared distances."""
+    N, T = x.shape
+    blk_n = min(BLK_N, N)
+    blk_t = min(BLK_T, T)
+    assert N % blk_n == 0 and T % blk_t == 0, (N, T)
+    grid = (N // blk_n, T // blk_t)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, blk_t), lambda i, j: (i, j)),
+            pl.BlockSpec((1, blk_t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(x, q.reshape(1, T))

@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute
+in ``interpret=True`` mode, which runs the kernel body step-by-step for
+correctness — the tests sweep shapes/dtypes against the ref.py oracles in
+exactly that mode.  Padding to block multiples happens here so callers
+never see block constraints.
+
+Helpers also build the query-conditioned tables the kernels consume
+(``make_sax_query_table`` / ``make_ssax_query_tables``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.breakpoints import lower_bounds, upper_bounds
+from repro.core.sax import cell_table
+from repro.kernels import ref
+from repro.kernels.euclid import euclid_pallas
+from repro.kernels.paa import paa_pallas
+from repro.kernels.sax_dist import sax_dist_pallas
+from repro.kernels.ssax_dist import ssax_dist_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x, mult: int):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, n
+
+
+# -- query-table builders ---------------------------------------------------
+
+def make_sax_query_table(query_syms, breakpoints):
+    """(W,) query symbols -> (W, A) table of squared cell distances."""
+    tab = cell_table(breakpoints)                   # (A, A)
+    return jnp.square(tab[query_syms])              # (W, A)
+
+
+def make_ssax_query_tables(q_seas, q_res, b_seas, b_res):
+    """Query-conditioned (t1, t2, u1, u2) term tables for the sSAX kernel."""
+    lo_s, hi_s = lower_bounds(b_seas), upper_bounds(b_seas)
+    lo_r, hi_r = lower_bounds(b_res), upper_bounds(b_res)
+    t1 = lo_s[q_seas][:, None] - hi_s[None, :]      # (L, A_seas)
+    t2 = lo_s[None, :] - hi_s[q_seas][:, None]
+    u1 = lo_r[q_res][:, None] - hi_r[None, :]       # (W, A_res)
+    u2 = lo_r[None, :] - hi_r[q_res][:, None]
+    # -inf - -inf would poison the kernel max; clamp to a huge negative
+    big = jnp.float32(-3.4e38 / 4)
+    fix = lambda t: jnp.nan_to_num(t, nan=0.0, neginf=big, posinf=-big)
+    return tuple(fix(t.astype(jnp.float32)) for t in (t1, t2, u1, u2))
+
+
+# -- dispatchers --------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def sax_dist(symbols, query_table, use_kernel: bool = True):
+    """Squared SAX MINDIST sweep: (N, W) x (W, A) -> (N,)."""
+    if not use_kernel:
+        return ref.sax_dist_ref(symbols, query_table)
+    x, n = _pad_rows(symbols.astype(jnp.int32), 256)
+    out = sax_dist_pallas(x, query_table.astype(jnp.float32),
+                          interpret=not _on_tpu())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def ssax_dist(seas_syms, res_syms, t1, t2, u1, u2, use_kernel: bool = True):
+    """Squared sSAX sweep: (N, L)/(N, W) + 4 tables -> (N,)."""
+    if not use_kernel:
+        return ref.ssax_dist_ref(seas_syms, res_syms, t1, t2, u1, u2)
+    s, n = _pad_rows(seas_syms.astype(jnp.int32), 128)
+    r, _ = _pad_rows(res_syms.astype(jnp.int32), 128)
+    out = ssax_dist_pallas(s, r, *(t.astype(jnp.float32)
+                                   for t in (t1, t2, u1, u2)),
+                           interpret=not _on_tpu())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "use_kernel"))
+def paa_segments(x, n_segments: int, use_kernel: bool = True):
+    """(N, T) -> (N, W) segment means."""
+    if not use_kernel:
+        return ref.paa_ref(x, n_segments)
+    xp, n = _pad_rows(x, 128)
+    return paa_pallas(xp, n_segments, interpret=not _on_tpu())[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def euclid_batch(x, q, use_kernel: bool = True):
+    """(N, T) vs (T,) -> (N,) squared Euclidean distances."""
+    if not use_kernel:
+        return ref.euclid_ref(x, q)
+    T = x.shape[1]
+    xp, n = _pad_rows(x, 128)
+    blk_t = 2048
+    padt = (-T) % min(blk_t, T) if T >= blk_t else 0
+    if T < blk_t:
+        padt = 0
+    if padt:
+        xp = jnp.pad(xp, ((0, 0), (0, padt)))
+        q = jnp.pad(q, (0, padt))
+    return euclid_pallas(xp, q, interpret=not _on_tpu())[:n]

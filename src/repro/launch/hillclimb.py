@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Runs named variants of the three chosen cells, re-lowers, re-derives the
+roofline terms, and appends (variant, hypothesis, terms) records to
+results/hillclimb.json.  The markdown §Perf log is generated from that
+file by benchmarks/roofline.py helpers.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell gemma3-decode
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+from repro.launch.dryrun import dryrun_cell  # noqa: E402
+
+# variant -> (kwargs for dryrun_cell, hypothesis text)
+CELLS = {
+    # -------- worst roofline fraction: gemma3-12b decode_32k ----------
+    "gemma3-decode": {
+        "arch": "gemma3-12b", "shape": "decode_32k",
+        "variants": [
+            ("baseline", {}, "naive sharding: FSDP params + head-dim-sharded "
+             "cache; HLO shows a full f32 cache all-gather (4.3 GB) because "
+             "SPMD cannot reshard hd->grouped-heads (involuntary remat)"),
+            ("seq_sharded_cache", {
+                "rules_overrides": {"cache_seq": ("model",), "hd": (),
+                                    "kvheads": ()}},
+             "shard the KV cache SEQUENCE over the model axis "
+             "(flash-decoding): QK^T becomes t-local, softmax needs only "
+             "tiny cross-chip max/sum, AV partial-sums all-reduce is "
+             "(B,K,G,Dh) — predict cache all-gather disappears, "
+             "collective_s drops ~100x"),
+            ("tp_only_params", {
+                "rules_overrides": {"cache_seq": ("model",), "hd": (),
+                                    "kvheads": (), "d": ()}},
+             "serving never re-reads optimizer state: drop FSDP on params "
+             "(replicate over data, keep TP) — predict the per-step weight "
+             "all-gathers (252+177 MB f32) disappear"),
+            ("bf16_weights", {
+                "rules_overrides": {"cache_seq": ("model",), "hd": (),
+                                    "kvheads": (), "d": ()},
+                "serve_params_dtype": "bfloat16"},
+             "serve from bf16 weights: any residual weight movement and "
+             "all HBM weight streaming halves — predict memory_s ~2x down"),
+        ],
+    },
+    # -------- most collective-bound: olmoe-1b-7b prefill_32k ----------
+    "olmoe-prefill": {
+        "arch": "olmoe-1b-7b", "shape": "prefill_32k",
+        "variants": [
+            ("baseline", {}, "64-expert EP dispatch + FSDP gathers at 32k "
+             "tokens: collective_s 0.64s vs compute 0.14s"),
+            ("tp_only_params", {"rules_overrides": {"d": ()}},
+             "prefill re-reads weights once per step; FSDP all-gathers of "
+             "f32 masters are pure overhead vs TP-resident bf16 — predict "
+             "all-gather bytes drop by ~params_f32 volume"),
+            ("bf16_weights", {"rules_overrides": {"d": ()},
+                              "serve_params_dtype": "bfloat16"},
+             "bf16 weight streams halve residual gather/HBM volume"),
+            ("causal_skip", {"rules_overrides": {"d": ()},
+                             "serve_params_dtype": "bfloat16",
+                             "rc_overrides": {"causal_skip": True,
+                                              "q_chunk": 2048}},
+             "static causal block skipping halves attention-core FLOPs at "
+             "32k (compute term ~2x down; collective unchanged)"),
+            ("grouped_dispatch", {
+                "rules_overrides": {"d": (), "moe_groups": 16},
+                "serve_params_dtype": "bfloat16",
+                "rc_overrides": {"causal_skip": True, "q_chunk": 2048}},
+             "REFUTED-baseline follow-up: the 32GB was MoE dispatch, not "
+             "weight gathers. Group-local dispatch (tokens grouped by data "
+             "shard, cumsum within group, buffers (G@data,E@model)) lets "
+             "every model rank build its expert slice locally — predict "
+             "dispatch collectives drop to the (G,Tg,d) bf16 combine "
+             "all-reduce, ~10-50x down"),
+        ],
+    },
+    # -------- representative training cell: smollm-135m train_4k ------
+    "smollm-train": {
+        "arch": "smollm-135m", "shape": "train_4k",
+        "variants": [
+            ("baseline", {}, "full remat + full-S flash: compute term is "
+             "4x(2 tokens P) + unskipped S^2 core; frac 0.37"),
+            ("causal_skip", {"rc_overrides": {"causal_skip": True}},
+             "causal block skipping: attention core ~halves; for a 135M "
+             "model at 4k the core is a large share — predict compute_s "
+             "down 20-30%"),
+            ("dots_remat", {"rc_overrides": {"causal_skip": True,
+                                             "remat_policy": "dots"}},
+             "save matmul outputs in remat (dots_with_no_batch_dims): "
+             "recompute factor 4x -> ~3.2x fwd — predict compute_s down "
+             "another ~20% at the cost of saved-dot memory"),
+            ("bigger_microbatch", {"rc_overrides": {"causal_skip": True,
+                                                    "remat_policy": "dots",
+                                                    "microbatch": 2}},
+             "fewer accumulation steps amortize optimizer + collective "
+             "launches; activation memory grows 2x — predict small "
+             "compute win, memory_s up but far from the roofline term"),
+        ],
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["all"] + list(CELLS))
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    cells = list(CELLS) if args.cell == "all" else [args.cell]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = []
+    if os.path.exists(args.out):
+        records = json.load(open(args.out))
+    done = {(r["cell"], r["variant"]) for r in records}
+
+    for cell in cells:
+        spec = CELLS[cell]
+        for name, kwargs, hypothesis in spec["variants"]:
+            if (cell, name) in done:
+                continue
+            rec = dryrun_cell(spec["arch"], spec["shape"], multi_pod=False,
+                              variant=name, **kwargs)
+            rec["cell"] = cell
+            rec["hypothesis"] = hypothesis
+            records.append(rec)
+            json.dump(records, open(args.out, "w"), indent=1)
+            colls = rec.get("collectives", {})
+            tot = sum(v for k, v in colls.items() if k != "count")
+            print(f"[{cell}/{name}] status={rec['status']} "
+                  f"coll={tot/1e6:.1f}MB compile={rec.get('compile_s')}s",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

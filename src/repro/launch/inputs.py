@@ -1,0 +1,75 @@
+"""Abstract inputs (ShapeDtypeStruct) + shardings for every
+(architecture x input-shape) cell — the dry-run's allocation-free stand-ins.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.transformer import init_cache, cache_logical_dims
+from repro.sharding.specs import ShardingRules
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_logical_dims(cfg: ModelConfig, with_labels: bool = True):
+    dims = {"tokens": ("batch", "seq_tok")}
+    if with_labels:
+        dims["labels"] = ("batch", "seq_tok")
+    if cfg.prefix_len:
+        dims["prefix_embed"] = ("batch", "prefix", "vec")
+    if cfg.is_enc_dec:
+        dims["encoder_frames"] = ("batch", "frames", "vec")
+    return dims
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, rules=None,
+                      with_labels: bool = True):
+    """(abstract batch, pspec tree)."""
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - cfg.prefix_len
+    batch = {"tokens": SDS((B, s_text), jnp.int32)}
+    if with_labels:
+        batch["labels"] = SDS((B, s_text), jnp.int32)
+    if cfg.prefix_len:
+        batch["prefix_embed"] = SDS((B, cfg.prefix_len, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.is_enc_dec:
+        batch["encoder_frames"] = SDS((B, cfg.encoder_seq, cfg.d_model),
+                                      jnp.bfloat16)
+    if rules is None:
+        return batch, None
+    dims = batch_logical_dims(cfg, with_labels)
+    ps = {k: rules.pspec(dims[k], batch[k].shape) for k in batch}
+    return batch, ps
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, rules=None):
+    """(abstract (cache, token), pspec trees) for one decode step.
+
+    The cache holds ``seq_len - 1`` tokens (pos = seq_len - 1); the step
+    appends the one new token — "decode one token against a seq_len cache".
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cache = init_cache(cfg, B, S, abstract=True)
+    cache = dict(cache, pos=SDS((), jnp.int32))
+    token = SDS((B, 1), jnp.int32)
+    if rules is None:
+        return (cache, token), None
+    dims = cache_logical_dims(cfg)
+    cache_ps = jax.tree.map(
+        lambda dm, leaf: rules.pspec(dm, leaf.shape), dims, cache,
+        is_leaf=lambda x: isinstance(x, tuple) and (
+            x == () or all(isinstance(e, str) for e in x)))
+    token_ps = rules.pspec(("batch", "seq_tok"), (B, 1))
+    return (cache, token), (cache_ps, token_ps)
+
+
+def to_named(rules: ShardingRules, ps_tree):
+    from jax.sharding import PartitionSpec
+    return jax.tree.map(
+        lambda ps: NamedSharding(rules.mesh, ps), ps_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -1,0 +1,64 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch qwen3-0.6b
+--requests 16``.
+
+Reduced-scale on this container; the identical engine + decode_step is
+what the dry-run lowers for the production mesh serve cells (and the
+§Perf OPTIMIZED_SERVE sharding is the deployable configuration).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models.transformer import RunConfig
+from repro.serving.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = dataclasses.replace(
+        reduced(get_config(args.arch), d_model=args.d_model,
+                n_heads=4, head_dim=args.d_model // 4,
+                d_ff=3 * args.d_model),
+        compute_dtype="float32")
+    rc = RunConfig(q_chunk=32, kv_chunk=32, loss_chunk=32)
+    model = build_model(cfg, rc=rc)
+    params = model.init(jax.random.PRNGKey(0))
+    tot, _ = cfg.param_counts()
+    print(f"[serve] {cfg.name}: {tot/1e6:.1f}M params, "
+          f"{args.slots} slots, max_len {args.max_len}")
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab_size,
+                        int(rng.integers(4, 24))).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    eng = ServeEngine(model, params, n_slots=args.slots,
+                      max_len=args.max_len)
+    t0 = time.perf_counter()
+    done = eng.run(list(reqs))
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {len(done)} requests, {n_tok} tokens, {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s CPU)")
+
+
+if __name__ == "__main__":
+    main()

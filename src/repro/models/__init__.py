@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    build_model, Model, init_params, abstract_params, param_pspecs,
+)

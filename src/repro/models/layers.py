@@ -1,0 +1,357 @@
+"""Core transformer layers: norms, positions, attention (flash + decode),
+SwiGLU — pure functions over param pytrees.
+
+Attention supports GQA (grouped einsums, no kv replication), optional
+qk-norm, sliding windows, prefix-LM masking, cross-attention and three
+execution modes:
+
+* ``flash_attention`` — chunked online-softmax attention used for train and
+  prefill; memory is bounded by (q_chunk x kv_chunk) score blocks so 32k
+  prefill never materializes an S^2 score tensor.
+* ``decode_attention`` — single-query attention against a KV cache (dense
+  over the cache; per-step cost is O(S·d)).
+* ring-buffer caches for sliding-window layers: the cache holds only
+  ``window`` slots, which is what makes gemma3-style local layers O(1)
+  memory at 500k context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(F32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, head_dim: int, base: float):
+    """cos/sin tables for rotary embedding. positions: (...,) int."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -math.log(base) * jnp.arange(half, dtype=F32) / half)
+    angles = positions.astype(F32)[..., None] * freqs   # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, ..., Dh); cos/sin: (S, Dh/2) from ``rope_tables``."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    shape = (1, cos.shape[0]) + (1,) * (x.ndim - 3) + (half,)
+    cos = cos.reshape(shape)
+    sin = sin.reshape(shape)
+    x1f, x2f = x1.astype(F32), x2.astype(F32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    causal: bool = True
+    window: Optional[int] = None
+    prefix_len: int = 0               # bidirectional over [0, prefix_len)
+
+    def allowed(self, q_pos, k_pos):
+        """Boolean mask (broadcast over q_pos x k_pos grids)."""
+        q = q_pos[..., :, None]
+        k = k_pos[..., None, :]
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+        if self.causal:
+            ok = k <= q
+            if self.prefix_len:
+                ok = ok | (k < self.prefix_len)
+        if self.window is not None:
+            ok = ok & (q - k < self.window)
+        return ok
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, mask: MaskSpec, *, q_positions=None,
+                    kv_positions=None, q_chunk: int = 512,
+                    kv_chunk: int = 1024, causal_skip: bool = False):
+    """Chunked online-softmax attention.
+
+    q: (B, S, Hkv, G, Dh); k, v: (B, T, Hkv, Dh).  Returns (B, S, Hkv, G, Dh).
+
+    ``causal_skip`` unrolls the q-chunk loop in Python and statically
+    bounds each chunk's kv range to the causally-visible (and, for
+    windowed layers, window-reachable) blocks — ~2x fewer attention-core
+    FLOPs on causal stacks, at the cost of nq distinct inner loops in the
+    HLO (perf-iteration lever, EXPERIMENTS.md §Perf).
+    """
+    B, S, K, G, Dh = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+    if q_positions is None:
+        q_positions = jnp.arange(S)
+    if kv_positions is None:
+        kv_positions = jnp.arange(T)
+    scale = 1.0 / math.sqrt(Dh)
+
+    qc = q.reshape(B, nq, q_chunk, K, G, Dh)
+    qpos = q_positions.reshape(nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, K, Dh)
+    vc = v.reshape(B, nk, kv_chunk, K, Dh)
+    kpos = kv_positions.reshape(nk, kv_chunk)
+
+    def process_chunk(qi, qp, kcs, vcs, kps):
+        """Online-softmax over the given kv blocks (nk', B, kc, K, Dh)."""
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, vi, kp = kv               # (B, kc, K, Dh), ..., (kc,)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ki,
+                           preferred_element_type=F32) * scale
+            ok = mask.allowed(qp, kp)     # (qc, kc)
+            s = jnp.where(ok[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(qi.dtype), vi,
+                            preferred_element_type=F32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), -jnp.inf, F32)
+        l0 = jnp.zeros((B, K, G, q_chunk), F32)
+        a0 = jnp.zeros((B, K, G, q_chunk, Dh), F32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kcs, vcs, kps))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)      # (B, qc, K, G, Dh)
+
+    kT = kc.transpose(1, 0, 2, 3, 4)
+    vT = vc.transpose(1, 0, 2, 3, 4)
+
+    if causal_skip and mask.causal:
+        outs = []
+        for i in range(nq):
+            # visible kv block range for q positions [i*qc, (i+1)*qc)
+            hi = -(-((i + 1) * q_chunk) // kv_chunk)          # ceil
+            lo = 0
+            if mask.window is not None and not mask.prefix_len:
+                lo = max(0, (i * q_chunk - mask.window + 1) // kv_chunk)
+            outs.append(process_chunk(qc[:, i], qpos[i],
+                                      kT[lo:hi], vT[lo:hi], kpos[lo:hi]))
+        out = jnp.stack(outs, axis=0)
+    else:
+        out = lax.map(lambda a: process_chunk(a[0], a[1], kT, vT, kpos),
+                      (qc.transpose(1, 0, 2, 3, 4, 5), qpos))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_mask):
+    """Single-position attention against a cache.
+
+    q: (B, 1, K, G, Dh); caches: (B, T, K, Dh); kv_mask: (B, T) bool.
+    """
+    B, _, K, G, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k_cache,
+                   preferred_element_type=F32) * scale
+    s = jnp.where(kv_mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + core) and its cache
+# ---------------------------------------------------------------------------
+
+def attention_layer(p, x, cfg, spec, rules, *, positions, kv_x=None,
+                    cache=None, pos=None, q_chunk=512, kv_chunk=1024,
+                    collect_kv=False, causal=True, is_cross=False,
+                    pad_to=0, causal_skip=False):
+    """Full attention layer.  Returns (out, cache_out).
+
+    Modes (x: (B, S, d)):
+      * train / encoder : cache=None, collect_kv=False -> (out, None)
+      * prefill         : cache=None, collect_kv=True  -> (out, {"k","v"})
+        (ring-layout tail for windowed layers, ready for decode)
+      * decode (S == 1) : cache={"k","v"}, pos = scalar absolute position.
+        Self-attention appends at pos; with ``is_cross`` the cache holds
+        precomputed encoder k/v and is read untouched.
+    kv_x: encoder states for cross-attention (train/prefill).
+    """
+    B, S, d = x.shape
+    K, G, Dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, K, G, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+
+    if kv_x is not None:                       # cross-attn with encoder states
+        k = (kv_x @ p["wk"].astype(dt)).reshape(B, -1, K, Dh)
+        v = (kv_x @ p["wv"].astype(dt)).reshape(B, -1, K, Dh)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if S == 1 and cache is not None:       # (unused path; decode uses cache)
+            kv_mask = jnp.ones((B, k.shape[1]), bool)
+            out = decode_attention(q, k, v, kv_mask)
+        else:
+            out = flash_attention(q, k, v, MaskSpec(causal=False),
+                                  q_chunk=q_chunk,
+                                  kv_chunk=pick_divisor(k.shape[1], kv_chunk))
+        cache_out = {"k": k, "v": v} if collect_kv else None
+    elif is_cross:                             # cross-attn decode from cache
+        assert cache is not None
+        kv_mask = jnp.ones((B, cache["k"].shape[1]), bool)
+        out = decode_attention(q, cache["k"].astype(dt),
+                               cache["v"].astype(dt), kv_mask)
+        cache_out = cache
+    else:                                      # self-attention
+        k = (x @ p["wk"].astype(dt)).reshape(B, S, K, Dh)
+        v = (x @ p["wv"].astype(dt)).reshape(B, S, K, Dh)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if cfg.use_rope:
+            cos, sin = rope_tables(positions, Dh, cfg.rope_base)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if cache is not None:                  # decode
+            cache_out, k_all, v_all, kv_mask = _cache_update(
+                cache, k, v, spec.window, pos)
+            out = decode_attention(q, k_all, v_all, kv_mask)
+        else:
+            mask = MaskSpec(
+                causal=causal, window=spec.window,
+                prefix_len=cfg.prefix_len if cfg.prefix_lm else 0)
+            out = flash_attention(q, k, v, mask, q_chunk=q_chunk,
+                                  kv_chunk=pick_divisor(S, kv_chunk),
+                                  causal_skip=causal_skip)
+            cache_out = None
+            if collect_kv:
+                cache_out = prefill_attn_cache(spec, k, v, S, pad_to=pad_to)
+
+    out = out.reshape(B, S, K * G * Dh)
+    out = constrain(out, rules, ("batch", "seq_act", "qdim"))
+    out = out @ p["wo"].astype(dt)
+    return out, cache_out
+
+
+def pick_divisor(n: int, target: int) -> int:
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+def init_attn_cache(cfg, spec, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache arrays for one self-attention layer (ring buffer if windowed)."""
+    slots = max_len if spec.window is None else min(spec.window, max_len)
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, slots, K, Dh), dtype),
+        "v": jnp.zeros((batch, slots, K, Dh), dtype),
+    }
+
+
+def _cache_update(cache, k_new, v_new, window, pos):
+    """Insert one step at absolute position ``pos`` into a (ring) cache."""
+    slots = cache["k"].shape[1]
+    slot = pos % slots if window is not None else pos
+    k = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                 (0, slot, 0, 0))
+    v = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                 (0, slot, 0, 0))
+    idx = jnp.arange(slots)
+    if window is None:
+        valid = idx <= pos
+    else:
+        valid = (idx <= pos) | (pos >= slots)    # ring full => all valid
+    B = k.shape[0]
+    kv_mask = jnp.broadcast_to(valid[None, :], (B, slots))
+    return {"k": k, "v": v}, k, v, kv_mask
+
+
+def prefill_attn_cache(spec, k, v, seq_len: int, dtype=None,
+                       pad_to: int = 0):
+    """Build a decode-ready cache from prefill k/v: (B, S, K, Dh).
+
+    For windowed layers only the last ``window`` positions are kept, rolled
+    so that position p sits at slot p % window (ring-consistent with
+    ``_cache_update``).  ``pad_to`` reserves decode headroom: global caches
+    are zero-padded to ``pad_to`` slots, windowed caches to the window (a
+    ring never needs more).  dtype defaults to the compute dtype of k/v.
+    """
+    dtype = dtype or k.dtype
+    if spec.window is not None and seq_len > spec.window:
+        w = spec.window
+        start = seq_len - w
+        tail_k = lax.dynamic_slice_in_dim(k, start, w, axis=1)
+        tail_v = lax.dynamic_slice_in_dim(v, start, w, axis=1)
+        roll = start % w
+        tail_k = jnp.roll(tail_k, roll, axis=1)
+        tail_v = jnp.roll(tail_v, roll, axis=1)
+        return {"k": tail_k.astype(dtype), "v": tail_v.astype(dtype)}
+    slots = seq_len
+    if spec.window is not None:
+        slots = min(spec.window, max(pad_to, seq_len))
+    elif pad_to:
+        slots = max(pad_to, seq_len)
+    if slots > seq_len:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, slots - seq_len)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(p, x, rules):
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    h = constrain(h, rules, ("batch", "seq_act", "ff"))
+    return h @ p["w_down"].astype(dt)

@@ -1,0 +1,126 @@
+"""Mamba (selective SSM) block — Jamba-style, pure JAX.
+
+Training/prefill runs a chunked associative scan: the sequence is cut into
+``chunk``-sized pieces; an outer ``lax.scan`` carries the (B, d_inner, N)
+state across chunks (saving only chunk-boundary states for the backward
+pass via remat), and within a chunk the recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+
+is evaluated with ``lax.associative_scan`` (parallel on TPU).  The
+(chunk, d_inner, N) discretized tensors exist only transiently per chunk —
+this is the TPU-shaped replacement for the fused CUDA kernel: VMEM-sized
+working sets via chunking instead of warp-level fusion.
+
+Decode is a single recurrence step on carried (conv window, ssm state).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+def _ssm_scan_chunk(h0, dA, dBx):
+    """Associative scan within one chunk.
+
+    h0: (B, D, N); dA, dBx: (B, c, D, N).  Returns (h_all (B,c,D,N), h_last).
+    """
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    aA, aB = lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = aA * h0[:, None] + aB
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(p, x, cfg, rules, *, state=None, chunk: int = 256,
+                collect_state: bool = False):
+    """x: (B, S, d) -> (B, S, d).
+
+    state: None for train/prefill-from-scratch, else dict(conv, ssm) for
+    decode (S == 1).  Returns (y, new_state); new_state is None in train
+    unless ``collect_state`` (prefill) is set.
+    """
+    B, S, d = x.shape
+    D, N, R = cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+    KC = cfg.mamba_d_conv
+    dt_ = x.dtype
+
+    xz = x @ p["in_proj"].astype(dt_)                 # (B, S, 2D)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, rules, ("batch", "seq_act", "d_inner"))
+
+    # -- causal depthwise conv ----------------------------------------
+    w = p["conv_w"].astype(dt_)                       # (D, KC)
+    if state is None:
+        pad = jnp.zeros((B, KC - 1, D), dt_)
+        xp = jnp.concatenate([pad, x_in], axis=1)     # (B, S+KC-1, D)
+        new_conv = None
+    else:
+        xp = jnp.concatenate([state["conv"].astype(dt_), x_in], axis=1)
+        new_conv = xp[:, 1:]                          # keep last KC-1
+    x_c = sum(xp[:, i:i + S] * w[None, None, :, i] for i in range(KC))
+    x_c = x_c + p["conv_b"].astype(dt_)
+    x_c = jax.nn.silu(x_c.astype(F32)).astype(dt_)
+
+    # -- input-dependent dt, B, C --------------------------------------
+    dbc = x_c @ p["x_proj"].astype(dt_)               # (B, S, R + 2N)
+    dt_r = dbc[..., :R]
+    Bm = dbc[..., R:R + N].astype(F32)                # (B, S, N)
+    Cm = dbc[..., R + N:].astype(F32)
+    dt_full = dt_r @ p["dt_proj"].astype(dt_) + p["dt_bias"].astype(dt_)
+    delta = jax.nn.softplus(dt_full.astype(F32))      # (B, S, D)
+    A = -jnp.exp(p["A_log"].astype(F32))              # (D, N)
+
+    dA = jnp.exp(delta[..., None] * A[None, None])            # (B, S, D, N)
+    dBx = (delta * x_c.astype(F32))[..., None] * Bm[:, :, None, :]
+
+    if state is not None:                              # decode: one step
+        h = dA[:, 0] * state["ssm"] + dBx[:, 0]        # (B, D, N)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]    # (B, 1, D)
+        new_state = {"conv": new_conv, "ssm": h}
+    else:
+        c = min(chunk, S)
+        assert S % c == 0
+        nch = S // c
+        dA_c = dA.reshape(B, nch, c, D, N).transpose(1, 0, 2, 3, 4)
+        dBx_c = dBx.reshape(B, nch, c, D, N).transpose(1, 0, 2, 3, 4)
+        Cm_c = Cm.reshape(B, nch, c, N).transpose(1, 0, 2, 3)
+
+        def chunk_step(h, inputs):
+            da, dbx, cm = inputs
+            h_all, h_last = _ssm_scan_chunk(h, da, dbx)
+            y = jnp.einsum("bcdn,bcn->bcd", h_all, cm)
+            return h_last, y
+
+        h0 = jnp.zeros((B, D, N), F32)
+        h_last, y = lax.scan(jax.checkpoint(chunk_step), h0,
+                             (dA_c, dBx_c, Cm_c))
+        y = y.transpose(1, 0, 2, 3).reshape(B, S, D)
+        new_state = None
+        if collect_state:                      # prefill: decode-ready state
+            conv_tail = xp[:, S:] if KC > 1 else \
+                jnp.zeros((B, 0, D), dt_)
+            new_state = {"conv": conv_tail, "ssm": h_last}
+
+    y = y + x_c.astype(F32) * p["D_skip"].astype(F32)[None, None]
+    y = (y.astype(dt_)) * jax.nn.silu(z.astype(F32)).astype(dt_)
+    y = constrain(y, rules, ("batch", "seq_act", "d_inner"))
+    return y @ p["out_proj"].astype(dt_), new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), F32),
+    }

@@ -1,0 +1,79 @@
+"""Public model API: ``build_model(cfg)`` returns a ``Model`` bundle with
+init / loss / prefill / decode entry points plus the abstract-parameter and
+PartitionSpec trees that power the allocation-free dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.models.transformer import (
+    RunConfig, init_params, abstract_params, param_pspecs,
+    param_logical_dims,
+)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rules: Any = None                  # ShardingRules or None
+    rc: RunConfig = field(default_factory=RunConfig)
+
+    # -- parameters ----------------------------------------------------
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def abstract_params(self, dtype=None):
+        return abstract_params(self.cfg, dtype)
+
+    def param_pspecs(self):
+        assert self.rules is not None
+        return param_pspecs(self.cfg, self.rules)
+
+    def param_count(self) -> tuple[int, int]:
+        return self.cfg.param_counts()
+
+    # -- train ----------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: dict(tokens, labels[, prefix_embed, encoder_frames])."""
+        return T.lm_loss(params, self.cfg, self.rules, batch, self.rc)
+
+    def hidden_states(self, params, batch):
+        x, aux, _ = T.forward(
+            params, self.cfg, self.rules, batch["tokens"], rc=self.rc,
+            prefix_embed=batch.get("prefix_embed"),
+            encoder_frames=batch.get("encoder_frames"))
+        return x, aux
+
+    def logits(self, params, batch):
+        """Full logits — small configs only (materializes (B, S, V))."""
+        x, aux = self.hidden_states(params, batch)
+        head = T.unembed(params, self.cfg).astype(x.dtype)
+        return (x @ head).astype(jnp.float32), aux
+
+    # -- serve ----------------------------------------------------------
+    def prefill(self, params, batch):
+        return T.prefill(
+            params, self.cfg, self.rules, batch["tokens"], rc=self.rc,
+            prefix_embed=batch.get("prefix_embed"),
+            encoder_frames=batch.get("encoder_frames"))
+
+    def decode_step(self, params, cache, token):
+        return T.decode_step(params, self.cfg, self.rules, cache, token,
+                             rc=self.rc)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   abstract: bool = False):
+        return T.init_cache(self.cfg, batch, max_len, dtype,
+                            abstract=abstract)
+
+
+def build_model(cfg: ModelConfig, rules=None,
+                rc: Optional[RunConfig] = None) -> Model:
+    return Model(cfg=cfg, rules=rules, rc=rc or RunConfig())

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-bounded
+scatter/gather dispatch (no (T,E,C) one-hot einsum — dispatch moves
+T·k·d bytes instead of burning T·E·C·d FLOPs, so HLO compute stays
+proportional to *active* parameters).
+
+Experts are expert-parallel over the "model" mesh axis (dims: ("experts",
+"d", "ffe")); tokens are data-parallel.  GSPMD inserts the token
+all-to-all/all-gather at the dispatch boundary.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = math.ceil(top_k * n_tokens / n_experts * capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)       # pad for lane alignment
+
+
+def moe_mlp(p, x, cfg, rules, *, aux: Optional[dict] = None):
+    """x: (B, S, d) -> (B, S, d).  Router stats go into ``aux`` if given.
+
+    When the sharding rules carry ``moe_groups`` > 1, dispatch is
+    GROUP-LOCAL: tokens are split into G groups aligned with the
+    data-parallel sharding, positions-in-expert are cumsum'd *within* a
+    group (no cross-shard cumsum), and the (G, E, C_g, d) buffers are
+    sharded (G->data, E->model).  Because activations are replicated over
+    the model axis, every model rank can build its own expert slice with
+    no dispatch collective at all; only the final combine all-reduces a
+    bf16 (G, T_g, d) over the model axis (EXPERIMENTS.md §Perf,
+    olmoe-prefill iterations).
+    """
+    G = getattr(rules, "moe_groups", 0) or 1
+    if G > 1 and (x.shape[0] * x.shape[1]) % G == 0:
+        return _moe_mlp_grouped(p, x, cfg, rules, G, aux=aux)
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.moe_top_k
+    dt = x.dtype
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"].astype(dt)).astype(F32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- capacity-bounded positions ---------------------------------
+    C = capacity(T, E, K, cfg.capacity_factor)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (T, K, E)
+    # priority: kth choices ranked after (k-1)th across all tokens
+    flat = onehot.transpose(1, 0, 2).reshape(K * T, E)       # (K*T, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat          # (K*T, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(K, T).T   # (T, K)
+    fits = pos < C
+    gate_vals = jnp.where(fits, gate_vals, 0.0)
+
+    # ---- scatter tokens into (E, C, d) buffers ----------------------
+    tok_idx = jnp.tile(jnp.arange(T)[:, None], (1, K)).reshape(-1)
+    e_idx = expert_idx.reshape(-1)
+    c_idx = pos.reshape(-1)
+    keep = fits.reshape(-1)
+    e_idx = jnp.where(keep, e_idx, E)       # out-of-range rows are dropped
+    buf = jnp.zeros((E + 1, C, d), dt)
+    buf = buf.at[e_idx, jnp.where(keep, c_idx, 0)].add(
+        xt[tok_idx] * keep[:, None].astype(dt), mode="drop")
+    xe = buf[:E]                             # (E, C, d)
+    xe = constrain(xe, rules, ("experts", "cap", "d_act"))
+
+    # ---- expert SwiGLU ----------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    h = constrain(h, rules, ("experts", "cap", "ffe"))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))  # (E, C, d)
+
+    # ---- gather back + combine --------------------------------------
+    gathered = ye[jnp.where(keep, e_idx, 0), c_idx]           # (T*K, d)
+    gathered = gathered * (gate_vals.reshape(-1) * keep)[:, None].astype(dt)
+    y = jnp.zeros((T, d), dt).at[tok_idx].add(gathered)
+
+    if cfg.n_shared_experts:
+        gs = xt @ p["shared_w_gate"].astype(dt)
+        us = xt @ p["shared_w_up"].astype(dt)
+        hs = jax.nn.silu(gs.astype(F32)).astype(dt) * us
+        y = y + hs @ p["shared_w_down"].astype(dt)
+
+    if aux is not None:
+        # Switch-style load-balance loss + router z-loss
+        me = jnp.mean(probs, axis=0)                          # (E,)
+        ce = jnp.mean(
+            jnp.sum(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)) / T
+        frac = jnp.bincount(
+            expert_idx.reshape(-1), length=E).astype(F32) / (T * K)
+        aux["load_balance"] = aux.get("load_balance", 0.0) + \
+            E * jnp.sum(frac * me)
+        aux["router_z"] = aux.get("router_z", 0.0) + \
+            jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        aux["dropped_frac"] = aux.get("dropped_frac", 0.0) + \
+            jnp.mean(1.0 - fits.astype(F32))
+        del ce
+    return y.reshape(B, S, d)
+
+
+def _moe_mlp_grouped(p, x, cfg, rules, G: int, *, aux=None):
+    """Group-local capacity dispatch (see moe_mlp docstring)."""
+    B, S, d = x.shape
+    T = B * S
+    Tg = T // G
+    E, K = cfg.n_experts, cfg.moe_top_k
+    dt = x.dtype
+    xg = x.reshape(G, Tg, d)
+    xg = constrain(xg, rules, ("groups", "vec", "vec"))
+
+    logits = (xg @ p["router"].astype(dt)).astype(F32)       # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, K)              # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = capacity(Tg, E, K, cfg.capacity_factor)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (G, Tg, K, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * Tg, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat               # group-local
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(G, K, Tg) \
+        .transpose(0, 2, 1)                                  # (G, Tg, K)
+    fits = pos < C
+    gate_vals = jnp.where(fits, gate_vals, 0.0)
+
+    tok_idx = jnp.tile(jnp.arange(Tg)[:, None], (1, K)).reshape(-1)
+    e_idx = jnp.where(fits, expert_idx, E).reshape(G, -1)    # (G, Tg*K)
+    c_idx = jnp.where(fits, pos, 0).reshape(G, -1)
+    keep = fits.reshape(G, -1)
+
+    def scatter_group(xq, ei, ci, kp):
+        buf = jnp.zeros((E + 1, C, d), dt)
+        vals = xq[tok_idx] * kp[:, None].astype(dt)
+        return buf.at[ei, ci].add(vals, mode="drop")[:E]
+
+    xe = jax.vmap(scatter_group)(xg, e_idx, c_idx, keep)     # (G, E, C, d)
+    xe = constrain(xe, rules, ("groups", "experts", "cap", "d_act"))
+
+    g_ = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+    u_ = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    h = jax.nn.silu(g_.astype(F32)).astype(dt) * u_
+    h = constrain(h, rules, ("groups", "experts", "cap", "ffe"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    # NOTE (§Perf olmoe iteration v4, refuted): replicating ye over the
+    # model axis here swaps the combine all-reduce for an all-gather but
+    # XLA promotes the gather to f32 — net +17% collective bytes. Keep
+    # the expert-sharded layout.
+    ye = constrain(ye, rules, ("groups", "experts", "cap", "d_act"))
+
+    gv = (gate_vals.reshape(G, -1) * keep).astype(dt)        # (G, Tg*K)
+
+    def gather_group(ye_g, ei, ci, gv_g):
+        # combine as K direct indexed adds (k-th choice of token t is row
+        # t*? no — ei is (Tg*K,) laid out (Tg, K)); summing BEFORE the
+        # model-axis reduction lets XLA reassociate the K all-reduces into
+        # one (Tg, d) all-reduce instead of a (Tg*K, d) gather reduction
+        e2 = jnp.where(ei < E, ei, 0).reshape(Tg, K)
+        c2 = ci.reshape(Tg, K)
+        g2 = gv_g.reshape(Tg, K)
+        y = jnp.zeros((Tg, d), dt)
+        for k in range(K):
+            y = y + ye_g[e2[:, k], c2[:, k]] * g2[:, k][:, None]
+        return y
+
+    y = jax.vmap(gather_group)(ye, e_idx, c_idx, gv)         # (G, Tg, d)
+    y = constrain(y, rules, ("groups", "vec", "vec"))
+    y = y.reshape(B, S, d)
+    y = constrain(y, rules, ("batch", "seq_act", "vec"))
+    y = y.reshape(T, d)
+
+    if cfg.n_shared_experts:
+        xt = x.reshape(T, d)
+        gs = xt @ p["shared_w_gate"].astype(dt)
+        us = xt @ p["shared_w_up"].astype(dt)
+        hs = jax.nn.silu(gs.astype(F32)).astype(dt) * us
+        y = y + hs @ p["shared_w_down"].astype(dt)
+
+    if aux is not None:
+        me = jnp.mean(probs, axis=(0, 1))
+        frac = jnp.bincount(expert_idx.reshape(-1),
+                            length=E).astype(F32) / (T * K)
+        aux["load_balance"] = aux.get("load_balance", 0.0) + \
+            E * jnp.sum(frac * me)
+        aux["router_z"] = aux.get("router_z", 0.0) + \
+            jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        aux["dropped_frac"] = aux.get("dropped_frac", 0.0) + \
+            jnp.mean(1.0 - fits.astype(F32))
+    return y.reshape(B, S, d)

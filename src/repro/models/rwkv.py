@@ -1,0 +1,146 @@
+"""RWKV-6 (Finch) block: token-shift mixing, data-dependent decay time mix,
+squared-ReLU channel mix — pure JAX.
+
+The WKV recurrence per head (hd = head dim):
+
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t          S: (hd, hd)
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t in (0,1) the *data-dependent* per-channel decay (the paper's Finch
+contribution) and u the learned "bonus" for the current token.  Like the
+mamba block, train/prefill uses an outer chunk scan (remat at chunk
+boundaries) with a sequential inner scan; decode is a single step on the
+carried (shift, wkv-state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+def _token_shift(x, last):
+    """Shift sequence right by one; ``last`` (B, 1, d) fills position 0."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lora(x, A, B_, dt):
+    return jnp.tanh(x @ A.astype(dt)) @ B_.astype(dt)
+
+
+def _wkv_chunk_scan(s0, r, k, v, w, u):
+    """Sequential WKV scan over one chunk.
+
+    s0: (B, H, K, V); r,k,v: (B, c, H, hd); w: (B, c, H, hd) decay in (0,1).
+    Returns y: (B, c, H, hd), s_last.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B, H, K, V)
+        bonus = (u[None] * kt)[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + bonus)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_last, y = lax.scan(step, s0, xs)
+    return y.transpose(1, 0, 2, 3), s_last
+
+
+def rwkv_time_mix(p, x, cfg, rules, *, state=None, chunk: int = 256,
+                  collect_state: bool = False):
+    B, S, d = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+
+    last = state["shift_tm"].astype(dt) if state is not None else \
+        jnp.zeros((B, 1, d), dt)
+    xs = _token_shift(x, last)
+    diff = xs - x
+
+    # data-dependent lerp coefficients (one shared + five per-stream loras)
+    xxx = x + diff * p["mu_x"].astype(dt)
+    mix = jnp.tanh(xxx @ p["lora_mix_A"].astype(dt))       # (B, S, 5*r)
+    mix = mix.reshape(B, S, 5, -1)
+    streams = jnp.einsum("bsfr,frd->bsfd", mix, p["lora_mix_B"].astype(dt))
+    mus = p["mu_rkvwg"].astype(dt)                          # (5, d)
+    xr, xk, xv, xw, xg = [
+        x + diff * (mus[i] + streams[:, :, i]) for i in range(5)]
+
+    r = (xr @ p["Wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (xk @ p["Wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (xv @ p["Wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu((xg @ p["Wg"].astype(dt)).astype(F32)).astype(dt)
+
+    w_raw = p["w_base"].astype(F32) + \
+        _lora(xw, p["lora_w_A"], p["lora_w_B"], dt).astype(F32)
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, S, H, hd)       # decay in (0,1)
+    u = p["u_bonus"].astype(F32).reshape(H, hd)
+
+    rf, kf, vf = (t.astype(F32) for t in (r, k, v))
+    if state is not None:                                   # decode
+        y, s_new = _wkv_chunk_scan(state["wkv"], rf, kf, vf, w, u)
+        new_state = {"shift_tm": x[:, -1:], "wkv": s_new}
+    else:
+        c = min(chunk, S)
+        assert S % c == 0
+        nch = S // c
+        resh = lambda t: t.reshape(B, nch, c, H, hd).transpose(1, 0, 2, 3, 4)
+
+        def chunk_step(s, inp):
+            rc, kc, vc, wc = inp
+            y, s_new = _wkv_chunk_scan(s, rc, kc, vc, wc, u)
+            return s_new, y
+
+        s0 = jnp.zeros((B, H, hd, hd), F32)
+        s_last, y = lax.scan(jax.checkpoint(chunk_step), s0,
+                             (resh(rf), resh(kf), resh(vf), resh(w)))
+        y = y.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+        new_state = None
+        if collect_state:
+            new_state = {"shift_tm": x[:, -1:], "wkv": s_last}
+
+    # per-head group norm, then gate
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * lax.rsqrt(var + 64e-5)
+    y = y * p["ln_w"].astype(F32).reshape(H, hd) + \
+        p["ln_b"].astype(F32).reshape(H, hd)
+    y = y.reshape(B, S, d).astype(dt) * g
+    y = constrain(y, rules, ("batch", "seq_act", "rflat"))
+    out = y @ p["Wo"].astype(dt)
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, cfg, rules, *, state=None,
+                     collect_state: bool = False):
+    B, S, d = x.shape
+    dt = x.dtype
+    last = state["shift_cm"].astype(dt) if state is not None else \
+        jnp.zeros((B, 1, d), dt)
+    xs = _token_shift(x, last)
+    diff = xs - x
+    xk = x + diff * p["mu_k"].astype(dt)
+    xr = x + diff * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu((xk @ p["Wk"].astype(dt)).astype(F32)))
+    k = constrain(k.astype(dt), rules, ("batch", "seq_act", "ff"))
+    kv = k @ p["Wv"].astype(dt)
+    out = jax.nn.sigmoid((xr @ p["Wr"].astype(dt)).astype(F32)).astype(dt) * kv
+    new_state = {"shift_cm": x[:, -1:]} \
+        if (state is not None or collect_state) else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.bfloat16):
+    """Time-mix state only; the channel-mix shift lives in the block's
+    "mlp" cache slot (structure must match the decode-step output)."""
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), F32),
+    }

@@ -1,0 +1,618 @@
+"""Model assembly: schema-driven parameters, scan-stacked blocks, and the
+three execution paths (train forward, prefill, decode).
+
+Parameters are described by a *schema* tree of ``PSpec(shape, dims, init)``
+leaves — the single source of truth used for (a) random init, (b)
+ShapeDtypeStruct trees for the allocation-free dry-run, and (c)
+PartitionSpec trees via the logical-dim sharding rules.
+
+Layers are stacked with ``lax.scan`` over the repeating block pattern
+(DESIGN.md §4): every leaf of a pattern-position subtree carries a leading
+``pattern_repeats`` axis.  Heterogeneous patterns (jamba 1:7, gemma3 5:1)
+scan over the super-block.  ``jax.checkpoint`` around the scanned body gives
+layer-boundary-only activation residency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ATTN, MAMBA, RWKV, LayerSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MoE
+from repro.models import rwkv as R
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+def pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target."""
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    dims: tuple
+    init: str = "linear"        # linear | embed | zeros | ones | mamba_A | mamba_dt
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def _attn_schema(cfg: ModelConfig) -> dict:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    s = {
+        "wq": PSpec((d, qd), ("d", "qdim")),
+        "wk": PSpec((d, kvd), ("d", "kvdim")),
+        "wv": PSpec((d, kvd), ("d", "kvdim")),
+        "wo": PSpec((qd, d), ("qdim", "d")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = PSpec((hd,), ("vec",), "zeros")
+        s["k_norm"] = PSpec((hd,), ("vec",), "zeros")
+    return s
+
+
+def _dense_mlp_schema(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PSpec((d, f), ("d", "ff")),
+        "w_up": PSpec((d, f), ("d", "ff")),
+        "w_down": PSpec((f, d), ("ff", "d")),
+    }
+
+
+def _moe_schema(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff_e, cfg.n_experts
+    s = {
+        "router": PSpec((d, E), ("d", "vec")),
+        "w_gate": PSpec((E, d, f), ("experts", "d", "ffe")),
+        "w_up": PSpec((E, d, f), ("experts", "d", "ffe")),
+        "w_down": PSpec((E, f, d), ("experts", "ffe", "d")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff
+        s["shared_w_gate"] = PSpec((d, fs), ("d", "ff"))
+        s["shared_w_up"] = PSpec((d, fs), ("d", "ff"))
+        s["shared_w_down"] = PSpec((fs, d), ("ff", "d"))
+    return s
+
+
+def _mamba_schema(cfg: ModelConfig) -> dict:
+    d, D, N, Rk, KC = (cfg.d_model, cfg.d_inner, cfg.mamba_d_state,
+                       cfg.dt_rank, cfg.mamba_d_conv)
+    return {
+        "in_proj": PSpec((d, 2 * D), ("d", "d_inner")),
+        "conv_w": PSpec((D, KC), ("d_inner", "vec")),
+        "conv_b": PSpec((D,), ("d_inner",), "zeros"),
+        "x_proj": PSpec((D, Rk + 2 * N), ("d_inner", "vec")),
+        "dt_proj": PSpec((Rk, D), ("vec", "d_inner")),
+        "dt_bias": PSpec((D,), ("d_inner",), "mamba_dt"),
+        "A_log": PSpec((D, N), ("d_inner", "vec"), "mamba_A"),
+        "D_skip": PSpec((D,), ("d_inner",), "ones"),
+        "out_proj": PSpec((D, d), ("d_inner", "d")),
+    }
+
+
+def _rwkv_tm_schema(cfg: ModelConfig) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_lora_dim
+    return {
+        "mu_x": PSpec((d,), ("vec",), "zeros"),
+        "mu_rkvwg": PSpec((5, d), ("vec", "d"), "zeros"),
+        "lora_mix_A": PSpec((d, 5 * r), ("d", "vec")),
+        "lora_mix_B": PSpec((5, r, d), ("vec", "lora", "d")),
+        "Wr": PSpec((d, d), ("d", "rflat")),
+        "Wk": PSpec((d, d), ("d", "rflat")),
+        "Wv": PSpec((d, d), ("d", "rflat")),
+        "Wg": PSpec((d, d), ("d", "rflat")),
+        "Wo": PSpec((d, d), ("rflat", "d")),
+        "w_base": PSpec((d,), ("vec",), "zeros"),
+        "lora_w_A": PSpec((d, r), ("d", "lora")),
+        "lora_w_B": PSpec((r, d), ("lora", "d")),
+        "u_bonus": PSpec((d,), ("vec",), "zeros"),
+        "ln_w": PSpec((d,), ("vec",), "ones"),
+        "ln_b": PSpec((d,), ("vec",), "zeros"),
+    }
+
+
+def _rwkv_cm_schema(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": PSpec((d,), ("vec",), "zeros"),
+        "mu_r": PSpec((d,), ("vec",), "zeros"),
+        "Wk": PSpec((d, f), ("d", "ff")),
+        "Wv": PSpec((f, d), ("ff", "d")),
+        "Wr": PSpec((d, d), ("d", "rflat")),
+    }
+
+
+def _block_schema(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    d = cfg.d_model
+    s = {"norm_mix": PSpec((d,), ("vec",), "zeros"),
+         "norm_mlp": PSpec((d,), ("vec",), "zeros")}
+    if spec.kind == ATTN:
+        s["mix"] = _attn_schema(cfg)
+    elif spec.kind == MAMBA:
+        s["mix"] = _mamba_schema(cfg)
+    else:
+        s["mix"] = _rwkv_tm_schema(cfg)
+    if spec.cross_attn:
+        s["norm_cross"] = PSpec((d,), ("vec",), "zeros")
+        s["cross"] = _attn_schema(cfg)
+    if spec.kind == RWKV:
+        s["mlp"] = _rwkv_cm_schema(cfg)
+    elif spec.moe:
+        s["mlp"] = _moe_schema(cfg)
+    else:
+        s["mlp"] = _dense_mlp_schema(cfg)
+    return s
+
+
+def _stack(schema, n: int):
+    return jax.tree.map(
+        lambda p: PSpec((n,) + p.shape, ("layers",) + p.dims, p.init),
+        schema, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_schema(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.padded_vocab
+    Rn = cfg.pattern_repeats
+    schema = {
+        "embed": PSpec((V, d), ("vocab", "d"), "embed"),
+        "blocks": [_stack(_block_schema(cfg, s), Rn) for s in cfg.pattern],
+        "final_norm": PSpec((d,), ("vec",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        schema["lm_head"] = PSpec((d, V), ("d", "vocab"))
+    if cfg.is_enc_dec:
+        enc_block = {
+            "norm_mix": PSpec((d,), ("vec",), "zeros"),
+            "norm_mlp": PSpec((d,), ("vec",), "zeros"),
+            "mix": _attn_schema(cfg),
+            "mlp": _dense_mlp_schema(cfg),
+        }
+        schema["encoder"] = {
+            "blocks": [_stack(enc_block, cfg.n_encoder_layers)],
+            "final_norm": PSpec((d,), ("vec",), "zeros"),
+        }
+    return schema
+
+
+# -- schema consumers -------------------------------------------------------
+
+def _leaves_with_path(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    schema = param_schema(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def make(path, spec: PSpec):
+        k = jax.random.fold_in(key, hash(jax.tree_util.keystr(path)) % (2**31))
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        if spec.init == "linear":
+            return (jax.random.normal(k, spec.shape, dtype)
+                    / math.sqrt(max(1, fan_in)))
+        if spec.init == "embed":
+            return jax.random.normal(k, spec.shape, dtype) * 0.02
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "mamba_A":
+            a = jnp.broadcast_to(
+                jnp.arange(1, spec.shape[-1] + 1, dtype=F32), spec.shape)
+            return jnp.log(a).astype(dtype)
+        if spec.init == "mamba_dt":
+            u = jax.random.uniform(k, spec.shape, F32,
+                                   minval=math.log(1e-3), maxval=math.log(1e-1))
+            dt = jnp.exp(u)
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+        raise ValueError(spec.init)
+
+    paths, treedef = _leaves_with_path(schema)
+    leaves = [make(p, s) for p, s in paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    dt = jnp.dtype(dtype or cfg.param_dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt),
+        param_schema(cfg), is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_pspecs(cfg: ModelConfig, rules):
+    """PartitionSpec tree mirroring the params."""
+    return jax.tree.map(
+        lambda s: rules.pspec(s.dims, s.shape),
+        param_schema(cfg), is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_logical_dims(cfg: ModelConfig):
+    return jax.tree.map(lambda s: s.dims, param_schema(cfg),
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# ---------------------------------------------------------------------------
+# Execution knobs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunConfig:
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    mamba_chunk: int = 256
+    rwkv_chunk: int = 256
+    loss_chunk: int = 256
+    remat: bool = True
+    microbatch: int = 0          # 0 = no gradient accumulation
+    prefill_pad: int = 0         # pad prefill KV caches to this many slots
+                                 # (0 = exactly the prompt; decode then has
+                                 # no headroom — fine for the dry-run cell)
+    causal_skip: bool = False    # static causal block skipping in flash
+    remat_policy: str = "full"   # full | dots (save matmul outputs)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _apply_mix(p, x, cfg, spec, rules, rc: RunConfig, *, positions,
+               cache=None, pos=None, collect=False):
+    """Mixer sublayer dispatch. Returns (out, cache_out)."""
+    if spec.kind == ATTN:
+        return L.attention_layer(
+            p, x, cfg, spec, rules, positions=positions, cache=cache, pos=pos,
+            q_chunk=pick_chunk(x.shape[1], rc.q_chunk),
+            kv_chunk=rc.kv_chunk, collect_kv=collect,
+            pad_to=rc.prefill_pad, causal_skip=rc.causal_skip)
+    if spec.kind == MAMBA:
+        return M.mamba_mixer(p, x, cfg, rules, state=cache,
+                             chunk=pick_chunk(x.shape[1], rc.mamba_chunk),
+                             collect_state=collect)
+    return R.rwkv_time_mix(p, x, cfg, rules, state=cache,
+                           chunk=pick_chunk(x.shape[1], rc.rwkv_chunk),
+                           collect_state=collect)
+
+
+def apply_block(bp, x, cfg, spec: LayerSpec, rules, rc: RunConfig, *,
+                positions, encoder_out=None, cache=None, pos=None,
+                aux=None, collect=False):
+    """One block: mixer + (cross) + mlp with pre-norms and residuals.
+
+    Returns (x, cache_out) — cache_out has the layer-cache structure when
+    ``collect`` or ``cache`` is given, else None.
+    """
+    eps = cfg.norm_eps
+    h = L.rms_norm(x, bp["norm_mix"], eps)
+    mix_cache = None if cache is None else cache.get("mix")
+    mix, mix_cache_out = _apply_mix(
+        bp["mix"], h, cfg, spec, rules, rc, positions=positions,
+        cache=mix_cache, pos=pos, collect=collect)
+    x = x + mix
+
+    cross_cache_out = None
+    if spec.cross_attn:
+        h = L.rms_norm(x, bp["norm_cross"], eps)
+        cross_cache = None if cache is None else cache.get("cross")
+        cr, cross_cache_out = L.attention_layer(
+            bp["cross"], h, cfg, spec, rules, positions=positions,
+            kv_x=encoder_out, cache=cross_cache, pos=pos,
+            is_cross=(cache is not None and encoder_out is None),
+            q_chunk=pick_chunk(x.shape[1], rc.q_chunk),
+            kv_chunk=rc.kv_chunk, collect_kv=collect)
+        x = x + cr
+
+    h = L.rms_norm(x, bp["norm_mlp"], eps)
+    mlp_cache_out = None
+    if spec.kind == RWKV:
+        cm_cache = None if cache is None else cache.get("mlp")
+        mlp, mlp_cache_out = R.rwkv_channel_mix(
+            bp["mlp"], h, cfg, rules, state=cm_cache, collect_state=collect)
+    elif spec.moe:
+        mlp = MoE.moe_mlp(bp["mlp"], h, cfg, rules, aux=aux)
+    else:
+        mlp = L.swiglu_mlp(bp["mlp"], h, rules)
+    x = x + mlp
+    x = constrain(x, rules, ("batch", "seq_act", "vec"))
+
+    cache_out = None
+    if (cache is not None) or collect:
+        cache_out = {"mix": mix_cache_out}
+        if spec.cross_attn:
+            cache_out["cross"] = cross_cache_out
+        if spec.kind == RWKV:
+            cache_out["mlp"] = mlp_cache_out
+    return x, cache_out
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, rules, frames, rc: RunConfig):
+    """frames: (B, F, d) precomputed frontend embeddings (stub)."""
+    B, Fr, d = frames.shape
+    x = frames + L.sinusoidal_embedding(jnp.arange(Fr), d)[None].astype(
+        frames.dtype)
+    positions = jnp.arange(Fr)
+    enc_spec = LayerSpec(kind=ATTN)
+
+    def body(x, bp):
+        h = L.rms_norm(x, bp["norm_mix"], cfg.norm_eps)
+        mix, _ = L.attention_layer(
+            bp["mix"], h, cfg, enc_spec, rules, positions=positions,
+            causal=False, q_chunk=pick_chunk(Fr, rc.q_chunk),
+            kv_chunk=pick_chunk(Fr, rc.kv_chunk))
+        x = x + mix
+        h = L.rms_norm(x, bp["norm_mlp"], cfg.norm_eps)
+        x = x + L.swiglu_mlp(bp["mlp"], h, rules)
+        return x, None
+
+    fn = jax.checkpoint(body) if rc.remat else body
+    x, _ = lax.scan(fn, x, params["blocks"][0])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens, dtype):
+    emb = params["embed"].astype(dtype)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def forward(params, cfg: ModelConfig, rules, tokens, *, rc: RunConfig,
+            prefix_embed=None, encoder_frames=None, collect_cache=False):
+    """tokens: (B, S_text).  Returns (hidden (B,S,d), aux, caches|None).
+
+    S = prefix_len + S_text for VLM configs (prefix embeddings prepended).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params, cfg, tokens, dt)
+    if cfg.prefix_len:
+        assert prefix_embed is not None
+        x = jnp.concatenate([prefix_embed.astype(dt), x], axis=1)
+    B, S, d = x.shape
+    positions = jnp.arange(S)
+    if not cfg.use_rope and not cfg.is_enc_dec:
+        x = x + L.sinusoidal_embedding(positions, d)[None].astype(dt)
+
+    encoder_out = None
+    if cfg.is_enc_dec:
+        assert encoder_frames is not None
+        encoder_out = encode(params["encoder"], cfg, rules,
+                             encoder_frames.astype(dt), rc)
+        x = x + L.sinusoidal_embedding(positions, d)[None].astype(dt)
+
+    x = constrain(x, rules, ("batch", "seq_act", "vec"))
+    aux0 = {"load_balance": jnp.zeros((), F32),
+            "router_z": jnp.zeros((), F32),
+            "dropped_frac": jnp.zeros((), F32)}
+
+    # one scan over pattern repeats; the body applies the whole super-block
+    # in pattern order (gemma3: 5 local + 1 global; jamba: 1 attn + 7 mamba)
+    def superblock(carry, bps):
+        x, aux = carry
+        aux = dict(aux)
+        cache_outs = []
+        for i, spec in enumerate(cfg.pattern):
+            x, cache_out = apply_block(
+                bps[i], x, cfg, spec, rules, rc, positions=positions,
+                encoder_out=encoder_out, aux=aux, collect=collect_cache)
+            cache_outs.append(cache_out)
+        return (x, aux), (tuple(cache_outs) if collect_cache else None)
+
+    if rc.remat:
+        policy = None
+        if rc.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        fn = jax.checkpoint(superblock, policy=policy)
+    else:
+        fn = superblock
+    (x, aux0), caches = lax.scan(fn, (x, aux0), tuple(params["blocks"]))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not collect_cache:
+        return x, aux0, None
+    cache = {"blocks": list(caches), "pos": jnp.asarray(S, jnp.int32)}
+    if cfg.is_enc_dec:
+        cache["encoder_out"] = encoder_out
+    return x, aux0, cache
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy, vocab-sharded logits)
+# ---------------------------------------------------------------------------
+
+def unembed(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T      # (d, V)
+    return params["lm_head"]
+
+
+def lm_loss(params, cfg: ModelConfig, rules, batch, rc: RunConfig):
+    """batch: dict(tokens, labels[, prefix_embed, encoder_frames]).
+
+    labels < 0 are masked.  Returns (loss, metrics).
+    """
+    x, aux, _ = forward(
+        params, cfg, rules, batch["tokens"], rc=rc,
+        prefix_embed=batch.get("prefix_embed"),
+        encoder_frames=batch.get("encoder_frames"))
+    B, S, d = x.shape
+    labels = batch["labels"]
+    if cfg.prefix_len:      # prefix positions carry no LM loss
+        pad = jnp.full((B, cfg.prefix_len), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    head = unembed(params, cfg).astype(x.dtype)
+
+    cs = pick_chunk(S, rc.loss_chunk)
+    nch = S // cs
+    xc = x.reshape(B, nch, cs, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(B, nch, cs).transpose(1, 0, 2)
+
+    def ce_chunk(carry, inp):
+        tot, cnt = carry
+        xi, yi = inp                                  # (B, cs, d), (B, cs)
+        logits = (xi @ head).astype(F32)              # (B, cs, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(yi, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (yi >= 0).astype(F32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = lax.scan(jax.checkpoint(ce_chunk),
+                             (jnp.zeros((), F32), jnp.zeros((), F32)),
+                             (xc, yc))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_weight * aux["load_balance"] \
+            + 1e-3 * aux["router_z"]
+    metrics = {"ce": ce, "tokens": cnt, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache pytree for decoding; leaves stacked over pattern repeats.
+
+    ``abstract=True`` returns ShapeDtypeStructs without any allocation
+    (dry-run path — a 500k-context cache never touches host memory).
+    """
+    if abstract:
+        return jax.eval_shape(
+            lambda: init_cache(cfg, batch, max_len, dtype, abstract=False))
+    Rn = cfg.pattern_repeats
+
+    def one(spec: LayerSpec):
+        c = {}
+        if spec.kind == ATTN:
+            c["mix"] = L.init_attn_cache(cfg, spec, batch, max_len, dtype)
+        elif spec.kind == MAMBA:
+            c["mix"] = M.init_mamba_state(cfg, batch, dtype)
+        else:
+            c["mix"] = R.init_rwkv_state(cfg, batch, dtype)
+            c["mlp"] = {"shift_cm": jnp.zeros((batch, 1, cfg.d_model), dtype)}
+        if spec.cross_attn:
+            K, Dh = cfg.n_kv_heads, cfg.head_dim
+            c["cross"] = {
+                "k": jnp.zeros((batch, cfg.encoder_seq, K, Dh), dtype),
+                "v": jnp.zeros((batch, cfg.encoder_seq, K, Dh), dtype)}
+        return c
+
+    blocks = [jax.tree.map(lambda a: jnp.broadcast_to(a, (Rn,) + a.shape),
+                           one(s)) for s in cfg.pattern]
+    cache = {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.is_enc_dec:
+        cache["encoder_out"] = jnp.zeros(
+            (batch, cfg.encoder_seq, cfg.d_model), dtype)
+    return cache
+
+
+def cache_logical_dims(cfg: ModelConfig):
+    """Logical-dim tree mirroring ``init_cache`` (drives cache sharding)."""
+    def one(spec: LayerSpec):
+        c = {}
+        if spec.kind == ATTN:
+            c["mix"] = {"k": ("batch", "cache_seq", "kvheads", "hd"),
+                        "v": ("batch", "cache_seq", "kvheads", "hd")}
+        elif spec.kind == MAMBA:
+            c["mix"] = {"conv": ("batch", "vec", "d_inner"),
+                        "ssm": ("batch", "d_inner", "vec")}
+        else:
+            c["mix"] = {"shift_tm": ("batch", "vec", "vec"),
+                        "wkv": ("batch", "rheads", "vec", "vec")}
+            c["mlp"] = {"shift_cm": ("batch", "vec", "vec")}
+        if spec.cross_attn:
+            c["cross"] = {"k": ("batch", "frames", "kvheads", "hd"),
+                          "v": ("batch", "frames", "kvheads", "hd")}
+        return c
+
+    blocks = [jax.tree.map(lambda dims: ("layers",) + dims, one(s),
+                           is_leaf=lambda x: isinstance(x, tuple))
+              for s in cfg.pattern]
+    dims = {"blocks": blocks, "pos": ()}
+    if cfg.is_enc_dec:
+        dims["encoder_out"] = ("batch", "frames", "vec")
+    return dims
+
+
+def cache_pspecs(cfg: ModelConfig, rules, cache):
+    """PartitionSpec tree for a concrete cache pytree."""
+    dims = cache_logical_dims(cfg)
+    return jax.tree.map(
+        lambda dm, leaf: rules.pspec(dm, leaf.shape),
+        dims, cache, is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, str) for e in x) or x == ())
+
+
+def decode_step(params, cfg: ModelConfig, rules, cache, token, *,
+                rc: RunConfig):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, new_cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(params, cfg, token, dt)           # (B, 1, d)
+    pos = cache["pos"]
+    positions = pos[None]
+    if not cfg.use_rope:
+        x = x + L.sinusoidal_embedding(positions, cfg.d_model)[None].astype(dt)
+    x = constrain(x, rules, ("batch", "seq_act", "vec"))
+
+    def superblock(x, xs):
+        bps, bcs = xs
+        new_cs = []
+        for i, spec in enumerate(cfg.pattern):
+            x, cache_out = apply_block(
+                bps[i], x, cfg, spec, rules, rc, positions=positions,
+                cache=bcs[i], pos=pos)
+            new_cs.append(cache_out)
+        return x, tuple(new_cs)
+
+    x, new_blocks = lax.scan(
+        superblock, x, (tuple(params["blocks"]), tuple(cache["blocks"])))
+    new_blocks = list(new_blocks)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ unembed(params, cfg).astype(dt)).astype(F32)
+    new_cache = dict(cache, blocks=new_blocks, pos=pos + 1)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, rules, tokens, *, rc: RunConfig,
+            prefix_embed=None, encoder_frames=None):
+    """Run the full prompt, return (last-position logits, cache)."""
+    x, _, cache = forward(
+        params, cfg, rules, tokens, rc=rc, prefix_embed=prefix_embed,
+        encoder_frames=encoder_frames, collect_cache=True)
+    logits = (x[:, -1:] @ unembed(params, cfg).astype(x.dtype)).astype(F32)
+    return logits[:, 0], cache

@@ -1,0 +1,73 @@
+"""AdamW over parameter pytrees — dependency-free, sharding-transparent.
+
+State (m, v) mirrors the parameter tree, so the parameter PartitionSpecs
+apply verbatim (ZeRO-1/FSDP falls out of sharding the trees, not of the
+optimizer code).  Update math runs in f32 regardless of parameter dtype.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, dtype=F32):
+    """dtype=bfloat16 gives the low-memory state variant; the update math
+    still runs in f32 (moments are up-cast per step)."""
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state, step, *,
+                 lr_scale=1.0):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    t = (step + 1).astype(F32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        st_dtype = m.dtype
+        g = g.astype(F32) * clip
+        m = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                      # decoupled decay, matrices only
+            step_ = step_ + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * step_).astype(p.dtype)
+        return new_p, m.astype(st_dtype), v.astype(st_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm}

@@ -1,0 +1,92 @@
+"""Gradient compression for cross-pod data parallelism.
+
+``int8`` block-quantized compression with stateless stochastic-style
+rounding is exposed as a drop-in transform on the gradient tree.  On real
+meshes the win is 4x less DCN/ICI all-reduce volume for the data-parallel
+gradient sum; here we implement the quantize/dequantize math (tested for
+convergence in tests/test_compression.py) and an error-feedback variant
+where the residual is carried in the optimizer loop.
+
+Note on placement: compression must wrap the *cross-pod* reduction only —
+within-pod reductions are cheap.  With GSPMD the reduction is implicit, so
+we quantize the local gradient contribution before it enters the
+all-reduce and dequantize after; the associated precision loss is what the
+error-feedback state corrects.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _quant_int8(g, block: int = 256):
+    """Block-wise symmetric int8 quantization along the last axis."""
+    flat = g.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, g.shape, pad
+
+
+def _dequant_int8(q, scale, shape, pad):
+    out = (q.astype(F32) * scale).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)
+
+
+def quantize_dequantize(g, block: int = 256):
+    return _dequant_int8(*_quant_int8(g.astype(F32), block))
+
+
+def compress_grads(grads, method: str = "int8", block: int = 256):
+    """Simulate the compressed all-reduce: q->dq on every gradient leaf.
+
+    Returns (grads, metrics).  metrics report the compression error so the
+    training loop can monitor drift.
+    """
+    if method == "none":
+        return grads, {}
+    assert method == "int8", method
+
+    err_num = 0.0
+    err_den = 0.0
+    out = []
+    leaves, treedef = jax.tree.flatten(grads)
+    for g in leaves:
+        if g.ndim < 2:                      # tiny tensors stay exact
+            out.append(g)
+            continue
+        dq = quantize_dequantize(g, block)
+        err_num = err_num + jnp.sum(jnp.square(g.astype(F32) - dq))
+        err_den = err_den + jnp.sum(jnp.square(g.astype(F32)))
+        out.append(dq.astype(g.dtype))
+    metrics = {"compress_rel_err": jnp.sqrt(err_num / jnp.maximum(err_den, 1e-30))}
+    return treedef.unflatten(out), metrics
+
+
+def error_feedback_update(grads, ef_state, block: int = 256):
+    """Error-feedback compression: compress (g + e), carry new residual."""
+    def one(g, e):
+        if g.ndim < 2:
+            return g, e
+        tot = g.astype(F32) + e
+        dq = quantize_dequantize(tot, block)
+        return dq.astype(g.dtype), tot - dq
+
+    pairs = jax.tree.map(one, grads, ef_state)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_ef
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)

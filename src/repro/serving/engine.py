@@ -1,0 +1,131 @@
+"""Batched serving engine: continuous-batching-style decode over a fixed
+slot grid.
+
+Requests are admitted into B fixed slots; prefill fills a slot's KV cache
+(computed right-padded to the slot length), decode steps advance all
+active slots together, finished slots (EOS or budget) are recycled.  The
+cache is allocated once at (B, max_len) — admission never reallocates,
+which is the property that lets the same compiled step serve the whole
+trace.  Slot activity is a boolean mask; inactive slots decode garbage
+that is masked out of the responses (standard padded-batch serving).
+
+This engine drives the `serve_lm.py` example and the serving tests; the
+dry-run's `serve_step` lowers the same ``decode_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.B = n_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.cache = model.init_cache(n_slots, max_len)
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int64)
+        self.slot_budget = np.zeros(n_slots, np.int64)
+        self.last_token = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(model.decode_step)
+        # single-slot prefill writes one slot's cache lines
+        self._prefill_one = jax.jit(self._prefill_impl, static_argnums=(2,))
+
+    # -- prefill -------------------------------------------------------
+    def _prefill_impl(self, params, tokens, slot: int):
+        """Prefill one request and splice its cache into slot ``slot``."""
+        logits, cache = self.model.prefill(params, {"tokens": tokens})
+        return logits, cache
+
+    def _splice(self, slot: int, prefill_cache, prompt_len: int):
+        """Copy one request's prefill cache into the engine's slot."""
+        def copy(dst, src):
+            if dst.ndim < 2 or src.shape[0] != dst.shape[0]:
+                return dst
+            # leaves: (R, B, S, ...) dst vs (R, 1, P, ...) src
+            if dst.ndim != src.ndim:
+                return dst
+            pad = [(0, 0)] * src.ndim
+            if src.shape[2] <= dst.shape[2]:
+                pad[2] = (0, dst.shape[2] - src.shape[2])
+            else:
+                return dst
+            src_p = jnp.pad(src, pad).astype(dst.dtype)
+            return dst.at[:, slot:slot + 1].set(src_p)
+
+        new_blocks = jax.tree.map(copy, self.cache["blocks"],
+                                  prefill_cache["blocks"])
+        self.cache = dict(self.cache, blocks=new_blocks)
+
+    def admit(self, req: Request) -> bool:
+        for slot in range(self.B):
+            if self.active[slot] is None:
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, pc = self._prefill_one(self.params, tokens, slot)
+                self._splice(slot, pc, len(req.prompt))
+                first = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(first)
+                self.active[slot] = req
+                self.slot_pos[slot] = len(req.prompt)
+                self.slot_budget[slot] = req.max_new_tokens - 1
+                self.last_token[slot, 0] = first
+                # global pos counter: engine decodes all slots at a common
+                # position; slot caches were right-padded to max prompt
+                self.cache = dict(
+                    self.cache,
+                    pos=jnp.asarray(int(max(self.slot_pos[s]
+                                            for s in range(self.B)
+                                            if self.active[s] is not None)),
+                                    jnp.int32))
+                return True
+        return False
+
+    def step(self):
+        """One decode step for all active slots."""
+        if not any(r is not None for r in self.active):
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.slot_budget[slot] -= 1
+            self.last_token[slot, 0] = tok
+            if tok == self.eos or self.slot_budget[slot] <= 0:
+                req.done = True
+                self.active[slot] = None
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve a request list to completion (simple FCFS admission)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            for r in requests:
+                if r.done and r not in done:
+                    done.append(r)
+        return done

@@ -1,0 +1,3 @@
+from repro.sharding.specs import (  # noqa: F401
+    ShardingRules, constrain, pspec_for, named_sharding,
+)

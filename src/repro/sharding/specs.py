@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every tensor in the system is annotated with *logical* dims ("d", "ff",
+"qdim", "batch", ...).  ``ShardingRules`` maps logical dims to mesh axes and
+enforces divisibility: a logical dim is only sharded when its size divides the
+product of the mapped mesh axes (jit rejects uneven shardings).  This is what
+lets one rule table drive ten architectures with awkward head counts.
+
+Default production mapping (single pod, mesh ("data", "model")):
+    batch  -> ("data",)           data parallel
+    d      -> ("data",)           FSDP: parameters' d_model dim sharded over dp
+    qdim/kvdim/ff/ffe/vocab/d_inner/rflat -> ("model",)   tensor parallel
+    experts -> ("model",)         expert parallel
+    seq    -> ()                  (set to ("data",) for batch-1 long decode)
+
+Multi-pod adds "pod" in front of batch (pure DP across pods) and optionally
+into the FSDP axes (ZeRO across pods) — see ``for_mesh``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    # logical dim -> tuple of mesh axes (in major-to-minor order)
+    table: dict = field(default_factory=dict)
+    # >1 => group-local MoE dispatch with this many groups (aligned with
+    # the data axes; see models/moe._moe_mlp_grouped)
+    moe_groups: int = 0
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, seq_sharded: bool = False,
+                 zero_over_pod: bool = True,
+                 fsdp: bool = True) -> "ShardingRules":
+        axes = set(mesh.axis_names)
+        has_pod = "pod" in axes
+        batch = (("pod", "data") if has_pod else ("data",))
+        dp = ("data",)
+        if has_pod and zero_over_pod:
+            dp = ("pod", "data")
+        tp = ("model",)
+        table = {
+            "batch": batch,
+            "seq": dp if seq_sharded else (),
+            "d": dp if fsdp else (),          # FSDP on parameter d_model dim
+            "vocab": tp,
+            "qdim": tp,
+            "kvdim": tp,
+            "ff": tp,
+            "ffe": (),                        # per-expert ff dim (E already EP)
+            "experts": tp,
+            "d_inner": tp,                    # mamba channels
+            "rflat": tp,                      # rwkv flattened head dim (H*hd)
+            "heads": (),                      # raw head counts rarely divisible
+            "kvheads": tp,                    # kv cache heads (when divisible)
+            "rheads": tp,                     # rwkv state heads
+            "hd": tp,                         # fallback: head_dim (used-axis
+                                              # tracking keeps one of the two)
+            "cache_seq": dp if seq_sharded else (),
+            "layers": (),
+            "cap": (),
+            "dt": (),
+            "state": (),
+            "conv": (),
+            "lora": (),
+            "frames": (),
+            "prefix": (),
+            "seq_act": (),
+            "seq_tok": (),
+            "d_act": (),
+            "vec": (),
+            "groups": dp,                     # MoE dispatch groups
+        }
+        return ShardingRules(mesh=mesh, table=table)
+
+    def with_overrides(self, **kv) -> "ShardingRules":
+        t = dict(self.table)
+        extra = {}
+        if "moe_groups" in kv:
+            extra["moe_groups"] = kv.pop("moe_groups")
+        t.update(kv)
+        return replace(self, table=t, **extra)
+
+    # ------------------------------------------------------------------
+    def axes_for(self, dim_name: str, size: int):
+        """Mesh axes for one logical dim, honoring divisibility."""
+        axes = self.table.get(dim_name, ())
+        if not axes:
+            return None
+        if size % _axes_size(self.mesh, tuple(axes)) != 0:
+            return None                     # would be uneven -> replicate
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def pspec(self, dims: tuple, shape: tuple) -> P:
+        assert len(dims) == len(shape), (dims, shape)
+        used = set()
+        out = []
+        for dim_name, size in zip(dims, shape):
+            ax = self.axes_for(dim_name, size)
+            # one mesh axis may shard only one dim of a tensor
+            flat = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            if ax is None or any(a in used for a in flat):
+                out.append(None)
+            else:
+                used.update(flat)
+                out.append(ax)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+def pspec_for(rules: Optional[ShardingRules], dims: tuple, shape: tuple) -> P:
+    if rules is None:
+        return P()
+    return rules.pspec(dims, shape)
+
+
+def named_sharding(rules: ShardingRules, dims: tuple, shape: tuple):
+    return NamedSharding(rules.mesh, rules.pspec(dims, shape))
+
+
+def constrain(x, rules: Optional[ShardingRules], dims: tuple):
+    """with_sharding_constraint against the logical dims (no-op without rules)."""
+    if rules is None or getattr(rules, "mesh", None) is None:
+        return x
+    spec = rules.pspec(dims, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,37 @@
+"""Train state pytree + abstract/sharded constructors for the dry-run."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import abstract_params, param_pspecs, init_params
+from repro.optim.adamw import adamw_init
+
+
+def init_train_state(cfg, key, *, opt_dtype=jnp.float32):
+    params = init_params(cfg, key)
+    opt = adamw_init(params, dtype=opt_dtype)
+    return {"params": params, "opt": opt,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg, *, opt_dtype=jnp.float32, param_dtype=None):
+    """``opt_dtype``/``param_dtype`` support the low-memory training
+    configuration (bf16 adam moments + bf16 master weights) that lets the
+    398B jamba train state fit a single 256-chip pod — see
+    EXPERIMENTS.md §Dry-run."""
+    p = abstract_params(cfg, param_dtype)
+    od = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(opt_dtype))
+    return {"params": p,
+            "opt": {"m": jax.tree.map(od, p), "v": jax.tree.map(od, p)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_pspecs(cfg, rules):
+    from jax.sharding import PartitionSpec as P
+    ps = param_pspecs(cfg, rules)
+    return {"params": ps, "opt": {"m": ps, "v": ps}, "step": P()}
+
+
+TrainState = dict     # structural alias: {"params", "opt", "step"}

@@ -1,0 +1,80 @@
+"""Train-step factory: loss -> grads (with microbatch accumulation) ->
+AdamW update.
+
+Gradient accumulation is a ``lax.scan`` over microbatches with a donated
+f32 gradient carry; inside the scan each microbatch's backward runs under
+the model's remat policy.  This shape (scan + reduce-scatterable carry) is
+what lets the XLA latency-hiding scheduler overlap gradient collectives
+with the next microbatch's compute on real hardware.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.transformer import lm_loss, RunConfig
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import compress_grads
+from repro.sharding.specs import constrain
+
+F32 = jnp.float32
+
+
+def make_train_step(cfg, rules, rc: RunConfig, opt_cfg: AdamWConfig, *,
+                    schedule=None, compression: Optional[str] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, rules, mb, rc)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grads_of(params, batch):
+        m = rc.microbatch
+        if not m or m <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % m == 0, (b, m)
+            x = x.reshape(m, b // m, *x.shape[1:])
+            # keep the *microbatch* batch dim data-sharded after the reshape
+            return constrain(x, rules,
+                             ("vec", "batch") + ("vec",) * (x.ndim - 2))
+
+        mbs = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(F32) / m, grads_acc, grads)
+            return (loss_acc + loss / m, grads_acc), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        (loss, grads), metrics = lax.scan(
+            acc_step, (jnp.zeros((), F32), zeros), mbs)
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        if compression:
+            grads, cmetrics = compress_grads(grads, method=compression)
+            metrics = {**metrics, **cmetrics}
+        lr_scale = schedule(state["step"]) if schedule is not None else 1.0
+        params, opt, om = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"], state["step"],
+            lr_scale=lr_scale)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, **metrics, **om}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,129 @@
+"""Config registry exactness (assigned dims), representation-size
+accounting (Table 1 / Table 4), and synthetic-data strength control."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, SHAPES, get_config, shape_for
+from repro.core import SAX, SSAX, TSAX, season_strength, trend_strength
+from repro.core.onedsax import OneDSAX
+from repro.data.synthetic import season_dataset, trend_dataset
+from repro.data.datasets import economy_like, metering_like
+
+ASSIGNED = {
+    "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    "rwkv6-7b": (32, 4096, 32, 32, 14336, 65536),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_assigned_dims_exact(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, V = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert (cfg.d_ff_e if cfg.n_experts else cfg.d_ff) == ff
+    assert cfg.vocab_size == V
+
+
+def test_moe_configs():
+    j = get_config("jamba-1.5-large-398b")
+    assert j.n_experts == 16 and j.moe_top_k == 2
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.n_experts == 16 and l4.moe_top_k == 1
+    ol = get_config("olmoe-1b-7b")
+    assert ol.n_experts == 64 and ol.moe_top_k == 8
+
+
+def test_jamba_interleave_is_1_to_7():
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = [s.kind for s in cfg.pattern]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    assert sum(s.moe for s in cfg.pattern) == 4      # every other layer
+
+
+def test_gemma3_local_global_5_to_1():
+    cfg = get_config("gemma3-12b")
+    wins = [s.window for s in cfg.pattern]
+    assert wins.count(None) == 1 and len(wins) == 6
+
+
+def test_long500k_skip_policy():
+    runs = [a for a in ARCHITECTURES
+            if shape_for(get_config(a), "long_500k") is not None]
+    assert sorted(runs) == ["gemma3-12b", "jamba-1.5-large-398b", "rwkv6-7b"]
+
+
+def test_param_counts_match_published():
+    expect = {"smollm-135m": 0.135e9, "phi4-mini-3.8b": 3.8e9,
+              "qwen3-0.6b": 0.6e9, "gemma3-12b": 11.8e9,
+              "jamba-1.5-large-398b": 398e9,
+              "llama4-scout-17b-a16e": 109e9, "olmoe-1b-7b": 6.9e9,
+              "rwkv6-7b": 7.6e9}
+    for a, want in expect.items():
+        tot, _ = get_config(a).param_counts()
+        assert abs(tot - want) / want < 0.06, (a, tot, want)
+    _, act = get_config("llama4-scout-17b-a16e").param_counts()
+    assert abs(act - 17e9) / 17e9 < 0.06
+
+
+# -- representation sizes (paper Table 1 / Table 4) -----------------------
+
+def test_representation_sizes_equal_sax_budget():
+    """Paper Table 4 synthetic row: all techniques at 320 bits."""
+    assert float(SAX(T=960, W=32, A=1024).bits) == 320
+    assert float(SAX(T=960, W=40, A=256).bits) == 320
+    s = SSAX(T=960, W=24, L=10, A_seas=256, A_res=1024, r2_season=0.5)
+    # L*ld(A_seas) + W*ld(A_res) = 10*8 + 24*10 = 320
+    assert float(s.bits) == 320
+    t = TSAX(T=960, W=32, A_tr=32, A_res=2 ** ((320 - 5) // 32),
+             r2_trend=0.5)
+    assert float(t.bits) <= 320
+    o = OneDSAX(T=300, W=10, A_a=2 ** 5, A_s=8)
+    assert float(o.bits) == 10 * (5 + 3)
+
+
+def test_ssax_requires_wl_divides_t():
+    with pytest.raises(AssertionError):
+        SSAX(T=960, W=7, L=10, A_seas=4, A_res=4)
+
+
+# -- synthetic data ---------------------------------------------------------
+
+@pytest.mark.parametrize("target", [0.1, 0.5, 0.9])
+def test_season_strength_control(target):
+    X = season_dataset(n=64, T=480, L=10, strength=target, seed=1)
+    s = np.asarray(season_strength(jnp.asarray(X), 10))
+    assert abs(s.mean() - target) < 0.005          # paper's +-0.5pp
+    assert np.allclose(X.mean(-1), 0, atol=1e-4)
+    assert np.allclose(X.std(-1), 1, atol=1e-3)
+
+
+@pytest.mark.parametrize("target", [0.2, 0.7])
+def test_trend_strength_control(target):
+    X = trend_dataset(n=64, T=480, strength=target, seed=2)
+    s = np.asarray(trend_strength(jnp.asarray(X)))
+    assert abs(s.mean() - target) < 0.005
+
+
+def test_metering_like_daily_strength():
+    X = metering_like(n=256, days=20)
+    s = np.asarray(season_strength(jnp.asarray(X), 48))
+    assert 0.1 < s.mean() < 0.3           # paper: 18.3% mean daily season
+
+
+def test_economy_like_is_trendy():
+    X = economy_like(n=256)
+    s = np.asarray(trend_strength(jnp.asarray(X)))
+    assert s.mean() > 0.3

@@ -1,0 +1,93 @@
+"""Unit tests for the SAX substrate: breakpoints, PAA, MINDIST tables,
+and the paper's worked example (Fig. 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.breakpoints import (
+    discretize, gaussian_breakpoints, lower_bounds, uniform_breakpoints,
+    upper_bounds)
+from repro.core.paa import paa, paa_distance
+from repro.core.sax import SAX, cell_table
+
+
+def test_gaussian_breakpoints_equiprobable():
+    bp = np.asarray(gaussian_breakpoints(4, 1.0))
+    # A=4 quartile breakpoints of N(0,1): -0.6745, 0, 0.6745
+    assert np.allclose(bp, [-0.6745, 0.0, 0.6745], atol=1e-3)
+
+
+def test_gaussian_breakpoints_scaled():
+    bp1 = np.asarray(gaussian_breakpoints(8, 1.0))
+    bp2 = np.asarray(gaussian_breakpoints(8, 0.5))
+    assert np.allclose(bp2, 0.5 * bp1, atol=1e-6)
+
+
+def test_uniform_breakpoints():
+    bp = np.asarray(uniform_breakpoints(4, -1.0, 1.0))
+    assert np.allclose(bp, [-0.5, 0.0, 0.5])
+
+
+def test_discretize_bins():
+    bp = jnp.asarray([-0.5, 0.5])
+    x = jnp.asarray([-1.0, 0.0, 1.0, -0.5, 0.5])
+    syms = np.asarray(discretize(x, bp))
+    # [b_{a-1}, b_a) intervals, 0-based symbols
+    assert list(syms) == [0, 1, 2, 1, 2]
+
+
+def test_paa_means():
+    x = jnp.arange(12.0)
+    assert np.allclose(np.asarray(paa(x, 3)), [1.5, 5.5, 9.5])
+
+
+def test_paa_distance_lower_bounds_euclid():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(50, 64)).astype(np.float32)
+    b = rng.normal(size=(50, 64)).astype(np.float32)
+    d_ed = np.sqrt(np.sum((a - b) ** 2, -1))
+    d_paa = np.asarray(paa_distance(paa(jnp.asarray(a), 8),
+                                    paa(jnp.asarray(b), 8), 64))
+    assert np.all(d_paa <= d_ed + 1e-4)
+
+
+def test_cell_table_properties():
+    bp = gaussian_breakpoints(8, 1.0)
+    tab = np.asarray(cell_table(bp))
+    assert tab.shape == (8, 8)
+    assert np.allclose(tab, tab.T)
+    # adjacent symbols have distance 0 (Eq. 11)
+    for i in range(8):
+        for j in range(8):
+            if abs(i - j) <= 1:
+                assert tab[i, j] == 0.0
+            else:
+                lo, hi = min(i, j), max(i, j)
+                assert np.isclose(tab[i, j], float(bp[hi - 1] - bp[lo]))
+    assert np.all(tab >= 0)
+
+
+def test_paper_figure1_example():
+    """PAA (-0.70, -0.81, 0.08, 1.50) with A=4 breakpoints (-.67, 0, .67)
+    must encode to (a, a, c, d) = (0, 0, 2, 3)."""
+    sax = SAX(T=16, W=4, A=4)
+    paa_vals = jnp.asarray([-0.70, -0.81, 0.08, 1.50])
+    syms = np.asarray(discretize(paa_vals, sax.breakpoints))
+    assert list(syms) == [0, 0, 2, 3]
+    other = np.asarray(discretize(
+        jnp.asarray([1.72, 0.34, 1.55, 0.49]), sax.breakpoints))
+    assert list(other) == [3, 2, 3, 2]          # (d, c, d, c)
+    d = float(sax.distance(jnp.asarray(syms), jnp.asarray(other)))
+    # paper: d_SAX approx 3.02 for these two series
+    assert abs(d - 3.02) < 0.02
+
+
+def test_sax_distance_symmetry_and_identity():
+    rng = np.random.default_rng(1)
+    sax = SAX(T=128, W=16, A=16)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    s = sax.encode(x)
+    d = np.asarray(sax.pairwise_distance(s, s))
+    assert np.allclose(d, d.T, atol=1e-5)
+    assert np.allclose(np.diag(d), 0.0, atol=1e-6)

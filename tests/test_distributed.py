@@ -1,0 +1,194 @@
+"""Distributed tests run in a subprocess with 8 placeholder host devices
+(XLA device count is process-global, so the main pytest process stays at
+one device).  Covers: shard_map matching engine vs single-device oracle,
+sharded train step vs unsharded, elastic checkpoint re-shard 4->8."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_matching_equals_oracle():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.core import SSAX
+        from repro.core.distributed import encode_sharded, repr_topk_sharded
+        from repro.data.synthetic import season_dataset
+
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(AxisType.Auto,))
+        X = season_dataset(n=512, T=480, L=10, strength=0.7, seed=5)
+        ss = SSAX(T=480, W=24, L=10, A_seas=32, A_res=32, r2_season=0.7)
+        Xd = jnp.asarray(X)
+        rep = encode_sharded(ss, Xd, mesh)
+        # oracle: unsharded encode
+        rep0 = ss.encode(Xd)
+        for a, b in zip(jax.tree.leaves(rep), jax.tree.leaves(rep0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        Q = Xd[:4]
+        rq = ss.encode(Q)
+        d, idx = repr_topk_sharded(ss, rq, rep, mesh, k=16)
+        d0 = np.asarray(ss.pairwise_distance(rq, rep0))
+        for qi in range(4):
+            want = np.sort(d0[qi])[:16]
+            got = np.sort(np.asarray(d[qi]))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+            # indices point at the right rows
+            np.testing.assert_allclose(
+                np.sort(d0[qi][np.asarray(idx[qi])]), want,
+                rtol=1e-4, atol=1e-4)
+        print("sharded matching OK")
+    """)
+    assert "sharded matching OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType, NamedSharding
+        from repro.configs import get_config, reduced
+        from repro.models.transformer import RunConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.sharding.specs import ShardingRules
+        from repro.train.state import init_train_state, train_state_pspecs
+        from repro.train.step import make_train_step
+        from repro.launch.inputs import to_named, train_batch_specs
+
+        cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b")),
+                                  compute_dtype="float32",
+                                  vocab_pad_multiple=64)
+        rc = RunConfig(q_chunk=8, kv_chunk=8, loss_chunk=8)
+        rng = np.random.default_rng(0)
+        t = jnp.asarray(rng.integers(0, 64, (8, 17)), jnp.int32)
+        batch = {"tokens": t[:, :-1], "labels": t[:, 1:]}
+
+        # single device
+        step0 = jax.jit(make_train_step(cfg, None, rc, AdamWConfig(lr=1e-3)))
+        s0 = init_train_state(cfg, jax.random.PRNGKey(0))
+        s0n, m0 = step0(s0, batch)
+
+        # 4x2 mesh
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        rules = ShardingRules.for_mesh(mesh)
+        ps = train_state_pspecs(cfg, rules)
+        stepd = jax.jit(make_train_step(cfg, rules, rc, AdamWConfig(lr=1e-3)),
+                        in_shardings=(to_named(rules, ps), None))
+        s1 = init_train_state(cfg, jax.random.PRNGKey(0))
+        s1n, m1 = stepd(s1, batch)
+        assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-3, \
+            (float(m0["loss"]), float(m1["loss"]))
+        for a, b in zip(jax.tree.leaves(s0n["params"]),
+                        jax.tree.leaves(s1n["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+        print("sharded train OK", float(m0["loss"]), float(m1["loss"]))
+    """)
+    assert "sharded train OK" in out
+
+
+def test_elastic_reshard_4_to_8():
+    out = _run("""
+        import dataclasses, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.configs import get_config, reduced
+        from repro.checkpoint.ckpt import save_checkpoint
+        from repro.checkpoint.elastic import reshard_checkpoint
+        from repro.train.state import init_train_state, abstract_train_state
+
+        cfg = dataclasses.replace(reduced(get_config("smollm-135m")),
+                                  vocab_pad_multiple=64)
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        d = tempfile.mkdtemp()
+        save_checkpoint(d, 42, state)
+
+        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        restored, manifest = reshard_checkpoint(
+            d, cfg, mesh4, mesh8, abstract_train_state(cfg))
+        assert manifest["step"] == 42
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # model-axis change must be rejected
+        mesh_bad = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+        try:
+            reshard_checkpoint(d, cfg, mesh4, mesh_bad,
+                               abstract_train_state(cfg))
+            raise SystemExit("should have raised")
+        except ValueError:
+            pass
+        print("elastic OK")
+    """)
+    assert "elastic OK" in out
+
+
+def test_dryrun_cell_on_debug_mesh():
+    """The dry-run path itself (lower+compile+parse) on an 8-device mesh."""
+    out = _run("""
+        import json
+        import repro.launch.dryrun as dr
+        import jax
+        from jax.sharding import AxisType
+
+        # monkeypatch the production mesh to the 8 fake devices
+        import repro.launch.mesh as mesh_mod
+        def small_mesh(*, multi_pod=False):
+            return jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+        dr.make_production_mesh = small_mesh
+        rec = dr.dryrun_cell("smollm-135m", "train_4k", multi_pod=False)
+        assert rec["status"] == "ok", rec
+        assert rec["hlo_flops_per_dev"] > 0
+        assert rec["collectives"]["count"] > 0
+        print("dryrun cell OK",
+              rec["hlo_flops_per_dev"], rec["collectives"]["all-reduce"])
+    """)
+    assert "dryrun cell OK" in out
+
+
+def test_dryrun_optimized_serve_on_debug_mesh():
+    """The §Perf OPTIMIZED_SERVE configuration must keep compiling."""
+    out = _run("""
+        import jax
+        from jax.sharding import AxisType
+        import repro.launch.dryrun as dr
+        import repro.launch.mesh as mesh_mod
+
+        def small_mesh(*, multi_pod=False):
+            return jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+        dr.make_production_mesh = small_mesh
+        kw = dict(dr.OPTIMIZED_SERVE)
+        kw["rules_overrides"] = dict(kw["rules_overrides"], moe_groups=4)
+        rec = dr.dryrun_cell("olmoe-1b-7b", "decode_32k", multi_pod=False,
+                             variant="serve_optimized", **kw)
+        assert rec["status"] == "ok", rec
+        rec2 = dr.dryrun_cell("gemma3-12b", "decode_32k", multi_pod=False,
+                              variant="serve_optimized", **kw)
+        assert rec2["status"] == "ok", rec2
+        print("optimized serve OK")
+    """)
+    assert "optimized serve OK" in out

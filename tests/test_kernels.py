@@ -1,0 +1,104 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret mode on CPU)
+against its pure-jnp oracle across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.euclid import euclid_pallas
+from repro.kernels.paa import paa_pallas
+from repro.kernels.sax_dist import sax_dist_pallas
+from repro.kernels.ssax_dist import ssax_dist_pallas
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("N", [256, 512, 1024])
+@pytest.mark.parametrize("W,A", [(8, 4), (48, 64), (96, 256), (32, 1024)])
+def test_sax_dist_shapes(N, W, A):
+    # (32, 1024) exercises the paper's 4 MB LUT limit: the (W, A) table is
+    # 128 KB here but the full A^2 cell table upstream is 4 MB — the VMEM
+    # budget case from DESIGN.md §3.
+    syms = jnp.asarray(RNG.integers(0, A, size=(N, W)), jnp.int32)
+    table = jnp.asarray(RNG.normal(size=(W, A)) ** 2, jnp.float32)
+    out = sax_dist_pallas(syms, table, interpret=True)
+    want = ref.sax_dist_ref(syms, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("N", [128, 384])
+@pytest.mark.parametrize("L,W,As,Ar", [(8, 16, 16, 8), (10, 48, 64, 32)])
+def test_ssax_dist_shapes(N, L, W, As, Ar):
+    seas = jnp.asarray(RNG.integers(0, As, size=(N, L)), jnp.int32)
+    res = jnp.asarray(RNG.integers(0, Ar, size=(N, W)), jnp.int32)
+    t1 = jnp.asarray(RNG.normal(size=(L, As)), jnp.float32)
+    t2 = jnp.asarray(RNG.normal(size=(L, As)), jnp.float32)
+    u1 = jnp.asarray(RNG.normal(size=(W, Ar)), jnp.float32)
+    u2 = jnp.asarray(RNG.normal(size=(W, Ar)), jnp.float32)
+    out = ssax_dist_pallas(seas, res, t1, t2, u1, u2, interpret=True)
+    want = ref.ssax_dist_ref(seas, res, t1, t2, u1, u2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,T,W", [(128, 512, 32), (256, 960, 48),
+                                   (128, 1920, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paa_shapes_dtypes(N, T, W, dtype):
+    x = jnp.asarray(RNG.normal(size=(N, T)), dtype)
+    out = paa_pallas(x, W, interpret=True)
+    want = ref.paa_ref(x.astype(jnp.float32), W)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("N,T", [(128, 512), (256, 2048), (128, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_euclid_shapes_dtypes(N, T, dtype):
+    x = jnp.asarray(RNG.normal(size=(N, T)), dtype)
+    q = jnp.asarray(RNG.normal(size=(T,)), dtype)
+    out = euclid_pallas(x, q, interpret=True)
+    want = ref.euclid_ref(x.astype(jnp.float32), q.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_wrappers_pad_ragged():
+    """Public ops pad ragged candidate counts transparently."""
+    N, W, A = 300, 16, 32          # not a multiple of any block
+    syms = jnp.asarray(RNG.integers(0, A, size=(N, W)), jnp.int32)
+    table = jnp.asarray(RNG.normal(size=(W, A)) ** 2, jnp.float32)
+    out = ops.sax_dist(syms, table)
+    want = ref.sax_dist_ref(syms, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    x = jnp.asarray(RNG.normal(size=(300, 960)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.paa_segments(x, 48)),
+        np.asarray(ref.paa_ref(x, 48)), rtol=1e-5, atol=1e-5)
+    q = jnp.asarray(RNG.normal(size=(960,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.euclid_batch(x, q)),
+        np.asarray(ref.euclid_ref(x, q)), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_matches_encoder_distance():
+    """End-to-end: kernel sweep == SSAX class distances on real data."""
+    from repro.core import SSAX
+    from repro.data.synthetic import season_dataset
+    X = season_dataset(n=256, T=480, L=10, strength=0.7, seed=3)
+    ss = SSAX(T=480, W=24, L=10, A_seas=64, A_res=32, r2_season=0.7)
+    s_syms, r_syms = ss.encode(jnp.asarray(X))
+    tabs = ops.make_ssax_query_tables(s_syms[0], r_syms[0],
+                                      ss.b_seas, ss.b_res)
+    d2 = np.asarray(ops.ssax_dist(s_syms, r_syms, *tabs))
+    d_class = np.asarray(ss.pairwise_distance(
+        (s_syms[:1], r_syms[:1]), (s_syms, r_syms)))[0]
+    scale = 480 / (24 * 10)
+    np.testing.assert_allclose(np.sqrt(d2 * scale), d_class,
+                               rtol=1e-4, atol=1e-4)

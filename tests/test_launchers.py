@@ -1,0 +1,49 @@
+"""Entry-point smoke tests: every launcher runs end-to-end in a
+subprocess (reduced scale) — the CLIs are part of the deployable surface."""
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, extra_env=None, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if extra_env:
+        env.update(extra_env)
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_train_launcher(tmp_path):
+    out = _run(["-m", "repro.launch.train", "--arch", "qwen3-0.6b",
+                "--steps", "12", "--batch", "2", "--seq", "32",
+                "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"])
+    assert "final loss" in out
+    assert os.path.exists(os.path.join(str(tmp_path), "LATEST"))
+
+
+def test_serve_launcher():
+    out = _run(["-m", "repro.launch.serve", "--requests", "2",
+                "--max-new", "4", "--d-model", "64"])
+    assert "tok/s" in out
+
+
+def test_match_launcher():
+    out = _run(["-m", "repro.launch.match", "--n", "4000", "--queries",
+                "2", "--technique", "ssax", "--T", "480"],
+               extra_env={"XLA_FLAGS":
+                          "--xla_force_host_platform_device_count=4"})
+    assert "exact hits: 2/2" in out
+
+
+def test_dryrun_launcher_single_cell(tmp_path):
+    out = _run(["-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+                "--shape", "decode_32k", "--multi-pod", "single",
+                "--out", str(tmp_path / "d.json")])
+    assert "1 ok" in out

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) for the system's central invariant:
+every representation distance LOWER-BOUNDS the Euclidean distance
+(Appendix A.1-A.5) — on arbitrary normalized series, arbitrary alphabet
+sizes, arbitrary component strengths.  Also the chain
+d_sSAX <= d_sPAA <= d_ED and d_tSAX <= d_tPAA(features) <= d_ED."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SAX, SSAX, TSAX, znormalize)
+from repro.core.matching import euclidean
+
+
+def _series(draw, n, T, seed):
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["walk", "noise", "season", "trend"]))
+    if kind == "walk":
+        x = np.cumsum(rng.normal(size=(n, T)), axis=1)
+    elif kind == "noise":
+        x = rng.normal(size=(n, T))
+    elif kind == "season":
+        L = 8
+        mask = rng.normal(size=(n, L))
+        x = np.tile(mask, (1, T // L)) + 0.5 * rng.normal(size=(n, T))
+    else:
+        slope = rng.normal(size=(n, 1))
+        x = slope * np.arange(T)[None, :] + rng.normal(size=(n, T))
+    return np.asarray(znormalize(jnp.asarray(x, jnp.float32)))
+
+
+TOL = 1e-2     # f32 + normalization slack on distances O(10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_sax_lower_bounds_euclidean(data):
+    T = data.draw(st.sampled_from([64, 128, 256]))
+    W = data.draw(st.sampled_from([8, 16, 32]))
+    A = data.draw(st.sampled_from([4, 16, 64, 256]))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 8, T, seed)
+    sax = SAX(T=T, W=W, A=A)
+    s = sax.encode(jnp.asarray(x))
+    d_rep = np.asarray(sax.pairwise_distance(s, s))
+    d_ed = np.sqrt(np.maximum(
+        np.sum(x**2, -1)[:, None] + np.sum(x**2, -1)[None]
+        - 2 * x @ x.T, 0))
+    assert np.all(d_rep <= d_ed + TOL), (d_rep - d_ed).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_ssax_chain_lower_bounds(data):
+    T = data.draw(st.sampled_from([64, 128, 256]))
+    L = 8
+    W = data.draw(st.sampled_from([4, 8]))
+    A_s = data.draw(st.sampled_from([4, 16, 64]))
+    A_r = data.draw(st.sampled_from([4, 16, 64]))
+    r2 = data.draw(st.floats(0.05, 0.95))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 8, T, seed)
+    ss = SSAX(T=T, W=W, L=L, A_seas=A_s, A_res=A_r, r2_season=r2)
+    rep = ss.encode(jnp.asarray(x))
+    feats = ss.features(jnp.asarray(x))
+    d_sax = np.asarray(ss.pairwise_distance(rep, rep))
+    d_paa = np.asarray(ss.spaa_distance(
+        (feats[0][:, None], feats[1][:, None]),
+        (feats[0][None, :], feats[1][None, :])))
+    d_ed = np.sqrt(np.maximum(
+        np.sum(x**2, -1)[:, None] + np.sum(x**2, -1)[None]
+        - 2 * x @ x.T, 0))
+    # the chain: symbolic <= feature-level <= true (Appendix A.1/A.2)
+    assert np.all(d_sax <= d_paa + TOL), (d_sax - d_paa).max()
+    assert np.all(d_paa <= d_ed + TOL), (d_paa - d_ed).max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_tsax_lower_bounds(data):
+    T = data.draw(st.sampled_from([64, 128, 240]))
+    W = data.draw(st.sampled_from([8, 16]))
+    A_t = data.draw(st.sampled_from([8, 32, 128]))
+    A_r = data.draw(st.sampled_from([4, 16, 64]))
+    r2 = data.draw(st.floats(0.05, 0.95))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 8, T, seed)
+    ts = TSAX(T=T, W=W, A_tr=A_t, A_res=A_r, r2_trend=r2)
+    rep = ts.encode(jnp.asarray(x))
+    d_rep = np.asarray(ts.pairwise_distance(rep, rep))
+    d_ed = np.sqrt(np.maximum(
+        np.sum(x**2, -1)[:, None] + np.sum(x**2, -1)[None]
+        - 2 * x @ x.T, 0))
+    assert np.all(d_rep <= d_ed + TOL), (d_rep - d_ed).max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_phi_bounded_by_phi_max(data):
+    """Eq. 29: |phi| <= phi_max for any normalized series."""
+    T = data.draw(st.sampled_from([32, 64, 128]))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 16, T, seed)
+    ts = TSAX(T=T, W=8, A_tr=16, A_res=16)
+    phi, _ = ts.features(jnp.asarray(x))
+    assert np.all(np.abs(np.asarray(phi)) <= ts.phi_max + 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_trend_residual_invariants(data):
+    """Eqs. 23/24: residual sum == 0 and trend-residual orthogonality."""
+    from repro.core.tsax import remove_trend
+    T = data.draw(st.sampled_from([32, 64, 128]))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 8, T, seed)
+    res, t1, t2 = remove_trend(jnp.asarray(x))
+    res = np.asarray(res)
+    s = np.arange(T)
+    tr = np.asarray(t1)[:, None] + np.asarray(t2)[:, None] * s[None]
+    assert np.allclose(res.sum(-1), 0.0, atol=1e-3)
+    assert np.allclose((tr * res).sum(-1), 0.0, atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_theta_interdependence_eq25(data):
+    """Eq. 25: theta2 == -2 theta1 / (T-1) on normalized series."""
+    from repro.core.tsax import trend_features
+    T = data.draw(st.sampled_from([32, 64, 128]))
+    seed = data.draw(st.integers(0, 2**16))
+    x = _series(data.draw, 8, T, seed)
+    t1, t2 = trend_features(jnp.asarray(x))
+    assert np.allclose(np.asarray(t2),
+                       -2.0 * np.asarray(t1) / (T - 1), atol=1e-4)

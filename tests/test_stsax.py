@@ -1,0 +1,89 @@
+"""Property + behaviour tests for stSAX (the paper's future-work
+extension: combined season+trend awareness, core/stsax.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SAX, SSAX, TSAX, znormalize
+from repro.core.matching import pairwise_euclidean, tightness_of_lower_bound
+from repro.core.stsax import STSAX
+from repro.data.synthetic import _znorm_np, random_walk
+
+
+def season_trend_dataset(n=200, T=960, L=8, s_seas=0.4, s_tr=0.4, seed=0):
+    """Series with BOTH a season and a trend of controlled strengths."""
+    rng = np.random.default_rng(seed)
+    base = _znorm_np(random_walk(rng, n, T))
+    mask = rng.normal(size=(n, L)).astype(np.float32)
+    mask -= mask.mean(1, keepdims=True)
+    seas = _znorm_np(np.tile(mask, (1, T // L)))
+    t = np.arange(T, dtype=np.float32)
+    tc = (t - t.mean()) / t.std()
+    tr = np.sign(rng.normal(size=(n, 1))).astype(np.float32) * tc[None]
+    noise = max(0.0, 1 - s_seas - s_tr)
+    x = (np.sqrt(s_seas) * seas + np.sqrt(s_tr) * tr
+         + np.sqrt(noise) * base)
+    return _znorm_np(x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_stsax_lower_bounds_euclidean(data):
+    T = data.draw(st.sampled_from([64, 128, 256]))
+    L = 8
+    W = data.draw(st.sampled_from([4, 8]))
+    A_t = data.draw(st.sampled_from([8, 64]))
+    A_s = data.draw(st.sampled_from([4, 32]))
+    A_r = data.draw(st.sampled_from([4, 32]))
+    s_seas = data.draw(st.floats(0.05, 0.6))
+    s_tr = data.draw(st.floats(0.05, 0.35))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    x = season_trend_dataset(12, T, L, s_seas, s_tr, seed)
+    stx = STSAX(T=T, W=W, L=L, A_tr=A_t, A_seas=A_s, A_res=A_r,
+                r2_trend=s_tr, r2_season=s_seas / max(1 - s_tr, 1e-6))
+    rep = stx.encode(jnp.asarray(x))
+    d_rep = np.asarray(stx.pairwise_distance(rep, rep))
+    d_ed = np.asarray(pairwise_euclidean(jnp.asarray(x), jnp.asarray(x)))
+    assert np.all(d_rep <= d_ed + 1e-2), (d_rep - d_ed).max()
+
+
+def test_stsax_beats_single_component_techniques():
+    """On data with BOTH components, stSAX should out-bound SAX, sSAX and
+    tSAX at a comparable representation budget — the future-work claim."""
+    X = season_trend_dataset(300, 960, 8, s_seas=0.45, s_tr=0.35, seed=7)
+    Q, D = X[:20], X[20:]
+    ed = np.asarray(pairwise_euclidean(jnp.asarray(Q), jnp.asarray(D)))
+
+    def tlb(tech):
+        d = np.asarray(tech.pairwise_distance(
+            tech.encode(jnp.asarray(Q)), tech.encode(jnp.asarray(D))))
+        return tightness_of_lower_bound(d, ed)
+
+    sax = SAX(T=960, W=48, A=64)                             # 288 bits
+    ssax = SSAX(T=960, W=24, L=8, A_seas=64, A_res=256,      # 240 bits
+                r2_season=0.45)
+    tsax = TSAX(T=960, W=48, A_tr=64, A_res=32, r2_trend=0.35)
+    stsax = STSAX(T=960, W=24, L=8, A_tr=64, A_seas=64,      # 246 bits
+                  A_res=256, r2_trend=0.35, r2_season=0.69)
+    t_sax, t_ss, t_ts, t_st = tlb(sax), tlb(ssax), tlb(tsax), tlb(stsax)
+    assert t_st > t_sax
+    assert t_st > t_ts
+    assert t_st >= t_ss - 1e-3      # season part dominates; stSAX adds trend
+    # and the combination must beat the best single-component technique
+    assert t_st > max(t_sax, t_ss, t_ts) - 1e-3
+
+
+def test_stsax_exact_matching_correct():
+    from repro.core.matching import RawStore
+    from repro.core import exact_match
+    X = season_trend_dataset(250, 480, 8, s_seas=0.4, s_tr=0.4, seed=11)
+    Q, D = X[:5], X[5:]
+    ed = np.asarray(pairwise_euclidean(jnp.asarray(Q), jnp.asarray(D)))
+    stx = STSAX(T=480, W=12, L=8, A_tr=32, A_seas=32, A_res=64,
+                r2_trend=0.4, r2_season=0.67)
+    d = np.asarray(stx.pairwise_distance(
+        stx.encode(jnp.asarray(Q)), stx.encode(jnp.asarray(D))))
+    for qi in range(len(Q)):
+        r = exact_match(Q[qi], d[qi], RawStore.ssd(D))
+        assert r.index == int(np.argmin(ed[qi]))
