@@ -16,16 +16,17 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.core import SSAX
 from repro.core.distributed import encode_sharded, repr_topk_sharded
+from repro.core.engine import verify_candidates
 from repro.core.matching import RawStore, pairwise_euclidean
 from repro.data.synthetic import season_dataset
+from repro.launch.mesh import make_mesh_compat
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh_compat((8,), ("data",))
     print(f"mesh: {mesh.devices.size} devices on axis 'data'")
 
     N, T, L = 40_000, 960, 10
@@ -53,18 +54,20 @@ def main():
     jax.block_until_ready(dists)
     print(f"sweep + global top-32 merge: {time.perf_counter() - t0:.2f}s")
 
-    # verify survivors against the cold store
+    # verify survivors against the cold store through the batched engine
     store = RawStore.ssd(np.asarray(data))
+    res = verify_candidates(np.asarray(queries), np.asarray(idx), store)
     ed = np.asarray(pairwise_euclidean(queries, data))
     for qi in range(queries.shape[0]):
-        cand = np.asarray(idx[qi])
-        rows = store.fetch(cand)
-        d = np.sqrt(np.sum((rows - np.asarray(queries[qi])[None]) ** 2, -1))
-        best = cand[int(np.argmin(d))]
+        best = int(res.indices[qi, 0])
         truth = int(np.argmin(ed[qi]))
         print(f"  query {qi}: best candidate #{best} "
               f"(true NN #{truth}, hit={best == truth}, "
-              f"verified {len(cand)}/{data.shape[0]} series)")
+              f"verified {int(res.raw_accesses[qi])}/{data.shape[0]} "
+              f"series)")
+    print(f"  one batched fetch: {res.store_fetches} seek(s), "
+          f"{res.store_accesses} rows, modeled ssd I/O "
+          f"{res.io_seconds * 1e3:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -15,3 +15,5 @@ from repro.core.stsax import STSAX  # noqa: F401
 from repro.core.index import SSaxIndex  # noqa: F401
 from repro.core.matching import (  # noqa: F401
     exact_match, approximate_match, euclidean)
+from repro.core.engine import (  # noqa: F401
+    MatchEngine, TopKResult, topk_verify, verify_candidates)

@@ -11,7 +11,11 @@ are replicated.  One ``shard_map`` pass per stage:
      candidates per shard (collective volume independent of N — the
      property that scales to 1000+ nodes, DESIGN.md §3).
   3. Raw verification of the surviving candidates against the cold store
-     (host side, via ``matching.exact_match`` semantics).
+     via the batched k-NN engine (``core.engine.MatchEngine``):
+     ``repr_topk_sharded`` produces the candidate frontier for
+     approximate top-k, ``repr_distances_sharded`` the full lower-bound
+     matrix for exact top-k — ``make_engine_service`` wires both into an
+     engine whose raw verification is one batched fetch per round.
 
 The helpers take any encoder with ``encode`` + ``pairwise_distance`` —
 SAX, sSAX, tSAX and 1d-SAX all plug in.
@@ -123,3 +127,34 @@ def make_matching_service(encoder, dataset, mesh: Mesh, *, k: int = 64,
                                  pairwise=pairwise)
 
     return rep_data, query_fn
+
+
+def make_engine_service(encoder, dataset, mesh: Mesh, store, *,
+                        batch_size: int = 64, verify: str = "auto",
+                        pairwise: Callable | None = None):
+    """Sharded representation sweep feeding the batched k-NN engine.
+
+    Encodes the dataset sharded over the mesh, then returns a
+    ``core.engine.MatchEngine`` whose representation distances come from
+    ``repr_distances_sharded`` (exact top-k) and whose approximate
+    candidate frontier comes from ``repr_topk_sharded`` — collective
+    volume O(Q*k*shards) — before raw verification on the host store.
+    """
+    from repro.core.engine import MatchEngine
+
+    rep_data = encode_sharded(encoder, dataset, mesh)
+
+    def repr_fn(queries_raw):
+        rep_q = encoder.encode(jnp.asarray(queries_raw))
+        return repr_distances_sharded(encoder, rep_q, rep_data, mesh,
+                                      pairwise=pairwise)
+
+    def cand_fn(queries_raw, k):
+        rep_q = encoder.encode(jnp.asarray(queries_raw))
+        _, idx = repr_topk_sharded(encoder, rep_q, rep_data, mesh, k=k,
+                                   pairwise=pairwise)
+        return idx
+
+    return MatchEngine(encoder, store, batch_size=batch_size,
+                       verify=verify, pairwise=pairwise, rep=rep_data,
+                       repr_fn=repr_fn, cand_fn=cand_fn)

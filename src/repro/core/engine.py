@@ -1,0 +1,355 @@
+"""Unified batched k-NN matching engine.
+
+``MatchEngine`` answers batched multi-query **top-k** matching — exact
+(lower-bound pruned scan) and approximate (representation top-k then
+verify) — over any encoder with ``encode`` + ``pairwise_distance``
+(SAX, sSAX, tSAX, stSAX, 1d-SAX) and a ``RawStore`` for raw
+verification.
+
+API
+---
+::
+
+    engine = MatchEngine(encoder, RawStore.ssd(D))
+    res = engine.topk(queries, k=32)                  # exact k-NN
+    res = engine.topk(queries, k=32, exact=False)     # approximate
+    res = engine.verify_candidates(queries, cand_idx) # external candidates
+
+``res`` is a :class:`TopKResult`: per-query ``indices``/``distances``
+(Q, k), per-query ``raw_accesses`` / ``pruned_fraction``, and the
+store-level deduplicated access count + modeled I/O seconds.
+``verify_candidates`` is the hook for distributed serving:
+``core.distributed.repr_topk_sharded`` produces the candidate frontier,
+the engine verifies it against raw storage
+(``core.distributed.make_engine_service`` wires the two together).
+
+Batched-verification correctness argument
+-----------------------------------------
+The paper's sequential exact scan visits candidates in representation-
+distance order and stops when best-so-far ED <= the next representation
+distance; since every representation distance lower-bounds d_ED
+(Appendix A.1–A.5), no pruned candidate can be the NN.  The engine
+generalizes this to top-k and to fixed-size batches:
+
+* Per query it maintains a best-k *frontier* (the k smallest verified
+  true distances so far, with their indices).  The pruning threshold is
+  the k-th best frontier distance — ``inf`` until k candidates are
+  verified, so the first ceil(k / batch) batches are never pruned.
+* Candidates are consumed in representation-distance order in batches
+  of ``batch_size``.  Before verifying a batch, the engine checks
+  ``kth_best <= repr_dist(next unseen)``; because the candidate order is
+  sorted, that single comparison lower-bounds *every* unseen candidate,
+  so stopping there cannot drop a true top-k member (any unseen c has
+  d_ED(q, c) >= d_repr(q, c) >= repr_dist(next) >= kth_best).
+* Therefore the surviving frontier equals the sequential scan's result
+  exactly; batching only over-fetches by at most one batch per query
+  (the batch in flight when the threshold crossed).
+
+Verification itself is batched on device: the surviving candidate rows
+of *all* active queries are fetched from the store in one call (one
+modeled seek per round instead of one per row) and distanced via the
+Pallas kernel ``kernels.euclid.euclid_pallas`` — natively on TPU,
+``interpret=True`` elsewhere.  The frontier merge uses
+``jax.lax.top_k`` on device and a numpy lexicographic sort
+(distance, index) on host; the host path is bit-identical to a numpy
+brute-force scan because each row's distance is reduced over the same T
+values in the same order regardless of batch shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.matching import RawStore
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TopKResult:
+    """Batched top-k matches.  Rows padded with index -1 / distance inf
+    when fewer than k candidates exist."""
+
+    indices: np.ndarray          # (Q, k) int64 dataset rows, best first
+    distances: np.ndarray        # (Q, k) true d_ED (verifier dtype)
+    raw_accesses: np.ndarray     # (Q,) candidates verified per query
+    pruned_fraction: np.ndarray  # (Q,) 1 - raw_accesses / N
+    store_accesses: int          # deduplicated physical row reads
+    store_fetches: int           # batched fetch() calls (modeled seeks)
+    io_seconds: float            # batch-accounted modeled I/O
+
+
+# ---------------------------------------------------------------------------
+# Verifiers: (union_rows (U, T), queries (Qa, T), gather (Qa, B)) -> (Qa, B)
+# ---------------------------------------------------------------------------
+
+def numpy_verifier(rows: np.ndarray, qs: np.ndarray,
+                   gather: np.ndarray) -> np.ndarray:
+    """Host verification, bit-identical to a numpy brute-force scan (each
+    row's sum runs over the same contiguous T values)."""
+    per_q = rows[gather]                             # (Qa, B, T)
+    d2 = np.sum(np.square(per_q - qs[:, None, :]), axis=-1)
+    return np.sqrt(d2)
+
+
+def kernel_verifier(rows: np.ndarray, qs: np.ndarray,
+                    gather: np.ndarray) -> np.ndarray:
+    """Device verification through the Pallas euclid kernel (interpret
+    mode off-TPU).  Each query is distanced against its own candidate
+    rows only — one kernel launch per active query, all with the same
+    (B, T) shape so repeated rounds hit the jit cache."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    per_q = rows[gather]                             # (Qa, B, T)
+    out = np.empty(gather.shape, np.float32)
+    for r in range(qs.shape[0]):
+        d2 = np.asarray(ops.euclid_batch(
+            jnp.asarray(per_q[r], jnp.float32),
+            jnp.asarray(qs[r], jnp.float32)))
+        out[r] = np.sqrt(np.maximum(d2, 0.0))
+    return out
+
+
+def make_verifier(mode: str) -> Callable:
+    if mode == "numpy":
+        return numpy_verifier
+    if mode == "kernel":
+        return kernel_verifier
+    if mode == "auto":
+        import jax
+        return kernel_verifier if jax.default_backend() == "tpu" \
+            else numpy_verifier
+    raise ValueError(f"unknown verify mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Frontier merge: keep the k smallest of (frontier ++ batch) per query
+# ---------------------------------------------------------------------------
+
+def merge_topk_numpy(all_d: np.ndarray, all_i: np.ndarray, k: int):
+    """(Qa, M) -> (Qa, k); ties broken by smaller dataset index, matching
+    a stable argsort of the full distance array."""
+    n_big = np.int64(np.iinfo(np.int64).max)
+    tie = np.where(all_i < 0, n_big, all_i)
+    out_d = np.empty((all_d.shape[0], k), all_d.dtype)
+    out_i = np.empty((all_i.shape[0], k), np.int64)
+    for r in range(all_d.shape[0]):
+        sel = np.lexsort((tie[r], all_d[r]))[:k]
+        out_d[r] = all_d[r][sel]
+        out_i[r] = all_i[r][sel]
+    return out_d, out_i
+
+
+def merge_topk_device(all_d: np.ndarray, all_i: np.ndarray, k: int):
+    """jax.lax.top_k merge.  Ties break by array position rather than
+    dataset index, so on exactly-equal distances the selection may differ
+    from the host merge — between candidates at identical true distance
+    only, never changing the distance profile."""
+    import jax
+    import jax.numpy as jnp
+    neg, pos = jax.lax.top_k(-jnp.asarray(all_d), k)
+    idx = jnp.take_along_axis(jnp.asarray(all_i), pos, axis=1)
+    return np.asarray(-neg), np.asarray(idx, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Core batched scan
+# ---------------------------------------------------------------------------
+
+def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
+                batch_size: int = 64, verifier: Callable = numpy_verifier,
+                merge: Callable = merge_topk_numpy) -> TopKResult:
+    """Exact top-k under d_ED for a query batch given lower-bounding
+    representation distances (Q, N).  See the module docstring for the
+    correctness argument."""
+    qs = np.asarray(queries_raw)        # native dtype: the host verifier
+    if qs.ndim == 1:                    # stays bit-identical to brute force
+        qs = qs[None]
+    rd = np.asarray(repr_dists)
+    if rd.ndim == 1:
+        rd = rd[None]
+    q_n, n = rd.shape
+    k = min(k, n)
+    order = np.argsort(rd, axis=1, kind="stable")
+    sorted_d = np.take_along_axis(rd, order, axis=1)
+
+    front_d = np.full((q_n, k), np.inf, np.float64)
+    front_i = np.full((q_n, k), -1, np.int64)
+    pos = np.zeros(q_n, np.int64)
+    acc = np.zeros(q_n, np.int64)
+    start_acc, start_fetch = store.accesses, store.fetches
+
+    while True:
+        nxt = sorted_d[np.arange(q_n), np.minimum(pos, n - 1)]
+        active = (pos < n) & (front_d[:, -1] > nxt)
+        if not active.any():
+            break
+        aq = np.nonzero(active)[0]
+        cand = np.full((len(aq), batch_size), -1, np.int64)
+        for r, qi in enumerate(aq):
+            c = order[qi, pos[qi]:pos[qi] + batch_size]
+            cand[r, :len(c)] = c
+        mask = cand >= 0
+        ids = np.unique(cand[mask])              # sorted
+        rows = store.fetch(ids)                  # one physical fetch/round
+        gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
+        d = verifier(rows, qs[aq], gather)
+        d = np.where(mask, d, np.inf)
+
+        new_d, new_i = merge(np.concatenate([front_d[aq], d], axis=1),
+                             np.concatenate([front_i[aq], cand], axis=1), k)
+        front_d[aq] = new_d
+        front_i[aq] = new_i
+        n_real = mask.sum(axis=1)
+        acc[aq] += n_real
+        pos[aq] += n_real
+
+    total = store.accesses - start_acc
+    n_fetch = store.fetches - start_fetch
+    return TopKResult(indices=front_i, distances=front_d,
+                      raw_accesses=acc,
+                      pruned_fraction=1.0 - acc / n,
+                      store_accesses=total, store_fetches=n_fetch,
+                      io_seconds=store.modeled_io_seconds(total, n_fetch))
+
+
+def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
+                      k: Optional[int] = None,
+                      verifier: Callable = numpy_verifier,
+                      merge: Callable = merge_topk_numpy) -> TopKResult:
+    """Approximate top-k: verify an externally supplied candidate set
+    (e.g. the sharded representation top-k) and rank by true d_ED.
+    cand_idx: (Q, C) dataset rows; -1 entries are padding."""
+    qs = np.asarray(queries_raw)
+    if qs.ndim == 1:
+        qs = qs[None]
+    cand = np.asarray(cand_idx, np.int64)
+    if cand.ndim == 1:
+        cand = cand[None]
+    q_n, c = cand.shape
+    k = c if k is None else min(k, c)
+    n = store.data.shape[0]
+    mask = cand >= 0
+    ids = np.unique(cand[mask])
+    if ids.size == 0:
+        return TopKResult(indices=np.full((q_n, k), -1, np.int64),
+                          distances=np.full((q_n, k), np.inf),
+                          raw_accesses=np.zeros(q_n, np.int64),
+                          pruned_fraction=np.ones(q_n),
+                          store_accesses=0, store_fetches=0,
+                          io_seconds=0.0)
+    start_acc, start_fetch = store.accesses, store.fetches
+    rows = store.fetch(ids)                      # one batched fetch
+    gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
+    d = verifier(rows, qs, gather)
+    d = np.where(mask, d, np.inf)
+    out_d, out_i = merge(d, cand, k)
+    total = store.accesses - start_acc
+    n_fetch = store.fetches - start_fetch
+    acc = mask.sum(axis=1)
+    return TopKResult(indices=out_i, distances=out_d, raw_accesses=acc,
+                      pruned_fraction=1.0 - acc / n,
+                      store_accesses=total, store_fetches=n_fetch,
+                      io_seconds=store.modeled_io_seconds(total, n_fetch))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class MatchEngine:
+    """Batched multi-query top-k matcher over one encoder + raw store.
+
+    Parameters
+    ----------
+    encoder:    SAX / SSAX / TSAX / STSAX / OneDSAX instance.
+    store:      RawStore over the (N, T) raw dataset.
+    batch_size: verification batch per query per round.
+    verify:     "auto" (kernel on TPU, numpy host elsewhere), "kernel"
+                (always route through euclid_pallas; interpret off-TPU),
+                or "numpy" (bit-identical to a host brute-force scan).
+    rep:        precomputed dataset representation (skips encode), e.g.
+                the sharded output of ``distributed.encode_sharded``.
+    repr_fn:    override for representation distances
+                (queries_raw -> (Q, N)); used by the sharded service.
+    cand_fn:    override for approximate candidates
+                (queries_raw, k -> (Q, k) indices).
+    """
+
+    def __init__(self, encoder, store: RawStore, *, batch_size: int = 64,
+                 verify: str = "auto", pairwise: Callable | None = None,
+                 rep=None, repr_fn: Callable | None = None,
+                 cand_fn: Callable | None = None,
+                 device_merge: bool = False):
+        self.encoder = encoder
+        self.store = store
+        self.batch_size = batch_size
+        self.verifier = make_verifier(verify)
+        self.merge = merge_topk_device if device_merge else merge_topk_numpy
+        self._pw = pairwise or encoder.pairwise_distance
+        self._repr_fn = repr_fn
+        self._cand_fn = cand_fn
+        if rep is not None or repr_fn is not None:
+            self.rep = rep
+        else:
+            import jax.numpy as jnp
+            self.rep = encoder.encode(jnp.asarray(store.data))
+
+    # -- representation sweep -------------------------------------------
+    def encode_queries(self, queries_raw):
+        import jax.numpy as jnp
+        return self.encoder.encode(jnp.asarray(queries_raw, jnp.float32))
+
+    def repr_distances(self, queries_raw) -> np.ndarray:
+        """(Q, N) lower-bounding representation distances."""
+        if self._repr_fn is not None:
+            return np.asarray(self._repr_fn(queries_raw))
+        return np.asarray(self._pw(self.encode_queries(queries_raw),
+                                   self.rep))
+
+    def candidates(self, queries_raw, k: int) -> np.ndarray:
+        """(Q, k) approximate candidates by representation distance."""
+        if self._cand_fn is not None:
+            return np.asarray(self._cand_fn(queries_raw, k))
+        rd = self.repr_distances(queries_raw)
+        k = min(k, rd.shape[1])
+        part = np.argpartition(rd, k - 1, axis=1)[:, :k]
+        part_d = np.take_along_axis(rd, part, axis=1)
+        return np.take_along_axis(part, np.argsort(part_d, axis=1,
+                                                   kind="stable"), axis=1)
+
+    # -- matching --------------------------------------------------------
+    def topk(self, queries_raw, k: int = 1, *, exact: bool = True,
+             batch_size: Optional[int] = None,
+             expand: int = 4) -> TopKResult:
+        """Top-k matches for a (Q, T) query batch (or a single (T,) query).
+
+        exact=True:  pruned scan, provably identical to brute force.
+        exact=False: verify the top ``k * expand`` representation
+                     candidates only (the paper's approximate matching,
+                     generalized to k-NN).
+        """
+        qs = np.asarray(queries_raw)
+        if qs.ndim == 1:
+            qs = qs[None]
+        if exact:
+            rd = self.repr_distances(qs)
+            return topk_verify(qs, rd, self.store, k=k,
+                               batch_size=batch_size or self.batch_size,
+                               verifier=self.verifier, merge=self.merge)
+        cand = self.candidates(qs, k * max(expand, 1))
+        return verify_candidates(qs, cand, self.store, k=k,
+                                 verifier=self.verifier, merge=self.merge)
+
+    def verify_candidates(self, queries_raw, cand_idx,
+                          k: Optional[int] = None) -> TopKResult:
+        """Rank an external candidate frontier by true d_ED (one batched
+        raw fetch)."""
+        return verify_candidates(queries_raw, cand_idx, self.store, k=k,
+                                 verifier=self.verifier, merge=self.merge)

@@ -195,14 +195,16 @@ class SSaxIndex:
                 # paper's d_sPAA, Table 2 — tighter than any symbolic or
                 # bbox bound) filters the leaf before touching raw storage
                 mlb = self._member_lb(q, node.ids)
-                order = np.argsort(mlb)
-                for j0 in order:
-                    if mlb[j0] >= best_d:
-                        break
-                    row = store.fetch(node.ids[j0:j0 + 1])
-                    d = float(np.sqrt(np.sum((row[0] - q_raw) ** 2)))
-                    if d < best_d:
-                        best_d, best_i = d, int(node.ids[j0])
+                survive = node.ids[mlb < best_d]
+                if survive.size == 0:
+                    continue
+                # one batched fetch per leaf: a single modeled seek
+                # instead of one per surviving row
+                rows = store.fetch(survive)
+                d = np.sqrt(np.sum((rows - q_raw[None]) ** 2, axis=-1))
+                j = int(np.argmin(d))
+                if d[j] < best_d:
+                    best_d, best_i = float(d[j]), int(survive[j])
                 continue
             for child in node.children.values():
                 heapq.heappush(heap, (self._bbox_lb(q, child), counter,

@@ -1,9 +1,16 @@
 """Pallas kernel: batched Euclidean verification.
 
-d2[n] = sum_t (x[n, t] - q[t])^2 for the candidate batch that survived
-pruning.  Grid tiles (candidates x time); partial sums accumulate into the
-output block across the time-tile axis (the output BlockSpec revisits the
-same block for every j, so out_ref acts as the accumulator).
+d2[qi, n] = sum_t (x[n, t] - q[qi, t])^2 for the candidate batch that
+survived pruning, for one query or a whole query batch.  Grid tiles
+(queries x candidates x time); partial sums accumulate into the output
+block across the time-tile axis (the output BlockSpec revisits the same
+block for every j, so out_ref acts as the accumulator).
+
+Ragged shapes are handled internally: N and T are zero-padded up to block
+multiples before the kernel launches and the padded rows are sliced out
+of the result, so verification batches of any size coming out of pruning
+are legal inputs.  Zero-padding the time axis pads both ``x`` and ``q``,
+contributing exactly 0 to every distance.
 """
 
 from __future__ import annotations
@@ -17,11 +24,11 @@ BLK_T = 2048
 
 
 def _kernel(x_ref, q_ref, out_ref):
-    j = pl.program_id(1)
+    j = pl.program_id(2)
     x = x_ref[...].astype(jnp.float32)        # (BLK_N, BLK_T)
     q = q_ref[...].astype(jnp.float32)        # (1, BLK_T)
     d = x - q
-    part = jnp.sum(d * d, axis=-1)
+    part = jnp.sum(d * d, axis=-1)[None, :]   # (1, BLK_N)
 
     @pl.when(j == 0)
     def _init():
@@ -33,20 +40,36 @@ def _kernel(x_ref, q_ref, out_ref):
 
 
 def euclid_pallas(x, q, *, interpret: bool = False):
-    """x: (N, T); q: (T,) -> (N,) f32 squared distances."""
+    """x: (N, T); q: (T,) or (Q, T) -> (N,) or (Q, N) f32 squared distances.
+
+    Accepts ragged N / T (padded internally to block multiples; padded
+    rows are masked out of the result).
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None, :]
     N, T = x.shape
+    Q = q.shape[0]
     blk_n = min(BLK_N, N)
     blk_t = min(BLK_T, T)
-    assert N % blk_n == 0 and T % blk_t == 0, (N, T)
-    grid = (N // blk_n, T // blk_t)
-    return pl.pallas_call(
+    pad_n = (-N) % blk_n
+    pad_t = (-T) % blk_t
+    if pad_n or pad_t:
+        x = jnp.pad(x, ((0, pad_n), (0, pad_t)))
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t)))
+    np_, tp = N + pad_n, T + pad_t
+    grid = (Q, np_ // blk_n, tp // blk_t)
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((blk_n, blk_t), lambda i, j: (i, j)),
-            pl.BlockSpec((1, blk_t), lambda i, j: (0, j)),
+            pl.BlockSpec((blk_n, blk_t), lambda qi, i, j: (i, j)),
+            pl.BlockSpec((1, blk_t), lambda qi, i, j: (qi, j)),
         ],
-        out_specs=pl.BlockSpec((blk_n,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        out_specs=pl.BlockSpec((1, blk_n), lambda qi, i, j: (qi, i)),
+        out_shape=jax.ShapeDtypeStruct((Q, np_), jnp.float32),
         interpret=interpret,
-    )(x, q.reshape(1, T))
+    )(x, q)
+    out = out[:, :N]
+    return out[0] if squeeze else out

@@ -98,16 +98,11 @@ def paa_segments(x, n_segments: int, use_kernel: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def euclid_batch(x, q, use_kernel: bool = True):
-    """(N, T) vs (T,) -> (N,) squared Euclidean distances."""
+    """(N, T) vs (T,) or (Q, T) -> (N,) or (Q, N) squared distances.
+
+    Ragged N / T pad inside ``euclid_pallas`` itself."""
     if not use_kernel:
-        return ref.euclid_ref(x, q)
-    T = x.shape[1]
-    xp, n = _pad_rows(x, 128)
-    blk_t = 2048
-    padt = (-T) % min(blk_t, T) if T >= blk_t else 0
-    if T < blk_t:
-        padt = 0
-    if padt:
-        xp = jnp.pad(xp, ((0, 0), (0, padt)))
-        q = jnp.pad(q, (0, padt))
-    return euclid_pallas(xp, q, interpret=not _on_tpu())[:n]
+        if q.ndim == 1:
+            return ref.euclid_ref(x, q)
+        return jnp.stack([ref.euclid_ref(x, qi) for qi in q])
+    return euclid_pallas(x, q, interpret=not _on_tpu())

@@ -1,12 +1,16 @@
 """Matching-service launcher: build a sharded sSAX (or SAX/tSAX/stSAX)
-representation of a dataset and serve exact/approximate matches.
+representation of a dataset and serve batched exact / approximate top-k
+matches through the unified k-NN engine.
 
     PYTHONPATH=src python -m repro.launch.match \
-        --n 40000 --strength 0.7 --technique ssax --queries 8
+        --n 40000 --strength 0.7 --technique ssax --queries 8 --k 32
 
 Device count is taken from the environment (set XLA_FLAGS
 --xla_force_host_platform_device_count=8 for a local fleet simulation);
-the same code drives the production ("pod","data") mesh axes.
+the same code drives the production ("pod","data") mesh axes.  The
+sharded sweep produces lower bounds / candidate frontiers; raw
+verification goes through ``core.engine.MatchEngine`` (Pallas euclid
+kernel on TPU, one batched store fetch per round).
 """
 
 from __future__ import annotations
@@ -27,21 +31,22 @@ def main():
                     choices=["sax", "ssax", "tsax", "stsax"])
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="verification batch per query per round")
     ap.add_argument("--store", default="ssd", choices=["hdd", "ssd", "hbm"])
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
 
     from repro.core import SAX, SSAX, STSAX, TSAX
-    from repro.core.distributed import encode_sharded, repr_topk_sharded
+    from repro.core.distributed import make_engine_service
     from repro.core.matching import RawStore, pairwise_euclidean
     from repro.data.synthetic import season_dataset
+    from repro.launch.mesh import make_mesh_compat
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh_compat((n_dev,), ("data",))
     n = (args.n // n_dev) * n_dev
     X = season_dataset(n + args.queries, args.T, args.L, args.strength,
                        per_series_strength=True, seed=1)
@@ -60,31 +65,43 @@ def main():
 
     print(f"[match] {args.technique} over {n} x {args.T} "
           f"on {n_dev} devices")
-    t0 = time.perf_counter()
-    rep = encode_sharded(tech, jnp.asarray(D), mesh)
-    jax.block_until_ready(rep)
-    print(f"[match] encode: {time.perf_counter() - t0:.2f}s")
-
-    rep_q = tech.encode(jnp.asarray(Q))
-    t0 = time.perf_counter()
-    dists, idx = repr_topk_sharded(tech, rep_q, rep, mesh, k=args.k)
-    jax.block_until_ready(dists)
-    print(f"[match] sweep+merge: {time.perf_counter() - t0:.2f}s "
-          f"({args.queries} queries)")
-
     store = {"hdd": RawStore.hdd, "ssd": RawStore.ssd,
              "hbm": RawStore.hbm}[args.store](D)
+    t0 = time.perf_counter()
+    engine = make_engine_service(tech, jnp.asarray(D), mesh, store,
+                                 batch_size=args.batch)
+    jax.block_until_ready(engine.rep)
+    print(f"[match] encode: {time.perf_counter() - t0:.2f}s")
+
     ed = np.asarray(pairwise_euclidean(jnp.asarray(Q), jnp.asarray(D)))
-    hits = 0
-    for qi in range(args.queries):
-        cand = np.asarray(idx[qi])
-        rows = store.fetch(cand)
-        d = np.sqrt(np.sum((rows - Q[qi][None]) ** 2, -1))
-        hits += int(cand[int(np.argmin(d))] == int(np.argmin(ed[qi])))
-    io = store.modeled_io_seconds()
-    print(f"[match] exact hits: {hits}/{args.queries}; raw reads "
-          f"{store.accesses} ({store.accesses / n / args.queries:.2%} of "
-          f"dataset/query); modeled {args.store} I/O {io:.3f}s")
+    true_nn = np.argsort(ed, axis=1, kind="stable")
+
+    # exact top-k through the pruned batched scan
+    for k in (1, args.k):
+        store.reset()
+        t0 = time.perf_counter()
+        res = engine.topk(Q, k=k)
+        dt = time.perf_counter() - t0
+        hits = sum(int(np.array_equal(res.indices[qi],
+                                      true_nn[qi, :k]))
+                   for qi in range(args.queries))
+        acc = res.raw_accesses.mean()
+        print(f"[match] exact k={k}: {hits}/{args.queries} query frontiers "
+              f"== brute force; raw rows/query {acc:.0f} "
+              f"({acc / n:.2%} of dataset), {res.store_fetches} batched "
+              f"fetches; modeled {args.store} I/O {res.io_seconds:.3f}s; "
+              f"wall {dt:.2f}s")
+
+    # approximate top-k from the sharded candidate frontier
+    store.reset()
+    t0 = time.perf_counter()
+    res = engine.topk(Q, k=args.k, exact=False)
+    dt = time.perf_counter() - t0
+    hit1 = sum(int(res.indices[qi, 0] == true_nn[qi, 0])
+               for qi in range(args.queries))
+    print(f"[match] approx k={args.k}: 1-NN hit {hit1}/{args.queries}; "
+          f"raw rows/query {res.raw_accesses.mean():.0f}; modeled "
+          f"{args.store} I/O {res.io_seconds:.3f}s; wall {dt:.2f}s")
 
 
 if __name__ == "__main__":

@@ -4,24 +4,39 @@
 this module never touches jax device state.  Single pod: 16x16 = 256 chips
 ("data", "model").  Multi-pod: 2x16x16 = 512 chips ("pod", "data",
 "model") — the leading axis is the cross-pod (DCN) data-parallel axis.
+
+``jax.sharding.AxisType`` landed after jax 0.4; on older runtimes every
+mesh axis is Auto-typed already, so ``make_mesh_compat`` simply omits the
+argument there instead of crashing at import.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                  # jax >= 0.5
+    from jax.sharding import AxisType
+
+    def _axis_types(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:                   # jax 0.4: Auto is the only behavior
+    def _axis_types(n: int) -> dict:
+        return {}
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh with Auto axis types on any supported jax version."""
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_debug_mesh(n_devices: int | None = None, *, model: int = 2):
     """Small mesh over however many (fake) devices are available."""
     n = n_devices or len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_compat((n // model, model), ("data", "model"))

@@ -31,6 +31,7 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 class ServeEngine:
@@ -77,6 +78,15 @@ class ServeEngine:
         self.cache = dict(self.cache, blocks=new_blocks)
 
     def admit(self, req: Request) -> bool:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            # _splice cannot represent a prompt longer than the slot, and
+            # decode positions past max_len write out of the cache range;
+            # both used to silently produce garbage. Reject up front.
+            req.error = (f"prompt length {len(req.prompt)} + "
+                         f"max_new_tokens {req.max_new_tokens} exceeds "
+                         f"engine max_len {self.max_len}")
+            req.done = True
+            return False
         for slot in range(self.B):
             if self.active[slot] is None:
                 tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -122,8 +132,8 @@ class ServeEngine:
         pending = list(requests)
         done: list[Request] = []
         while pending or any(r is not None for r in self.active):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+            while pending and (self.admit(pending[0]) or pending[0].done):
+                pending.pop(0)          # admitted, or rejected with error
             self.step()
             for r in requests:
                 if r.done and r not in done:

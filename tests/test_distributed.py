@@ -26,13 +26,12 @@ def _run(code: str):
 def test_sharded_matching_equals_oracle():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.core import SSAX
         from repro.core.distributed import encode_sharded, repr_topk_sharded
         from repro.data.synthetic import season_dataset
+        from repro.launch.mesh import make_mesh_compat
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(AxisType.Auto,))
+        mesh = make_mesh_compat((8,), ("data",))
         X = season_dataset(n=512, T=480, L=10, strength=0.7, seed=5)
         ss = SSAX(T=480, W=24, L=10, A_seas=32, A_res=32, r2_season=0.7)
         Xd = jnp.asarray(X)
@@ -63,7 +62,7 @@ def test_sharded_train_step_matches_single_device():
     out = _run("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, NamedSharding
+        from jax.sharding import NamedSharding
         from repro.configs import get_config, reduced
         from repro.models.transformer import RunConfig
         from repro.optim.adamw import AdamWConfig
@@ -71,6 +70,7 @@ def test_sharded_train_step_matches_single_device():
         from repro.train.state import init_train_state, train_state_pspecs
         from repro.train.step import make_train_step
         from repro.launch.inputs import to_named, train_batch_specs
+        from repro.launch.mesh import make_mesh_compat
 
         cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b")),
                                   compute_dtype="float32",
@@ -86,8 +86,7 @@ def test_sharded_train_step_matches_single_device():
         s0n, m0 = step0(s0, batch)
 
         # 4x2 mesh
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         rules = ShardingRules.for_mesh(mesh)
         ps = train_state_pspecs(cfg, rules)
         stepd = jax.jit(make_train_step(cfg, rules, rc, AdamWConfig(lr=1e-3)),
@@ -109,11 +108,11 @@ def test_elastic_reshard_4_to_8():
     out = _run("""
         import dataclasses, tempfile
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         from repro.configs import get_config, reduced
         from repro.checkpoint.ckpt import save_checkpoint
         from repro.checkpoint.elastic import reshard_checkpoint
         from repro.train.state import init_train_state, abstract_train_state
+        from repro.launch.mesh import make_mesh_compat
 
         cfg = dataclasses.replace(reduced(get_config("smollm-135m")),
                                   vocab_pad_multiple=64)
@@ -121,10 +120,8 @@ def test_elastic_reshard_4_to_8():
         d = tempfile.mkdtemp()
         save_checkpoint(d, 42, state)
 
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        mesh4 = make_mesh_compat((2, 2), ("data", "model"))
+        mesh8 = make_mesh_compat((4, 2), ("data", "model"))
         restored, manifest = reshard_checkpoint(
             d, cfg, mesh4, mesh8, abstract_train_state(cfg))
         assert manifest["step"] == 42
@@ -132,8 +129,7 @@ def test_elastic_reshard_4_to_8():
                         jax.tree.leaves(restored["params"])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         # model-axis change must be rejected
-        mesh_bad = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+        mesh_bad = make_mesh_compat((2, 4), ("data", "model"))
         try:
             reshard_checkpoint(d, cfg, mesh4, mesh_bad,
                                abstract_train_state(cfg))
@@ -151,13 +147,11 @@ def test_dryrun_cell_on_debug_mesh():
         import json
         import repro.launch.dryrun as dr
         import jax
-        from jax.sharding import AxisType
 
         # monkeypatch the production mesh to the 8 fake devices
         import repro.launch.mesh as mesh_mod
         def small_mesh(*, multi_pod=False):
-            return jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            return mesh_mod.make_mesh_compat((4, 2), ("data", "model"))
         dr.make_production_mesh = small_mesh
         rec = dr.dryrun_cell("smollm-135m", "train_4k", multi_pod=False)
         assert rec["status"] == "ok", rec
@@ -173,13 +167,11 @@ def test_dryrun_optimized_serve_on_debug_mesh():
     """The §Perf OPTIMIZED_SERVE configuration must keep compiling."""
     out = _run("""
         import jax
-        from jax.sharding import AxisType
         import repro.launch.dryrun as dr
         import repro.launch.mesh as mesh_mod
 
         def small_mesh(*, multi_pod=False):
-            return jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            return mesh_mod.make_mesh_compat((4, 2), ("data", "model"))
         dr.make_production_mesh = small_mesh
         kw = dict(dr.OPTIMIZED_SERVE)
         kw["rules_overrides"] = dict(kw["rules_overrides"], moe_groups=4)

@@ -36,10 +36,13 @@ def test_serve_launcher():
 
 def test_match_launcher():
     out = _run(["-m", "repro.launch.match", "--n", "4000", "--queries",
-                "2", "--technique", "ssax", "--T", "480"],
+                "2", "--technique", "ssax", "--T", "480", "--k", "8"],
                extra_env={"XLA_FLAGS":
                           "--xla_force_host_platform_device_count=4"})
-    assert "exact hits: 2/2" in out
+    # engine-backed exact top-k is provably identical to brute force
+    assert "exact k=1: 2/2" in out
+    assert "exact k=8: 2/2" in out
+    assert "approx k=8: 1-NN hit" in out
 
 
 def test_dryrun_launcher_single_cell(tmp_path):

@@ -6,6 +6,9 @@ d_sSAX <= d_sPAA <= d_ED and d_tSAX <= d_tPAA(features) <= d_ED."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -48,6 +48,36 @@ def test_engine_matches_naive_greedy_single(arch):
     assert done[0].out_tokens == want
 
 
+def test_engine_rejects_prompt_exceeding_max_len():
+    """A prompt longer than max_len used to splice nothing into the slot
+    cache and decode garbage; it must now be rejected with an error."""
+    cfg = dataclasses.replace(reduced(get_config("smollm-135m")),
+                              compute_dtype="float32")
+    model = build_model(cfg, rc=RC)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(model, params, n_slots=2, max_len=32)
+    too_long = Request(rid=0,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           48).astype(np.int32),
+                       max_new_tokens=4)
+    ok = Request(rid=1,
+                 prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=4)
+    assert not eng.admit(too_long)
+    assert too_long.done and too_long.error is not None
+    assert too_long.out_tokens == []
+    # run() must drain a mixed batch without hanging on the rejected one
+    reject2 = Request(rid=2,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          40).astype(np.int32),
+                      max_new_tokens=4)
+    done = eng.run([reject2, ok])
+    assert len(done) == 2
+    assert reject2.error is not None and reject2.out_tokens == []
+    assert ok.error is None and len(ok.out_tokens) == 4
+
+
 def test_engine_serves_batch_of_requests():
     cfg = dataclasses.replace(reduced(get_config("smollm-135m")),
                               compute_dtype="float32")

@@ -3,6 +3,9 @@ extension: combined season+trend awareness, core/stsax.py)."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SAX, SSAX, TSAX, znormalize
