@@ -1,0 +1,97 @@
+"""Streaming-ingest benchmark for the ``repro.store.SymbolicStore``.
+
+Two measurements over a >= 10k-row Season corpus:
+
+* **Append throughput** (rows/s): ingesting one chunk into a warm corpus
+  via ``SymbolicStore.append`` (encodes only the chunk) vs the
+  full-re-encode baseline — what the pre-store ``MatchEngine`` did at
+  construction: re-encode the entire corpus whenever the dataset changed.
+  The acceptance target is incremental >= 10x faster at corpus >= 10k.
+* **Query latency under ingest**: exact top-k latency through a
+  ``SymbolicStore``-backed engine immediately after each append (the
+  ingest-while-serving path) vs on the static corpus.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_row
+from repro.core import SSAX, MatchEngine
+from repro.data.synthetic import season_dataset
+from repro.store import SymbolicStore
+
+N = 10_240            # warm corpus (acceptance regime: >= 10k rows)
+CHUNK = 512
+N_Q = 4
+T, L = 960, 10
+
+
+def _timed(fn, iters: int = 3) -> float:
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run():
+    rows = []
+    X = season_dataset(N + N_Q + 4 * CHUNK, T, L, strength=0.7,
+                       per_series_strength=True, seed=17)
+    Q, D = X[:N_Q], X[N_Q:N_Q + N]
+    pool = X[N_Q + N:]
+    ss = SSAX(T=T, W=48, L=L, A_seas=16, A_res=32, r2_season=0.7)
+
+    store = SymbolicStore.from_rows(ss, D, media="ssd")
+    engine = MatchEngine(ss, store, batch_size=256)
+
+    # -- append throughput: incremental vs full re-encode ----------------
+    chunks = iter(np.split(pool, len(pool) // CHUNK))
+    t_inc = _timed(lambda: store.append(next(chunks)), iters=3)
+    n_now = store.n
+
+    def full_reencode():
+        # the pre-store behaviour: corpus changed => encode everything
+        ss.encode(jnp.asarray(store.data))[0].block_until_ready()
+
+    t_full = _timed(full_reencode, iters=3)
+    speedup = t_full / max(t_inc, 1e-9)
+    rows.append((
+        "ingest/append_incremental",
+        f"chunk={CHUNK} corpus={n_now} rows_s={CHUNK / max(t_inc, 1e-9):.0f} "
+        f"s={t_inc:.4f}"))
+    rows.append((
+        "ingest/append_full_reencode",
+        f"corpus={n_now} rows_s={n_now / max(t_full, 1e-9):.0f} "
+        f"s={t_full:.4f}"))
+    rows.append((
+        "ingest/append_speedup",
+        f"incremental_vs_full={speedup:.1f}x (target >= 10x at >= 10k)"))
+
+    # -- query latency under ingest --------------------------------------
+    t_static = _timed(lambda: engine.topk(Q, k=8), iters=3)
+
+    def query_under_ingest():
+        store.append(next(chunks))
+        engine.topk(Q, k=8)
+
+    t_under = _timed(query_under_ingest, iters=1)
+    rows.append((
+        "ingest/query_static",
+        f"k=8 corpus={store.n} q_latency_s={t_static:.4f}"))
+    rows.append((
+        "ingest/query_under_ingest",
+        f"k=8 corpus={store.n} append+query_s={t_under:.4f}"))
+
+    for name, derived in rows:
+        emit_row(name, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

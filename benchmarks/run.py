@@ -6,6 +6,7 @@ report.  Prints ``name,us_per_call,derived`` CSV rows.
 Paper artifact map:
     entropy  -> Fig. 4      tlb      -> Fig. 5     pruning -> Fig. 6
     approx   -> Fig. 7      matching -> Table 5    kernels -> (engine)
+    ingest   -> (store subsystem: append throughput + query-under-ingest)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -16,7 +17,7 @@ import importlib
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
-          "extensions", "roofline", "perf"]
+          "extensions", "ingest", "roofline", "perf"]
 
 
 def main() -> None:

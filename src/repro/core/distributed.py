@@ -28,6 +28,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -129,32 +130,200 @@ def make_matching_service(encoder, dataset, mesh: Mesh, *, k: int = 64,
     return rep_data, query_fn
 
 
-def make_engine_service(encoder, dataset, mesh: Mesh, store, *,
+class ShardedRepSweep:
+    """Device-resident sharded representation sweep over a
+    ``repro.store.SymbolicStore`` that supports streaming ingestion.
+
+    The store owns raw rows + host representation; this class maintains a
+    device mirror of the representation sharded over the mesh data axes
+    and keeps it fresh under ``ingest``:
+
+    * ``ingest(rows)`` encodes ONLY the new chunk — one sharded
+      ``encode_sharded`` pass (padded up to a shard multiple, then
+      trimmed) — and appends rows + representation to the store.  Nothing
+      already ingested is re-encoded, ever.
+    * On the next query the device mirror is refreshed incrementally:
+      only the newly appended rows are uploaded and concatenated with the
+      resident head on device, then re-sharded in place — host->device
+      traffic per ingest is O(chunk), not O(corpus).  The largest
+      shard-divisible prefix lives sharded on the mesh; the small
+      remainder (< n_shards rows) is swept host-side and merged — so any
+      corpus size serves exact answers between ingests.
+    """
+
+    def __init__(self, encoder, mesh: Mesh, store, *,
+                 pairwise: Callable | None = None):
+        self.encoder = encoder
+        self.mesh = mesh
+        self.store = store
+        self._pw = pairwise or encoder.pairwise_distance
+        self.axes = _data_axes(mesh)
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+        self._synced_version = -1
+        self._head = 0
+        self._head_leaves = None         # device leaves, sharded
+        self._tail_rep = None            # host, < n_shards rows
+
+    # -- ingest -----------------------------------------------------------
+    def _encode_chunk(self, rows: np.ndarray):
+        """Sharded one-pass encode of a chunk (pad to shard multiple,
+        trim) — bit-identical to the unsharded row-wise encode."""
+        from repro.store.symbolic import rep_leaves
+        m = rows.shape[0]
+        pad = (-m) % self.n_shards
+        if pad:
+            rows = np.concatenate([rows, rows[-1:].repeat(pad, axis=0)])
+        rep = encode_sharded(self.encoder, jnp.asarray(rows), self.mesh)
+        leaves = tuple(np.asarray(l)[:m] for l in rep_leaves(rep))
+        return leaves if isinstance(rep, tuple) else leaves[0]
+
+    def ingest(self, rows) -> np.ndarray:
+        """Append rows to the store; only the new chunk is encoded."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None]
+        return self.store.append(rows, rep=self._encode_chunk(rows))
+
+    # -- device mirror ----------------------------------------------------
+    def _restructure(self, leaves):
+        single = not isinstance(self.store.rep_view(), tuple)
+        return leaves[0] if single else tuple(leaves)
+
+    @property
+    def _head_rep(self):
+        if self._head_leaves is None:
+            return None
+        return self._restructure(self._head_leaves)
+
+    def _sync(self):
+        if self._synced_version == self.store.version:
+            return
+        from repro.store.symbolic import rep_leaves
+        n = self.store.n
+        head = (n // self.n_shards) * self.n_shards
+        leaves = rep_leaves(self.store.rep_view())
+        if head != self._head:
+            shardings = [NamedSharding(
+                self.mesh, P(self.axes, *([None] * (l.ndim - 1))))
+                for l in leaves]
+            if self._head_leaves is not None and 0 < self._head < head:
+                # device-append: upload only the delta rows, concatenate
+                # with the resident head on device, re-shard in place —
+                # host->device traffic is O(appended), never O(corpus)
+                self._head_leaves = tuple(
+                    jax.device_put(
+                        jnp.concatenate(
+                            [old, jnp.asarray(l[self._head:head])], axis=0),
+                        sh)
+                    for old, l, sh in zip(self._head_leaves, leaves,
+                                          shardings))
+            elif head:
+                self._head_leaves = tuple(
+                    jax.device_put(l[:head], sh)
+                    for l, sh in zip(leaves, shardings))
+            else:
+                self._head_leaves = None
+        self._tail_rep = (self._restructure(
+            tuple(jnp.asarray(l[head:]) for l in leaves))
+            if head < n else None)
+        self._head = head
+        self._synced_version = self.store.version
+
+    # -- sweeps -----------------------------------------------------------
+    def repr_distances(self, queries_raw) -> np.ndarray:
+        """(Q, N) lower-bound matrix: sharded sweep over the head, host
+        sweep over the tail remainder."""
+        self._sync()
+        rep_q = self.encoder.encode(jnp.asarray(queries_raw, jnp.float32))
+        parts = []
+        if self._head_rep is not None:
+            parts.append(np.asarray(repr_distances_sharded(
+                self.encoder, rep_q, self._head_rep, self.mesh,
+                pairwise=self._pw)))
+        if self._tail_rep is not None:
+            parts.append(np.asarray(self._pw(rep_q, self._tail_rep)))
+        if not parts:
+            q_n = np.asarray(queries_raw).shape[0]
+            return np.empty((q_n, 0), np.float32)
+        return np.concatenate(parts, axis=1)
+
+    def candidates(self, queries_raw, k: int) -> np.ndarray:
+        """(Q, k) global candidate frontier: sharded local top-k + gather
+        over the head, host top-k over the tail, host merge."""
+        from repro.core.engine import merge_topk_numpy
+        self._sync()
+        rep_q = self.encoder.encode(jnp.asarray(queries_raw, jnp.float32))
+        ds, idxs = [], []
+        if self._head_rep is not None:
+            d, i = repr_topk_sharded(self.encoder, rep_q, self._head_rep,
+                                     self.mesh, k=k, pairwise=self._pw)
+            ds.append(np.asarray(d))
+            idxs.append(np.asarray(i, np.int64))
+        if self._tail_rep is not None:
+            d_tail = np.asarray(self._pw(rep_q, self._tail_rep))
+            ds.append(d_tail)
+            idxs.append(np.broadcast_to(
+                np.arange(self._head, self.store.n, dtype=np.int64),
+                d_tail.shape).copy())
+        if not ds:                       # empty corpus: no candidates yet
+            q_n = np.asarray(queries_raw).shape[0]
+            return np.empty((q_n, 0), np.int64)
+        d_all = np.concatenate(ds, axis=1)
+        i_all = np.concatenate(idxs, axis=1)
+        _, out_i = merge_topk_numpy(d_all, i_all, min(k, d_all.shape[1]))
+        return out_i
+
+
+def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
                         batch_size: int = 64, verify: str = "auto",
-                        pairwise: Callable | None = None):
+                        pairwise: Callable | None = None,
+                        media: str = "ssd"):
     """Sharded representation sweep feeding the batched k-NN engine.
 
-    Encodes the dataset sharded over the mesh, then returns a
-    ``core.engine.MatchEngine`` whose representation distances come from
-    ``repr_distances_sharded`` (exact top-k) and whose approximate
-    candidate frontier comes from ``repr_topk_sharded`` — collective
-    volume O(Q*k*shards) — before raw verification on the host store.
+    Builds (or adopts) a ``repro.store.SymbolicStore``, runs one sharded
+    encode pass over ``dataset``, and returns a ``core.engine.MatchEngine``
+    whose representation distances come from the sharded sweep
+    (``repr_distances_sharded`` for exact top-k, ``repr_topk_sharded``
+    candidates — collective volume O(Q*k*shards) — for approximate) before
+    raw verification against the store.
+
+    The engine supports ingest-while-serving: ``engine.ingest(rows)``
+    encodes only the new chunk (sharded) and re-shards the device mirror
+    without re-encoding old rows; the next query serves the new rows.
+
+    ``store``: a ``SymbolicStore`` (adopted as-is; ``dataset`` may be None
+    to serve its existing rows), a legacy ``RawStore`` (its cost model AND
+    its rows are adopted — verification accounting moves to the returned
+    ``engine.store``), or None (a fresh store with the ``media`` preset).
     """
     from repro.core.engine import MatchEngine
+    from repro.store import SymbolicStore
 
-    rep_data = encode_sharded(encoder, dataset, mesh)
+    if isinstance(store, SymbolicStore):
+        sym = store
+        if dataset is not None and sym.n:
+            raise ValueError(
+                "both a non-empty SymbolicStore and a dataset were given; "
+                "pass dataset=None to serve the store's rows, or "
+                "engine.ingest(dataset) explicitly to append them")
+    elif store is not None:              # legacy RawStore: adopt cost model
+        sym = SymbolicStore(encoder, seek_s=store.seek_s,
+                            read_bps=store.read_bps)
+        if dataset is None and store.data.shape[0]:
+            dataset = store.data         # ...and its rows
+    else:
+        sym = SymbolicStore(encoder, media=media)
 
-    def repr_fn(queries_raw):
-        rep_q = encoder.encode(jnp.asarray(queries_raw))
-        return repr_distances_sharded(encoder, rep_q, rep_data, mesh,
-                                      pairwise=pairwise)
+    sweep = ShardedRepSweep(encoder, mesh, sym, pairwise=pairwise)
+    if dataset is not None and sym.n == 0:
+        sweep.ingest(np.asarray(dataset, np.float32))
 
-    def cand_fn(queries_raw, k):
-        rep_q = encoder.encode(jnp.asarray(queries_raw))
-        _, idx = repr_topk_sharded(encoder, rep_q, rep_data, mesh, k=k,
-                                   pairwise=pairwise)
-        return idx
-
-    return MatchEngine(encoder, store, batch_size=batch_size,
-                       verify=verify, pairwise=pairwise, rep=rep_data,
-                       repr_fn=repr_fn, cand_fn=cand_fn)
+    engine = MatchEngine(encoder, sym, batch_size=batch_size,
+                         verify=verify, pairwise=pairwise,
+                         repr_fn=sweep.repr_distances,
+                         cand_fn=sweep.candidates)
+    engine.sweep = sweep
+    engine.ingest = sweep.ingest
+    return engine

@@ -37,10 +37,14 @@ generalizes this to top-k and to fixed-size batches:
   verified, so the first ceil(k / batch) batches are never pruned.
 * Candidates are consumed in representation-distance order in batches
   of ``batch_size``.  Before verifying a batch, the engine checks
-  ``kth_best <= repr_dist(next unseen)``; because the candidate order is
+  ``kth_best < repr_dist(next unseen)``; because the candidate order is
   sorted, that single comparison lower-bounds *every* unseen candidate,
   so stopping there cannot drop a true top-k member (any unseen c has
-  d_ED(q, c) >= d_repr(q, c) >= repr_dist(next) >= kth_best).
+  d_ED(q, c) >= d_repr(q, c) >= repr_dist(next) > kth_best).  The
+  comparison is strict: a candidate whose bound exactly equals the k-th
+  best could still TIE the k-th member's true distance and win on the
+  (distance, dataset index) tie-break, so boundary-equal candidates are
+  verified rather than pruned.
 * Therefore the surviving frontier equals the sequential scan's result
   exactly; batching only over-fetches by at most one batch per query
   (the batch in flight when the threshold crossed).
@@ -147,15 +151,22 @@ def merge_topk_numpy(all_d: np.ndarray, all_i: np.ndarray, k: int):
 
 
 def merge_topk_device(all_d: np.ndarray, all_i: np.ndarray, k: int):
-    """jax.lax.top_k merge.  Ties break by array position rather than
-    dataset index, so on exactly-equal distances the selection may differ
-    from the host merge — between candidates at identical true distance
-    only, never changing the distance profile."""
-    import jax
+    """Device merge with the host tie-break contract: a lexicographic
+    sort on the stable composite key (distance, dataset index), so ties
+    at exactly-equal distances resolve to the smaller dataset index —
+    same contract as ``merge_topk_numpy`` (padding index -1 sorts last).
+    Runs at device precision (f32 when x64 is off): the returned
+    distances are the ones the sort saw, keeping the frontier ascending
+    and the k-th-best pruning threshold consistent — distances that are
+    distinct in f64 but equal in f32 count as ties, the device merge's
+    documented precision contract."""
     import jax.numpy as jnp
-    neg, pos = jax.lax.top_k(-jnp.asarray(all_d), k)
-    idx = jnp.take_along_axis(jnp.asarray(all_i), pos, axis=1)
-    return np.asarray(-neg), np.asarray(idx, np.int64)
+    d = jnp.asarray(all_d)
+    i = jnp.asarray(all_i)
+    tie = jnp.where(i < 0, jnp.iinfo(jnp.int32).max, i)
+    sel = jnp.lexsort((tie, d), axis=-1)[:, :k]
+    return (np.asarray(jnp.take_along_axis(d, sel, axis=1)),
+            np.asarray(jnp.take_along_axis(i, sel, axis=1)).astype(np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -164,10 +175,23 @@ def merge_topk_device(all_d: np.ndarray, all_i: np.ndarray, k: int):
 
 def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
                 batch_size: int = 64, verifier: Callable = numpy_verifier,
-                merge: Callable = merge_topk_numpy) -> TopKResult:
+                merge: Callable = merge_topk_numpy,
+                init_d=None, init_i=None, col_ids=None) -> TopKResult:
     """Exact top-k under d_ED for a query batch given lower-bounding
     representation distances (Q, N).  See the module docstring for the
-    correctness argument."""
+    correctness argument.
+
+    ``init_d`` / ``init_i``: optional (Q, <=k) already-verified frontier
+    (sorted ascending, ties by index) to seed the best-k with — used by
+    ``SSaxIndex.topk`` so seed candidates are not verified twice.  Seeded
+    candidates must carry +inf in ``repr_dists`` (or be absent), otherwise
+    they would enter the merge a second time.
+
+    ``col_ids``: optional (N,) dataset row ids, one per ``repr_dists``
+    column, STRICTLY INCREASING — lets a sparse caller pass only the
+    surviving candidates instead of a full-corpus-width matrix (column j
+    means row ``col_ids[j]``; ``pruned_fraction`` is then relative to the
+    candidate set, not the corpus)."""
     qs = np.asarray(queries_raw)        # native dtype: the host verifier
     if qs.ndim == 1:                    # stays bit-identical to brute force
         qs = qs[None]
@@ -175,26 +199,57 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     if rd.ndim == 1:
         rd = rd[None]
     q_n, n = rd.shape
-    k = min(k, n)
-    order = np.argsort(rd, axis=1, kind="stable")
-    sorted_d = np.take_along_axis(rd, order, axis=1)
+    if col_ids is not None:
+        col_ids = np.asarray(col_ids, np.int64)
+        assert col_ids.shape == (n,), (col_ids.shape, n)
 
+    init_w = 0
+    if init_d is not None:
+        init_d = np.asarray(init_d, np.float64)
+        init_i = np.asarray(init_i, np.int64)
+        if init_d.ndim == 1:
+            init_d, init_i = init_d[None], init_i[None]
+        init_w = init_d.shape[1]
+    k = min(k, n + init_w)
     front_d = np.full((q_n, k), np.inf, np.float64)
     front_i = np.full((q_n, k), -1, np.int64)
+    if init_w:
+        m = min(k, init_w)
+        front_d[:, :m] = init_d[:, :m]
+        front_i[:, :m] = init_i[:, :m]
+    if n == 0:                          # nothing to scan: seeded frontier
+        return TopKResult(indices=front_i, distances=front_d,
+                          raw_accesses=np.zeros(q_n, np.int64),
+                          pruned_fraction=np.ones(q_n),
+                          store_accesses=0, store_fetches=0, io_seconds=0.0)
+    order = np.argsort(rd, axis=1, kind="stable")
+    sorted_d = np.take_along_axis(rd, order, axis=1)
+    # +inf bounds mark non-candidates (e.g. another query's rows in a
+    # sparse sweep, or already-seeded members): they must never enter a
+    # verification batch, even as over-fetch — a seeded member verified
+    # again would enter the merge twice
+    n_fin = np.isfinite(rd).sum(axis=1)
     pos = np.zeros(q_n, np.int64)
     acc = np.zeros(q_n, np.int64)
     start_acc, start_fetch = store.accesses, store.fetches
 
     while True:
         nxt = sorted_d[np.arange(q_n), np.minimum(pos, n - 1)]
-        active = (pos < n) & (front_d[:, -1] > nxt)
+        # >= (not >): a candidate whose bound ties the k-th best verified
+        # distance may tie it in true distance too and then win on the
+        # smaller dataset index — it must be verified, not pruned.  The
+        # finite guard keeps +inf-bound candidates (e.g. the masked rows
+        # of a seeded index sweep) out of the scan entirely.
+        active = (pos < n) & np.isfinite(nxt) & (front_d[:, -1] >= nxt)
         if not active.any():
             break
         aq = np.nonzero(active)[0]
         cand = np.full((len(aq), batch_size), -1, np.int64)
         for r, qi in enumerate(aq):
-            c = order[qi, pos[qi]:pos[qi] + batch_size]
+            c = order[qi, pos[qi]:min(pos[qi] + batch_size, n_fin[qi])]
             cand[r, :len(c)] = c
+        if col_ids is not None:          # column -> dataset row translation
+            cand = np.where(cand >= 0, col_ids[cand], -1)
         mask = cand >= 0
         ids = np.unique(cand[mask])              # sorted
         rows = store.fetch(ids)                  # one physical fetch/round
@@ -264,12 +319,18 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
 # ---------------------------------------------------------------------------
 
 class MatchEngine:
-    """Batched multi-query top-k matcher over one encoder + raw store.
+    """Batched multi-query top-k matcher over one encoder + store.
 
     Parameters
     ----------
     encoder:    SAX / SSAX / TSAX / STSAX / OneDSAX instance.
-    store:      RawStore over the (N, T) raw dataset.
+    store:      preferably a ``repro.store.SymbolicStore`` — it already
+                owns the live representation, so construction is free and
+                rows appended to it are served by the very next query
+                (streaming ingestion).  A bare ``RawStore`` over the
+                (N, T) raw dataset is still accepted; the engine then
+                pays a one-shot encode at construction (the legacy
+                static-corpus behaviour).
     batch_size: verification batch per query per round.
     verify:     "auto" (kernel on TPU, numpy host elsewhere), "kernel"
                 (always route through euclid_pallas; interpret off-TPU),
@@ -282,7 +343,7 @@ class MatchEngine:
                 (queries_raw, k -> (Q, k) indices).
     """
 
-    def __init__(self, encoder, store: RawStore, *, batch_size: int = 64,
+    def __init__(self, encoder, store, *, batch_size: int = 64,
                  verify: str = "auto", pairwise: Callable | None = None,
                  rep=None, repr_fn: Callable | None = None,
                  cand_fn: Callable | None = None,
@@ -295,11 +356,47 @@ class MatchEngine:
         self._pw = pairwise or encoder.pairwise_distance
         self._repr_fn = repr_fn
         self._cand_fn = cand_fn
+        self._sym = store if hasattr(store, "rep_view") else None
+        if self._sym is not None and self._sym.encoder != encoder:
+            raise ValueError("SymbolicStore was built for a different "
+                             "encoder configuration than this engine's")
+        self._rep_cache = None           # device copy of the store's rep
+        self._rep_cache_v = -1           # ...valid for this store version
         if rep is not None or repr_fn is not None:
-            self.rep = rep
+            self._rep = rep
+        elif self._sym is not None:
+            self._rep = None             # live view, refreshed on append
         else:
             import jax.numpy as jnp
-            self.rep = encoder.encode(jnp.asarray(store.data))
+            self._rep = encoder.encode(jnp.asarray(store.data))
+
+    @property
+    def rep(self):
+        """Dataset representation: when backed by a ``SymbolicStore``, a
+        device-resident copy of the store's live representation, refreshed
+        only when the store version changes (append-aware without paying a
+        host->device transfer per query); else the construction-time (or
+        explicitly passed) representation."""
+        if self._rep is not None:
+            return self._rep
+        if self._sym is None:
+            return None
+        if self._rep_cache_v != self._sym.version:
+            import jax.numpy as jnp
+            view = self._sym.rep_view()
+            leaves = view if isinstance(view, tuple) else (view,)
+            dev = tuple(jnp.asarray(l) for l in leaves)
+            self._rep_cache = dev if isinstance(view, tuple) else dev[0]
+            self._rep_cache_v = self._sym.version
+        return self._rep_cache
+
+    def append(self, rows) -> np.ndarray:
+        """Ingest rows into the backing ``SymbolicStore`` (incremental
+        encode); they are matchable on the next ``topk`` call."""
+        if self._sym is None:
+            raise TypeError("append() needs a SymbolicStore-backed engine; "
+                            "this one wraps a static RawStore")
+        return self._sym.append(rows)
 
     # -- representation sweep -------------------------------------------
     def encode_queries(self, queries_raw):
@@ -319,6 +416,8 @@ class MatchEngine:
             return np.asarray(self._cand_fn(queries_raw, k))
         rd = self.repr_distances(queries_raw)
         k = min(k, rd.shape[1])
+        if k == 0:
+            return np.empty((rd.shape[0], 0), np.int64)
         part = np.argpartition(rd, k - 1, axis=1)[:, :k]
         part_d = np.take_along_axis(rd, part, axis=1)
         return np.take_along_axis(part, np.argsort(part_d, axis=1,

@@ -105,6 +105,8 @@ class SSaxIndex:
         self.sigma = np.asarray(sigma, np.float32)
         self.resbar = np.asarray(resbar, np.float32)
         self.T = T
+        self.sd_seas = float(sd_seas)
+        self.sd_res = float(sd_res)
         self.L = self.sigma.shape[1]
         self.W = self.resbar.shape[1]
         self.D = self.L + self.W
@@ -177,39 +179,229 @@ class SSaxIndex:
             + 2.0 * self.T / (self.W * self.L) * ds.sum(1) * dr.sum(1)
         return np.sqrt(np.maximum(t, 0.0))
 
-    def query(self, q_sigma: np.ndarray, q_resbar: np.ndarray,
-              store: RawStore, q_raw: np.ndarray) -> MatchResult:
-        """Exact NN via best-first leaf traversal + raw verification."""
-        q = np.concatenate([q_sigma, q_resbar]).astype(np.float32)
-        N = self.feats.shape[0]
-        heap = [(0.0, 0, self.root, 0.0)]
+    def _seed_candidates(self, q: np.ndarray, k: int) -> list:
+        """Best-first leaf walk until >= k member ids are collected — the
+        seed set whose verified distances upper-bound the true k-th NN."""
+        heap = [(0.0, 0, self.root)]
         counter = 1
-        best_d, best_i = math.inf, -1
-        start = store.accesses
-        while heap:
-            lb, _, node, _ = heapq.heappop(heap)
-            if lb >= best_d:
-                break                   # everything else is pruned
+        out: list = []
+        while heap and len(out) < k:
+            _, _, node = heapq.heappop(heap)
             if node.is_leaf:
-                # per-member sPAA lower bound from stored features (the
-                # paper's d_sPAA, Table 2 — tighter than any symbolic or
-                # bbox bound) filters the leaf before touching raw storage
-                mlb = self._member_lb(q, node.ids)
-                survive = node.ids[mlb < best_d]
-                if survive.size == 0:
-                    continue
-                # one batched fetch per leaf: a single modeled seek
-                # instead of one per surviving row
-                rows = store.fetch(survive)
-                d = np.sqrt(np.sum((rows - q_raw[None]) ** 2, axis=-1))
-                j = int(np.argmin(d))
-                if d[j] < best_d:
-                    best_d, best_i = float(d[j]), int(survive[j])
+                out.extend(node.ids.tolist())
                 continue
             for child in node.children.values():
                 heapq.heappush(heap, (self._bbox_lb(q, child), counter,
-                                      child, 0.0))
+                                      child))
                 counter += 1
-        return MatchResult(index=best_i, distance=best_d,
-                           raw_accesses=store.accesses - start,
-                           pruned_fraction=1.0 - (store.accesses - start) / N)
+        return out
+
+    def _collect_bounds(self, q: np.ndarray, thresh: float):
+        """Compact (ids, d_sPAA bounds) of every member that could still
+        beat ``thresh`` (subtrees pruned by the bbox bound, members by the
+        exact sPAA bound) — O(survivors), never corpus-width."""
+        ids_out, lb_out = [], []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            if self._bbox_lb(q, node) > thresh:
+                continue
+            if node.is_leaf:
+                mlb = self._member_lb(q, node.ids)
+                keep = mlb <= thresh
+                ids_out.append(node.ids[keep])
+                lb_out.append(mlb[keep])
+            else:
+                stack.extend(node.children.values())
+        if not ids_out:
+            return np.empty(0, np.int64), np.empty(0)
+        return (np.concatenate(ids_out).astype(np.int64),
+                np.concatenate(lb_out))
+
+    def topk(self, sigma_q: np.ndarray, resbar_q: np.ndarray, store,
+             queries_raw: np.ndarray, *, k: int = 1, batch_size: int = 64,
+             verifier=None, merge=None):
+        """Batched multi-query exact top-k through the indexed traversal.
+
+        Three phases, all exact (same tie-break contract as the engine:
+        distance, then dataset index):
+
+        1. *Seed*: per query, walk leaves best-first until >= k members,
+           verify them in one batched fetch (``engine.verify_candidates``)
+           — the k-th verified distance U upper-bounds the true k-th NN.
+        2. *Collect*: walk the tree pruning subtrees with bbox bound > U;
+           surviving members with sPAA bound <= U become a COMPACT
+           candidate set (everything else provably cannot enter the
+           top-k, even on ties, since bound > U >= d_k implies d > d_k).
+        3. *Verify*: ``engine.topk_verify`` consumes the candidate bounds
+           in sorted order with the k-th-best early stop over the compact
+           candidate columns (``col_ids`` maps them to dataset rows —
+           memory O(survivors), not O(corpus)), seeded with the phase-1
+           frontier (seed members are excluded so no candidate is
+           verified twice).
+
+        Returns an ``engine.TopKResult`` with combined access accounting.
+        """
+        from repro.core.engine import (
+            TopKResult, merge_topk_numpy, numpy_verifier, topk_verify,
+            verify_candidates)
+        verifier = verifier or numpy_verifier
+        merge = merge or merge_topk_numpy
+
+        sigma_q = np.asarray(sigma_q, np.float32)
+        resbar_q = np.asarray(resbar_q, np.float32)
+        if sigma_q.ndim == 1:
+            sigma_q, resbar_q = sigma_q[None], resbar_q[None]
+        qs_raw = np.asarray(queries_raw)
+        if qs_raw.ndim == 1:
+            qs_raw = qs_raw[None]
+        feats_q = np.concatenate([sigma_q, resbar_q], axis=1)
+        n = self.feats.shape[0]
+        q_n = feats_q.shape[0]
+        k = min(k, n)
+
+        seeds = [self._seed_candidates(feats_q[r], k) for r in range(q_n)]
+        width = max(len(s) for s in seeds)
+        cand = np.full((q_n, width), -1, np.int64)
+        for r, s in enumerate(seeds):
+            cand[r, :len(s)] = s
+        seed_res = verify_candidates(qs_raw, cand, store, k=k,
+                                     verifier=verifier, merge=merge)
+
+        all_ids, all_lbs = [], []
+        for r in range(q_n):
+            ids_r, lb_r = self._collect_bounds(
+                feats_q[r], float(seed_res.distances[r, -1]))
+            fresh = ~np.isin(ids_r, np.asarray(seeds[r], np.int64))
+            all_ids.append(ids_r[fresh])       # seeds already in frontier
+            all_lbs.append(lb_r[fresh])
+        union = np.unique(np.concatenate(all_ids))     # sorted row ids
+        bounds = np.full((q_n, union.size), np.inf, np.float64)
+        for r in range(q_n):
+            bounds[r, np.searchsorted(union, all_ids[r])] = all_lbs[r]
+        res = topk_verify(qs_raw, bounds, store, k=k, batch_size=batch_size,
+                          verifier=verifier, merge=merge, col_ids=union,
+                          init_d=seed_res.distances, init_i=seed_res.indices)
+
+        acc = res.raw_accesses + seed_res.raw_accesses
+        return TopKResult(
+            indices=res.indices, distances=res.distances, raw_accesses=acc,
+            pruned_fraction=1.0 - acc / n,
+            store_accesses=res.store_accesses + seed_res.store_accesses,
+            store_fetches=res.store_fetches + seed_res.store_fetches,
+            io_seconds=res.io_seconds + seed_res.io_seconds)
+
+    def query(self, q_sigma: np.ndarray, q_resbar: np.ndarray,
+              store: RawStore, q_raw: np.ndarray) -> MatchResult:
+        """Exact 1-NN — thin wrapper over the batched ``topk`` path, so
+        indexed search shares the engine's verification machinery."""
+        res = self.topk(q_sigma, q_resbar, store, q_raw, k=1)
+        return MatchResult(index=int(res.indices[0, 0]),
+                           distance=float(res.distances[0, 0]),
+                           raw_accesses=int(res.raw_accesses[0]),
+                           pruned_fraction=float(res.pruned_fraction[0]))
+
+    # -- store integration ------------------------------------------------
+    @classmethod
+    def from_store(cls, store, *, max_bits: int = 8,
+                   leaf_capacity: int = 64) -> "SSaxIndex":
+        """Build an index over a ``repro.store.SymbolicStore`` whose
+        encoder exposes sSAX-style (sigma, resbar) features."""
+        import jax.numpy as jnp
+        enc = store.encoder
+        if not (hasattr(enc, "features") and hasattr(enc, "sd_seas")
+                and hasattr(enc, "sd_res")):
+            raise TypeError(f"{type(enc).__name__} does not expose "
+                            "season-aware (sigma, resbar) features")
+        feats = enc.features(jnp.asarray(store.data, jnp.float32))
+        if len(feats) != 2:
+            raise TypeError(f"{type(enc).__name__}.features returns "
+                            f"{len(feats)} components, need (sigma, resbar)")
+        sigma, resbar = feats
+        return cls(np.asarray(sigma), np.asarray(resbar), T=enc.T,
+                   sd_seas=enc.sd_seas, sd_res=enc.sd_res,
+                   max_bits=max_bits, leaf_capacity=leaf_capacity)
+
+    # -- snapshot serialization -------------------------------------------
+    def to_snapshot(self):
+        """Flatten the split tree to (meta dict, arrays dict) — preorder
+        node table + concatenated leaf payloads, rebuildable without
+        re-splitting by ``from_snapshot``."""
+        nodes, parents, syms = [], [], []
+
+        def walk(node, parent, sym):
+            nid = len(nodes)
+            nodes.append(node)
+            parents.append(parent)
+            syms.append(sym)
+            if not node.is_leaf:
+                for s in sorted(node.children):
+                    walk(node.children[s], nid, s)
+
+        walk(self.root, -1, -1)
+        n_nodes = len(nodes)
+        leaf_ids = [nd.ids if nd.is_leaf else np.empty(0, np.int64)
+                    for nd in nodes]
+        counts = np.asarray([len(x) for x in leaf_ids], np.int64)
+        arrays = {
+            "sigma": self.sigma,
+            "resbar": self.resbar,
+            "node_bits": np.stack([nd.bits for nd in nodes]),
+            "node_parent": np.asarray(parents, np.int32),
+            "node_sym": np.asarray(syms, np.int32),
+            "node_split_dim": np.asarray([nd.split_dim for nd in nodes],
+                                         np.int32),
+            "node_lo": np.stack([nd.lo for nd in nodes]),
+            "node_hi": np.stack([nd.hi for nd in nodes]),
+            "leaf_counts": counts,
+            "leaf_ids": (np.concatenate(leaf_ids) if n_nodes else
+                         np.empty(0, np.int64)).astype(np.int64),
+        }
+        meta = {"T": int(self.T), "max_bits": int(self.max_bits),
+                "leaf_capacity": int(self.leaf_capacity),
+                "sd_seas": float(self.sd_seas), "sd_res": float(self.sd_res),
+                "n_nodes": n_nodes}
+        return meta, arrays
+
+    @classmethod
+    def from_snapshot(cls, meta: dict, arrays: dict) -> "SSaxIndex":
+        """Rebuild an index from ``to_snapshot`` output (no re-split)."""
+        self = cls.__new__(cls)
+        self.sigma = np.asarray(arrays["sigma"], np.float32)
+        self.resbar = np.asarray(arrays["resbar"], np.float32)
+        self.T = int(meta["T"])
+        self.sd_seas = float(meta["sd_seas"])
+        self.sd_res = float(meta["sd_res"])
+        self.L = self.sigma.shape[1]
+        self.W = self.resbar.shape[1]
+        self.D = self.L + self.W
+        self.max_bits = int(meta["max_bits"])
+        self.leaf_capacity = int(meta["leaf_capacity"])
+        self.feats = np.concatenate([self.sigma, self.resbar], axis=1)
+        self.sds = np.asarray([self.sd_seas] * self.L +
+                              [self.sd_res] * self.W, np.float32)
+        self.weights = np.asarray([self.T / self.L] * self.L +
+                                  [self.T / self.W] * self.W, np.float32)
+        self._breaks = {b: [_gauss_breaks(1 << b, float(sd))
+                            for sd in self.sds]
+                        for b in range(1, self.max_bits + 1)}
+        n_nodes = int(meta["n_nodes"])
+        counts = arrays["leaf_counts"]
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        nodes = []
+        for i in range(n_nodes):
+            is_leaf = int(arrays["node_split_dim"][i]) < 0
+            node = _Node(bits=np.asarray(arrays["node_bits"][i], np.int8),
+                         ids=(arrays["leaf_ids"][offsets[i]:offsets[i + 1]]
+                              .astype(np.int64) if is_leaf else None),
+                         children={} if not is_leaf else None,
+                         split_dim=int(arrays["node_split_dim"][i]),
+                         lo=np.asarray(arrays["node_lo"][i], np.float32),
+                         hi=np.asarray(arrays["node_hi"][i], np.float32))
+            nodes.append(node)
+            parent = int(arrays["node_parent"][i])
+            if parent >= 0:
+                nodes[parent].children[int(arrays["node_sym"][i])] = node
+        self.root = nodes[0]
+        self.n_nodes = n_nodes
+        return self

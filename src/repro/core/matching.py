@@ -41,6 +41,15 @@ def pairwise_euclidean(q, x):
 # Raw store (simulated cold storage)
 # ---------------------------------------------------------------------------
 
+# (seek_seconds, bytes_per_second) presets — the single source of truth,
+# shared by the RawStore constructors below and repro.store.SymbolicStore
+MEDIA = {
+    "hdd": (5e-3, 150e6),
+    "ssd": (6e-5, 500e6),
+    "hbm": (1e-7, 819e9),
+}
+
+
 @dataclass
 class RawStore:
     """Raw time-series access with an I/O cost model.
@@ -59,21 +68,28 @@ class RawStore:
 
     @staticmethod
     def hdd(data):
-        return RawStore(data, seek_s=5e-3, read_bps=150e6)
+        return RawStore(data, *MEDIA["hdd"])
 
     @staticmethod
     def ssd(data):
-        return RawStore(data, seek_s=6e-5, read_bps=500e6)
+        return RawStore(data, *MEDIA["ssd"])
 
     @staticmethod
     def hbm(data):
-        return RawStore(data, seek_s=1e-7, read_bps=819e9)
+        return RawStore(data, *MEDIA["hbm"])
 
     def fetch(self, idx) -> np.ndarray:
         idx = np.asarray(idx)
+        if idx.dtype == bool:            # boolean masks keep working
+            idx = np.nonzero(idx)[0]
+        idx = idx.astype(np.int64)
+        if idx.size == 0:
+            # an all-pruned round touches no media: no seek, no rows
+            # (np.asarray([]) would otherwise arrive float64 and crash
+            # the gather)
+            return np.empty((0,) + self.data.shape[1:], self.data.dtype)
         self.accesses += int(idx.size)
-        if idx.size:
-            self.fetches += 1
+        self.fetches += 1
         return self.data[idx]
 
     def modeled_io_seconds(self, n_accesses: Optional[int] = None,

@@ -3,14 +3,18 @@ representation of a dataset and serve batched exact / approximate top-k
 matches through the unified k-NN engine.
 
     PYTHONPATH=src python -m repro.launch.match \
-        --n 40000 --strength 0.7 --technique ssax --queries 8 --k 32
+        --n 40000 --strength 0.7 --technique ssax --queries 8 --k 32 \
+        --ingest 4 --snapshot-dir /tmp/match-snaps
 
 Device count is taken from the environment (set XLA_FLAGS
 --xla_force_host_platform_device_count=8 for a local fleet simulation);
 the same code drives the production ("pod","data") mesh axes.  The
 sharded sweep produces lower bounds / candidate frontiers; raw
 verification goes through ``core.engine.MatchEngine`` (Pallas euclid
-kernel on TPU, one batched store fetch per round).
+kernel on TPU, one batched store fetch per round).  The engine is backed
+by a ``repro.store.SymbolicStore``: ``--ingest N`` appends N chunks while
+serving queries between them (only new rows are encoded), and
+``--snapshot-dir`` persists the store + representation after the run.
 """
 
 from __future__ import annotations
@@ -34,6 +38,12 @@ def main():
     ap.add_argument("--batch", type=int, default=256,
                     help="verification batch per query per round")
     ap.add_argument("--store", default="ssd", choices=["hdd", "ssd", "hbm"])
+    ap.add_argument("--ingest", type=int, default=0,
+                    help="chunks to append while serving (ingest demo)")
+    ap.add_argument("--ingest-rows", type=int, default=1024,
+                    help="rows per ingest chunk")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="persist the store (raw + rep) after the run")
     args = ap.parse_args()
 
     import jax
@@ -41,16 +51,18 @@ def main():
 
     from repro.core import SAX, SSAX, STSAX, TSAX
     from repro.core.distributed import make_engine_service
-    from repro.core.matching import RawStore, pairwise_euclidean
+    from repro.core.matching import pairwise_euclidean
     from repro.data.synthetic import season_dataset
     from repro.launch.mesh import make_mesh_compat
 
     n_dev = len(jax.devices())
     mesh = make_mesh_compat((n_dev,), ("data",))
     n = (args.n // n_dev) * n_dev
-    X = season_dataset(n + args.queries, args.T, args.L, args.strength,
-                       per_series_strength=True, seed=1)
-    Q, D = X[:args.queries], X[args.queries:]
+    n_ingest = args.ingest * args.ingest_rows
+    X = season_dataset(n + args.queries + n_ingest, args.T, args.L,
+                       args.strength, per_series_strength=True, seed=1)
+    Q, D = X[:args.queries], X[args.queries:args.queries + n]
+    ingest_pool = X[args.queries + n:]
 
     tech = {
         "sax": lambda: SAX(T=args.T, W=48, A=64),
@@ -65,11 +77,10 @@ def main():
 
     print(f"[match] {args.technique} over {n} x {args.T} "
           f"on {n_dev} devices")
-    store = {"hdd": RawStore.hdd, "ssd": RawStore.ssd,
-             "hbm": RawStore.hbm}[args.store](D)
     t0 = time.perf_counter()
-    engine = make_engine_service(tech, jnp.asarray(D), mesh, store,
-                                 batch_size=args.batch)
+    engine = make_engine_service(tech, jnp.asarray(D), mesh,
+                                 batch_size=args.batch, media=args.store)
+    store = engine.store                 # SymbolicStore: raw + live rep
     jax.block_until_ready(engine.rep)
     print(f"[match] encode: {time.perf_counter() - t0:.2f}s")
 
@@ -102,6 +113,27 @@ def main():
     print(f"[match] approx k={args.k}: 1-NN hit {hit1}/{args.queries}; "
           f"raw rows/query {res.raw_accesses.mean():.0f}; modeled "
           f"{args.store} I/O {res.io_seconds:.3f}s; wall {dt:.2f}s")
+
+    # ingest-while-serving: append chunks, answer queries between them —
+    # only the new chunk is encoded each round
+    for c in range(args.ingest):
+        chunk = ingest_pool[c * args.ingest_rows:(c + 1) * args.ingest_rows]
+        t0 = time.perf_counter()
+        engine.ingest(chunk)
+        t_ing = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = engine.topk(Q, k=args.k, exact=False)
+        t_q = time.perf_counter() - t0
+        print(f"[match] ingest {c + 1}/{args.ingest}: +{chunk.shape[0]} "
+              f"rows in {t_ing * 1e3:.0f}ms "
+              f"({chunk.shape[0] / max(t_ing, 1e-9):.0f} rows/s), corpus "
+              f"{store.n}; query k={args.k} under ingest {t_q * 1e3:.0f}ms")
+
+    if args.snapshot_dir:
+        t0 = time.perf_counter()
+        path = store.save(args.snapshot_dir)
+        print(f"[match] snapshot: {store.n} rows + rep -> {path} "
+              f"({time.perf_counter() - t0:.2f}s)")
 
 
 if __name__ == "__main__":

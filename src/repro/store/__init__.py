@@ -1,0 +1,7 @@
+"""Streaming symbolic store: append-only raw + representation ownership
+with incremental encoding and atomic on-disk snapshots (ISSUE 2 /
+ROADMAP "Streaming ingestion" + "Index persistence")."""
+
+from repro.store.symbolic import MEDIA, SymbolicStore, rep_leaves  # noqa: F401
+from repro.store.snapshot import (  # noqa: F401
+    latest_snap, open_store, save_store)

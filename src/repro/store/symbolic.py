@@ -1,0 +1,233 @@
+"""Append-only symbolic store: raw rows + the live symbolic representation.
+
+``SymbolicStore`` owns both sides of the paper's matching setup — the raw
+(N, T) series that live on cold storage and the symbolic representation
+(SAX / sSAX / tSAX / stSAX / 1d-SAX words) the engine sweeps — and keeps
+them consistent under streaming ingestion:
+
+* ``append(rows)`` encodes ONLY the new rows (one pass through the
+  encoder's existing encode path; on TPU that is the Pallas PAA front-end)
+  and writes raw + representation into preallocated capacity-doubled
+  arrays.  Nothing previously ingested is ever touched, so ingest cost is
+  O(chunk) instead of the O(corpus) full re-encode ``MatchEngine`` used to
+  pay at construction.  Encoders are row-wise maps, so chunked encoding is
+  bit-identical to one-shot encoding (tests/test_store.py proves it for
+  arbitrary chunkings).
+* ``rep_view()`` returns the representation trimmed to the live rows as
+  zero-copy numpy views — consumers (``core.engine.MatchEngine``,
+  ``core.distributed``) read it per query and therefore serve appended
+  rows immediately.
+* The store itself speaks the ``RawStore`` verification protocol
+  (``data`` / ``fetch`` / ``accesses`` / ``fetches`` /
+  ``modeled_io_seconds`` / ``reset``) with the same HDD/SSD/HBM cost
+  models, so it drops in wherever a bare ``RawStore`` was used.
+* ``save(dir)`` / ``SymbolicStore.open(dir)`` persist everything —
+  raw manifest, representation arrays, encoder params (breakpoints
+  validated on open), and the ``SSaxIndex`` split tree — in the atomic
+  snapshot layout of :mod:`repro.store.snapshot`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.matching import MEDIA, RawStore
+
+_MIN_CAPACITY = 1024
+
+
+def rep_leaves(rep):
+    """Normalize an encoder representation (array or tuple) to a tuple."""
+    return rep if isinstance(rep, tuple) else (rep,)
+
+
+class SymbolicStore:
+    """Append-only raw + symbolic store for one encoder.
+
+    Parameters
+    ----------
+    encoder:  SAX / SSAX / TSAX / STSAX / OneDSAX instance (anything with
+              ``T``, ``encode`` and ``pairwise_distance``).
+    media:    "hdd" | "ssd" | "hbm" cost-model preset, or pass explicit
+              ``seek_s`` / ``read_bps``.
+    capacity: initial row capacity (grows by doubling).
+    """
+
+    def __init__(self, encoder, *, media: str = "ssd",
+                 seek_s: Optional[float] = None,
+                 read_bps: Optional[float] = None,
+                 capacity: int = 0):
+        self.encoder = encoder
+        if seek_s is None or read_bps is None:
+            if media not in MEDIA:
+                raise ValueError(
+                    f"unknown media {media!r}; options {set(MEDIA)}")
+            self.seek_s = MEDIA[media][0] if seek_s is None else float(seek_s)
+            self.read_bps = (MEDIA[media][1] if read_bps is None
+                             else float(read_bps))
+            self.media = media
+        else:
+            # explicit cost model: label it by the matching preset so the
+            # media name never contradicts the numbers
+            self.seek_s, self.read_bps = float(seek_s), float(read_bps)
+            self.media = next(
+                (name for name, v in MEDIA.items()
+                 if v == (self.seek_s, self.read_bps)), "custom")
+        self.T = int(encoder.T)
+        self._n = 0
+        self._cap = 0
+        self._raw: Optional[np.ndarray] = None
+        self._rep: Optional[list] = None   # list of (cap, ...) leaf arrays
+        self._rep_is_tuple = True
+        self.version = 0                   # bumped on every append
+        self.index = None                  # optional SSaxIndex over rows
+        # the verification protocol (fetch accounting + I/O model) is the
+        # one RawStore implements — delegated, not duplicated; its .data
+        # is re-pointed at the live prefix after every append
+        self._io = RawStore(np.empty((0, self.T), np.float32),
+                            seek_s=self.seek_s, read_bps=self.read_bps)
+        if capacity:
+            self._grow(capacity)
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_rows(cls, encoder, rows, *, media: str = "ssd",
+                  **kwargs) -> "SymbolicStore":
+        """One-shot construction: a store holding ``rows`` already encoded."""
+        store = cls(encoder, media=media, **kwargs)
+        store.append(rows)
+        return store
+
+    def _probe_rep_struct(self):
+        """Encode one zero row to learn the leaf shapes/dtypes."""
+        import jax.numpy as jnp
+        rep = self.encoder.encode(jnp.zeros((1, self.T), jnp.float32))
+        self._rep_is_tuple = isinstance(rep, tuple)
+        return [np.asarray(leaf) for leaf in rep_leaves(rep)]
+
+    def _grow(self, need: int):
+        if need <= self._cap and self._raw is not None:
+            return
+        new_cap = max(need, 2 * self._cap, _MIN_CAPACITY)
+        new_raw = np.empty((new_cap, self.T), np.float32)
+        if self._raw is None:
+            self._rep = [np.empty((new_cap,) + l.shape[1:], l.dtype)
+                         for l in self._probe_rep_struct()]
+        else:
+            new_raw[:self._n] = self._raw[:self._n]
+            new_rep = []
+            for old in self._rep:
+                arr = np.empty((new_cap,) + old.shape[1:], old.dtype)
+                arr[:self._n] = old[:self._n]
+                new_rep.append(arr)
+            self._rep = new_rep
+        self._raw = new_raw
+        self._cap = new_cap
+
+    # -- ingest -----------------------------------------------------------
+    def _encode(self, rows: np.ndarray) -> tuple:
+        import jax.numpy as jnp
+        rep = self.encoder.encode(jnp.asarray(rows, jnp.float32))
+        return tuple(np.asarray(leaf) for leaf in rep_leaves(rep))
+
+    def append(self, rows, rep=None) -> np.ndarray:
+        """Ingest new series; returns their dataset row ids.
+
+        rows: (M, T) or (T,).  ``rep``: optionally the precomputed
+        representation of exactly these rows (e.g. from a sharded encode
+        pass) — structure must match ``encoder.encode`` output.  Only the
+        new rows are encoded; existing rows and their representation are
+        never touched.  Appending invalidates ``self.index`` (rebuild via
+        ``build_index``; incremental tree insertion is future work).
+        """
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.shape[-1] != self.T:
+            raise ValueError(f"rows have length {rows.shape[-1]}, "
+                             f"encoder expects T={self.T}")
+        m = rows.shape[0]
+        if m == 0:
+            return np.empty(0, np.int64)
+        leaves = (tuple(np.asarray(l) for l in rep_leaves(rep))
+                  if rep is not None else self._encode(rows))
+        self._grow(self._n + m)
+        if len(leaves) != len(self._rep):
+            raise ValueError("rep structure does not match the encoder")
+        self._raw[self._n:self._n + m] = rows
+        for dst, src in zip(self._rep, leaves):
+            if src.shape[0] != m or src.shape[1:] != dst.shape[1:]:
+                raise ValueError(
+                    f"rep leaf shape {src.shape} incompatible with "
+                    f"store leaf {dst.shape[1:]} for {m} rows")
+            dst[self._n:self._n + m] = src
+        ids = np.arange(self._n, self._n + m, dtype=np.int64)
+        self._n += m
+        self._io.data = self._raw[:self._n]
+        self.version += 1
+        self.index = None            # coverage changed; rebuild on demand
+        return ids
+
+    # -- views ------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._n
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def data(self) -> np.ndarray:
+        """(N, T) raw rows — zero-copy view of the live prefix."""
+        return self._io.data
+
+    def rep_view(self):
+        """Live representation, in the encoder's structure (zero-copy)."""
+        if self._rep is None:
+            self._grow(0)
+        leaves = tuple(l[:self._n] for l in self._rep)
+        return leaves if self._rep_is_tuple else leaves[0]
+
+    # -- RawStore verification protocol (delegated) ------------------------
+    @property
+    def accesses(self) -> int:
+        return self._io.accesses
+
+    @property
+    def fetches(self) -> int:
+        return self._io.fetches
+
+    def fetch(self, idx) -> np.ndarray:
+        return self._io.fetch(idx)
+
+    def modeled_io_seconds(self, n_accesses: Optional[int] = None,
+                           n_fetches: Optional[int] = None) -> float:
+        return self._io.modeled_io_seconds(n_accesses, n_fetches)
+
+    def reset(self):
+        self._io.reset()
+
+    # -- index ------------------------------------------------------------
+    def build_index(self, *, max_bits: int = 8, leaf_capacity: int = 64):
+        """Build (and remember) an ``SSaxIndex`` over the current rows.
+        Requires a season-aware encoder (sSAX-style two-part features)."""
+        from repro.core.index import SSaxIndex
+        self.index = SSaxIndex.from_store(self, max_bits=max_bits,
+                                          leaf_capacity=leaf_capacity)
+        return self.index
+
+    # -- persistence -------------------------------------------------------
+    def save(self, directory: str, *, keep: int = 3) -> str:
+        """Write an atomic snapshot (see repro.store.snapshot); returns
+        its final path."""
+        from repro.store.snapshot import save_store
+        return save_store(directory, self, keep=keep)
+
+    @classmethod
+    def open(cls, directory: str, *, snap: Optional[int] = None
+             ) -> "SymbolicStore":
+        """Reopen the latest (or a specific) snapshot from disk."""
+        from repro.store.snapshot import open_store
+        return open_store(directory, snap=snap)

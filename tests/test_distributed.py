@@ -58,6 +58,53 @@ def test_sharded_matching_equals_oracle():
     assert "sharded matching OK" in out
 
 
+def test_engine_service_ingest_while_serving():
+    """make_engine_service over a SymbolicStore: ragged chunks are encoded
+    sharded (old rows never re-encoded) and served by the next query,
+    exact and approximate, matching the single-device oracle."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import SSAX
+        from repro.core.distributed import make_engine_service
+        from repro.core.matching import pairwise_euclidean
+        from repro.data.synthetic import season_dataset
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat((8,), ("data",))
+        X = season_dataset(n=560, T=480, L=10, strength=0.7, seed=5)
+        Q, D = X[:4], X[4:516]                        # 512 = 8 shards x 64
+        ss = SSAX(T=480, W=24, L=10, A_seas=32, A_res=32, r2_season=0.7)
+        engine = make_engine_service(ss, jnp.asarray(D), mesh)
+        base_version = engine.store.version
+
+        extra = X[516:547]                            # ragged: 31 rows
+        engine.ingest(extra)
+        assert engine.store.version == base_version + 1
+        D2 = np.concatenate([D, extra])
+        ed = np.asarray(pairwise_euclidean(jnp.asarray(Q),
+                                           jnp.asarray(D2)))
+        res = engine.topk(Q, k=8)
+        np.testing.assert_array_equal(
+            res.indices, np.argsort(ed, axis=1, kind="stable")[:, :8])
+
+        # chunk-encoded rep must equal the store's own host encode path
+        rep_one = ss.encode(jnp.asarray(D2, jnp.float32))
+        for got, want in zip(engine.store.rep_view(), rep_one):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+
+        # ingest the queries: both paths serve them immediately
+        ids = engine.ingest(Q)
+        res = engine.topk(Q, k=1)
+        np.testing.assert_array_equal(res.indices[:, 0], ids)
+        assert np.allclose(res.distances, 0.0, atol=1e-5)
+        res = engine.topk(Q, k=4, exact=False)
+        np.testing.assert_array_equal(res.indices[:, 0], ids)
+        print("service ingest OK")
+    """)
+    assert "service ingest OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     out = _run("""
         import dataclasses

@@ -143,6 +143,54 @@ def test_merge_device_equals_numpy_no_ties():
     np.testing.assert_array_equal(ni, di)
 
 
+def test_merge_device_tie_break_by_dataset_index():
+    """Regression: the device merge must share the host tie-break contract
+    — equal distances resolve to the smaller dataset index regardless of
+    candidate position, and -1 padding sorts last."""
+    d = np.asarray([[1.0, 0.5, 0.5, 0.5, np.inf],
+                    [2.0, 2.0, 2.0, 2.0, 2.0]], np.float32)
+    i = np.asarray([[4, 9, 2, 7, -1],
+                    [30, 10, 50, 20, 40]], np.int64)
+    nd, ni = merge_topk_numpy(d, i, 3)
+    dd, di = merge_topk_device(d, i, 3)
+    np.testing.assert_array_equal(ni, [[2, 7, 9], [10, 20, 30]])
+    np.testing.assert_array_equal(di, ni)
+    np.testing.assert_allclose(dd, nd, rtol=1e-6)
+
+
+def test_engine_device_merge_bitwise_on_duplicated_rows(datasets):
+    """With duplicated dataset rows (exact distance ties) the
+    device-merge engine must still match the stable brute force."""
+    enc, X = datasets["ssax"]
+    Q, D = X[:N_Q], X[N_Q:N_Q + 150]
+    D = np.concatenate([D, D[:40]])          # 40 exact duplicates
+    res = MatchEngine(enc, RawStore.ssd(D), verify="numpy",
+                      device_merge=True).topk(Q, k=8)
+    want_i, want_d = _bruteforce_topk(Q, D, 8)
+    np.testing.assert_array_equal(res.indices, want_i)
+    np.testing.assert_allclose(res.distances, want_d, rtol=1e-6)
+
+
+def test_topk_verify_seeded_never_reverifies_inf_columns():
+    """Regression: with a seeded frontier, +inf-bound columns (seeded or
+    other-query candidates in a sparse sweep) must never be verified —
+    over-fetching one used to duplicate a seeded member in the merge."""
+    rng = np.random.default_rng(7)
+    D = rng.normal(size=(30, 16)).astype(np.float32)
+    q = rng.normal(size=(16,)).astype(np.float32)
+    d_true = np.sqrt(np.sum((D - q[None]) ** 2, -1))
+    seed_ids = np.argsort(d_true, kind="stable")[:2]
+    init_d = d_true[seed_ids][None]
+    rd = np.where(np.isin(np.arange(30), seed_ids), np.inf,
+                  d_true * 0.5)[None]
+    store = RawStore.ssd(D)
+    res = topk_verify(q[None], rd, store, k=4, batch_size=64,
+                      init_d=init_d, init_i=seed_ids[None])
+    want = np.argsort(d_true, kind="stable")[:4]
+    np.testing.assert_array_equal(res.indices[0], want)
+    assert len(np.unique(res.indices[0])) == 4
+
+
 def test_topk_verify_single_query_1d_inputs():
     rng = np.random.default_rng(2)
     D = rng.normal(size=(50, 64)).astype(np.float32)

@@ -69,6 +69,25 @@ def test_approximate_match_tie_breaking():
     assert store.accesses == 2
 
 
+def test_raw_store_empty_fetch_charges_nothing():
+    """Regression: an all-pruned round (empty index array) must return a
+    (0, T) block and bill neither a seek nor a row access."""
+    D = np.arange(12, dtype=np.float32).reshape(3, 4)
+    store = RawStore.ssd(D)
+    out = store.fetch(np.empty(0, np.int64))
+    assert out.shape == (0, 4) and out.dtype == np.float32
+    out = store.fetch([])                  # plain empty list, too
+    assert out.shape == (0, 4)
+    assert store.accesses == 0 and store.fetches == 0
+    assert store.modeled_io_seconds() == 0.0
+    # non-empty fetch still bills exactly one seek
+    store.fetch([0, 2])
+    assert store.accesses == 2 and store.fetches == 1
+    # boolean masks keep selecting rows (not coerced to indices 0/1)
+    np.testing.assert_array_equal(
+        store.fetch(np.asarray([False, True, True])), D[1:])
+
+
 def test_raw_store_cost_model_ordering():
     D = np.zeros((10, 960), np.float32)
     n = 1000

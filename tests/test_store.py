@@ -1,0 +1,199 @@
+"""SymbolicStore (repro/store): incremental append must be bit-identical
+to one-shot encoding for every encoder, the RawStore protocol must hold,
+snapshots must round-trip engine and index results exactly, and
+engine/service consumers must serve appended rows immediately."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SAX, SSAX, STSAX, TSAX, MatchEngine, OneDSAX
+from repro.core.matching import RawStore
+from repro.data.synthetic import season_dataset
+from repro.store import SymbolicStore, rep_leaves
+
+N, N_Q, T, L = 300, 4, 480, 10
+
+
+@pytest.fixture(scope="module")
+def season():
+    X = season_dataset(n=N + N_Q, T=T, L=L, strength=0.7, seed=21)
+    return X[:N_Q], X[N_Q:]
+
+
+ENCODERS = {
+    "sax": SAX(T=T, W=24, A=64),
+    "ssax": SSAX(T=T, W=24, L=L, A_seas=32, A_res=32, r2_season=0.7),
+    "tsax": TSAX(T=T, W=24, A_tr=32, A_res=32, r2_trend=0.5),
+    "stsax": STSAX(T=T, W=24, L=10, A_tr=16, A_seas=16, A_res=32,
+                   r2_trend=0.3, r2_season=0.4),
+    "onedsax": OneDSAX(T=T, W=24, A_a=16, A_s=16),
+}
+
+
+@pytest.mark.parametrize("tech", sorted(ENCODERS))
+def test_append_chunked_bit_identical_to_oneshot(season, tech):
+    _, D = season
+    enc = ENCODERS[tech]
+    oneshot = [np.asarray(l)
+               for l in rep_leaves(enc.encode(jnp.asarray(D, jnp.float32)))]
+    # deliberate arbitrary split pattern incl. single rows
+    store2 = SymbolicStore(enc)
+    splits = [0, 1, 2, 130, 131, 258, N]
+    for lo, hi in zip(splits[:-1], splits[1:]):
+        store2.append(D[lo:hi])
+    assert store2.n == N
+    for got, want in zip(rep_leaves(store2.rep_view()), oneshot):
+        np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(store2.data, D.astype(np.float32))
+
+
+def test_store_rawstore_protocol(season):
+    _, D = season
+    store = SymbolicStore.from_rows(ENCODERS["ssax"], D, media="hdd")
+    ref = RawStore.hdd(D)
+    rows = store.fetch([3, 5, 7])
+    np.testing.assert_array_equal(rows, D[[3, 5, 7]])
+    assert store.accesses == 3 and store.fetches == 1
+    assert store.modeled_io_seconds() == \
+        pytest.approx(ref.modeled_io_seconds(3, 1))
+    # empty fetch: no rows, no modeled seek
+    empty = store.fetch(np.empty(0, np.int64))
+    assert empty.shape == (0, T)
+    assert store.fetches == 1
+    store.reset()
+    assert store.accesses == 0 and store.fetches == 0
+
+
+def test_engine_over_store_matches_rawstore_engine(season):
+    Q, D = season
+    enc = ENCODERS["ssax"]
+    res_store = MatchEngine(enc, SymbolicStore.from_rows(enc, D),
+                            verify="numpy").topk(Q, k=5)
+    res_raw = MatchEngine(enc, RawStore.ssd(D), verify="numpy").topk(Q, k=5)
+    np.testing.assert_array_equal(res_store.indices, res_raw.indices)
+    np.testing.assert_array_equal(res_store.distances, res_raw.distances)
+
+
+def test_engine_serves_appended_rows_immediately(season):
+    Q, D = season
+    enc = ENCODERS["ssax"]
+    engine = MatchEngine(enc, SymbolicStore.from_rows(enc, D),
+                         verify="numpy")
+    ids = engine.append(Q)               # ingest the queries themselves
+    res = engine.topk(Q, k=1)
+    np.testing.assert_array_equal(res.indices[:, 0], ids)
+    assert np.allclose(res.distances, 0.0, atol=1e-5)
+    # a RawStore-backed engine cannot ingest
+    with pytest.raises(TypeError):
+        MatchEngine(enc, RawStore.ssd(D), verify="numpy").append(Q)
+
+
+def test_engine_empty_store_returns_empty_result(season):
+    """Querying before the first ingest must return an empty, well-formed
+    result (0-width frontier), not crash — exact and approximate."""
+    Q, _ = season
+    enc = ENCODERS["ssax"]
+    engine = MatchEngine(enc, SymbolicStore(enc), verify="numpy")
+    for exact in (True, False):
+        res = engine.topk(Q, k=4, exact=exact)
+        assert res.indices.shape == (N_Q, 0)
+        assert res.store_fetches == 0 and (res.raw_accesses == 0).all()
+
+
+def test_engine_rejects_mismatched_store_encoder(season):
+    _, D = season
+    store = SymbolicStore.from_rows(ENCODERS["ssax"], D)
+    with pytest.raises(ValueError):
+        MatchEngine(SSAX(T=T, W=24, L=L, A_seas=16, A_res=16,
+                         r2_season=0.3), store)
+
+
+@pytest.mark.parametrize("tech", ["sax", "ssax", "tsax"])
+def test_snapshot_roundtrip_bitwise(tmp_path, season, tech):
+    Q, D = season
+    enc = ENCODERS[tech]
+    store = SymbolicStore.from_rows(enc, D, media="hdd")
+    store.save(str(tmp_path))
+    reopened = SymbolicStore.open(str(tmp_path))
+    assert reopened.n == store.n
+    assert reopened.encoder == enc
+    assert reopened.seek_s == store.seek_s
+    np.testing.assert_array_equal(reopened.data, store.data)
+    for got, want in zip(rep_leaves(reopened.rep_view()),
+                         rep_leaves(store.rep_view())):
+        np.testing.assert_array_equal(got, want)
+    # engine answers are reproduced exactly
+    r0 = MatchEngine(enc, store, verify="numpy").topk(Q, k=7)
+    r1 = MatchEngine(enc, reopened, verify="numpy").topk(Q, k=7)
+    np.testing.assert_array_equal(r0.indices, r1.indices)
+    np.testing.assert_array_equal(r0.distances, r1.distances)
+    # reopened store keeps ingesting
+    reopened.append(Q)
+    assert reopened.n == store.n + N_Q
+
+
+def test_snapshot_roundtrip_index(tmp_path, season):
+    Q, D = season
+    enc = ENCODERS["ssax"]
+    store = SymbolicStore.from_rows(enc, D)
+    store.build_index(max_bits=5, leaf_capacity=16)
+    store.save(str(tmp_path))
+    reopened = SymbolicStore.open(str(tmp_path))
+    assert reopened.index is not None
+    assert reopened.index.n_nodes == store.index.n_nodes
+    sq, rq = enc.features(jnp.asarray(Q, jnp.float32))
+    r0 = store.index.topk(np.asarray(sq), np.asarray(rq), store, Q, k=3)
+    r1 = reopened.index.topk(np.asarray(sq), np.asarray(rq), reopened, Q,
+                             k=3)
+    np.testing.assert_array_equal(r0.indices, r1.indices)
+    np.testing.assert_array_equal(r0.distances, r1.distances)
+
+
+def test_snapshot_latest_pointer_and_gc(tmp_path, season):
+    _, D = season
+    store = SymbolicStore.from_rows(ENCODERS["sax"], D)
+    for _ in range(4):                   # keep=3 -> oldest GC'd
+        store.append(D[:1])
+        store.save(str(tmp_path))
+    snaps = sorted(p.name for p in tmp_path.iterdir()
+                   if p.name.startswith("snap_"))
+    assert len(snaps) == 3
+    assert (tmp_path / "LATEST").read_text() == snaps[-1]
+    reopened = SymbolicStore.open(str(tmp_path))
+    assert reopened.n == store.n
+
+
+def test_append_invalidates_index(season):
+    _, D = season
+    store = SymbolicStore.from_rows(ENCODERS["ssax"], D)
+    store.build_index(max_bits=4, leaf_capacity=32)
+    assert store.index is not None
+    store.append(D[:2])
+    assert store.index is None           # stale coverage must not linger
+
+
+def test_open_rejects_corruption_and_drifted_breakpoints(tmp_path, season):
+    """Tampered arrays fail the content hash; a snapshot whose stored
+    breakpoint tables disagree with the rebuilt encoder (hash intact,
+    library drifted) must also refuse to open — symbols would be
+    re-interpreted."""
+    import json
+    import os
+    from repro.store.snapshot import _content_hash
+    _, D = season
+    store = SymbolicStore.from_rows(ENCODERS["ssax"], D)
+    path = store.save(str(tmp_path))
+    arrays = dict(np.load(os.path.join(path, "arrays.npz")))
+    arrays["bp_b_res"] = arrays["bp_b_res"] + 0.25
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with pytest.raises(ValueError, match="hash mismatch"):
+        SymbolicStore.open(str(tmp_path))
+    # consistent hash but drifted tables: the breakpoint check fires
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["hash"] = _content_hash(arrays)
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ValueError, match="drifted"):
+        SymbolicStore.open(str(tmp_path))
