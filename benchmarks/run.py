@@ -7,6 +7,7 @@ Paper artifact map:
     entropy  -> Fig. 4      tlb      -> Fig. 5     pruning -> Fig. 6
     approx   -> Fig. 7      matching -> Table 5    kernels -> (engine)
     ingest   -> (store subsystem: append throughput + query-under-ingest)
+    subseq   -> (subsequence subsystem: pruned windowed scan vs brute)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -17,7 +18,7 @@ import importlib
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
-          "extensions", "ingest", "roofline", "perf"]
+          "extensions", "ingest", "subseq", "roofline", "perf"]
 
 
 def main() -> None:

@@ -1,0 +1,87 @@
+"""Subsequence matching walkthrough: plant a pattern inside long series,
+then localize it exactly — anywhere, at any offset — through the
+season-aware pruned windowed scan (repro.subseq).
+
+    PYTHONPATH=src python examples/subsequence_matching.py
+
+The flow mirrors the paper's whole-matching pipeline (quickstart.py)
+lifted to sliding windows:
+
+1. a corpus of long seasonal series; a noisy copy of one snippet is
+   implanted at known (row, offset) positions;
+2. a ``WindowView`` encodes every z-normalized window of length m
+   incrementally (representation only — the window matrix never
+   materializes);
+3. a ``SubseqEngine`` answers exact top-k window queries through the
+   same frontier machinery as whole matching, reading only the
+   underlying rows the candidate order touches;
+4. non-overlap suppression returns the k distinct occurrences instead
+   of k shifted copies of the best one;
+5. appended series are searchable immediately (streaming ingest).
+"""
+
+import numpy as np
+
+from repro.core import SSAX
+from repro.data.synthetic import season_dataset
+from repro.subseq import SubseqEngine, WindowView
+
+N, T = 24, 2400          # corpus: 24 series of 2400 samples
+M, STRIDE = 240, 1       # windows: length 240, every offset
+L = 10
+
+
+def main():
+    rng = np.random.default_rng(11)
+    X = season_dataset(N, T, L, strength=0.7,
+                       per_series_strength=True, seed=11)
+
+    # 1. implant a noisy copy of one snippet at three known positions
+    template = X[7, 1000:1000 + M].copy()
+    plants = [(7, 1000), (15, 416), (21, 1812)]      # (row, offset)
+    for r, o in plants[1:]:
+        X[r, o:o + M] = template + 0.1 * rng.normal(size=M)\
+            .astype(np.float32)
+
+    # 2. window view: every z-normalized window, encoded incrementally
+    ssax = SSAX(T=M, W=M // L, L=L, A_seas=16, A_res=32, r2_season=0.7)
+    view = WindowView(ssax, X, stride=STRIDE, media="hdd")
+    print(f"corpus: {N} series x {T} samples -> {view.n} windows "
+          f"(m={M}, stride={STRIDE}); only the symbolic rep is stored")
+
+    # 3. exact top-1: localize the pattern from a fresh noisy observation
+    engine = SubseqEngine(view, batch_size=256)
+    query = template + 0.02 * rng.normal(size=M).astype(np.float32)
+    view.reset()
+    res = engine.topk(query, k=1)
+    r, s = res.rows[0, 0], res.starts[0, 0]
+    print(f"top-1: row {r} @ {s} (planted at {plants[0]}), "
+          f"d={res.distances[0, 0]:.3f}; verified "
+          f"{res.raw_accesses[0]} of {view.n} windows "
+          f"({res.pruned_fraction[0]:.1%} pruned), read "
+          f"{res.store_accesses}/{N} rows, modeled HDD "
+          f"{res.io_seconds * 1e3:.1f}ms")
+
+    # 4. top-3 occurrences need suppression: without it, the best
+    # window's one-sample shifts crowd out the other plants
+    naive = engine.topk(query, k=3)
+    sup = engine.topk(query, k=3, exclusion=M // 2)
+    fmt = lambda rr: ", ".join(
+        f"(row {a} @ {b})" for a, b in zip(rr.rows[0], rr.starts[0]))
+    print(f"top-3 without suppression: {fmt(naive)}")
+    print(f"top-3 with  suppression:   {fmt(sup)}   "
+          f"<- the three planted occurrences")
+
+    # 5. streaming: a new series with a fourth occurrence
+    extra = season_dataset(1, T, L, 0.7, seed=99)
+    extra[0, 600:600 + M] = template + 0.1 * rng.normal(size=M)\
+        .astype(np.float32)
+    view.append(extra)
+    res = engine.topk(query, k=4, exclusion=M // 2)
+    print(f"after append: top-4 occurrences {fmt(res)}")
+    print("-> the window set grew by one series and the new occurrence "
+          "is found without re-encoding anything")
+
+
+if __name__ == "__main__":
+    main()

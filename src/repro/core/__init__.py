@@ -13,6 +13,7 @@ from repro.core.tsax import TSAX, trend_features, trend_strength  # noqa: F401
 from repro.core.onedsax import OneDSAX  # noqa: F401
 from repro.core.stsax import STSAX  # noqa: F401
 from repro.core.index import SSaxIndex  # noqa: F401
+from repro.core.techniques import TECHNIQUES, make_technique  # noqa: F401
 from repro.core.matching import (  # noqa: F401
     exact_match, approximate_match, euclidean)
 from repro.core.engine import (  # noqa: F401

@@ -318,6 +318,28 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
 # Engine
 # ---------------------------------------------------------------------------
 
+class DeviceRepCache:
+    """Device-resident copy of a live representation — anything with the
+    ``rep_view()`` + ``version`` protocol (``SymbolicStore``,
+    ``subseq.WindowView``) — refreshed only when the version changes, so
+    appends are served without paying a host->device transfer per query."""
+
+    def __init__(self, store):
+        self._store = store
+        self._val = None
+        self._version = -1
+
+    def get(self):
+        if self._version != self._store.version:
+            import jax.numpy as jnp
+            view = self._store.rep_view()
+            leaves = view if isinstance(view, tuple) else (view,)
+            dev = tuple(jnp.asarray(l) for l in leaves)
+            self._val = dev if isinstance(view, tuple) else dev[0]
+            self._version = self._store.version
+        return self._val
+
+
 class MatchEngine:
     """Batched multi-query top-k matcher over one encoder + store.
 
@@ -360,8 +382,8 @@ class MatchEngine:
         if self._sym is not None and self._sym.encoder != encoder:
             raise ValueError("SymbolicStore was built for a different "
                              "encoder configuration than this engine's")
-        self._rep_cache = None           # device copy of the store's rep
-        self._rep_cache_v = -1           # ...valid for this store version
+        self._rep_cache = (DeviceRepCache(self._sym)
+                           if self._sym is not None else None)
         if rep is not None or repr_fn is not None:
             self._rep = rep
         elif self._sym is not None:
@@ -373,22 +395,14 @@ class MatchEngine:
     @property
     def rep(self):
         """Dataset representation: when backed by a ``SymbolicStore``, a
-        device-resident copy of the store's live representation, refreshed
-        only when the store version changes (append-aware without paying a
-        host->device transfer per query); else the construction-time (or
-        explicitly passed) representation."""
+        device-resident copy of the store's live representation
+        (``DeviceRepCache``); else the construction-time (or explicitly
+        passed) representation."""
         if self._rep is not None:
             return self._rep
-        if self._sym is None:
+        if self._rep_cache is None:
             return None
-        if self._rep_cache_v != self._sym.version:
-            import jax.numpy as jnp
-            view = self._sym.rep_view()
-            leaves = view if isinstance(view, tuple) else (view,)
-            dev = tuple(jnp.asarray(l) for l in leaves)
-            self._rep_cache = dev if isinstance(view, tuple) else dev[0]
-            self._rep_cache_v = self._sym.version
-        return self._rep_cache
+        return self._rep_cache.get()
 
     def append(self, rows) -> np.ndarray:
         """Ingest rows into the backing ``SymbolicStore`` (incremental

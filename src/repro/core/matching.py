@@ -88,7 +88,10 @@ class RawStore:
             # (np.asarray([]) would otherwise arrive float64 and crash
             # the gather)
             return np.empty((0,) + self.data.shape[1:], self.data.dtype)
-        self.accesses += int(idx.size)
+        # a physical row is read once per fetch no matter how many times
+        # it appears in idx (subsequence verification asks for overlapping
+        # windows of the same underlying rows) — bill deduplicated
+        self.accesses += int(np.unique(idx).size)
         self.fetches += 1
         return self.data[idx]
 

@@ -1,0 +1,34 @@
+"""One factory for the paper's four techniques at the repo's standard
+alphabet budget (SAX 64; sSAX 16/32; tSAX 64/32; stSAX 16/16/32), so the
+launchers and benchmarks construct encoders in exactly one place."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+TECHNIQUES = ("sax", "ssax", "tsax", "stsax")
+
+
+def make_technique(name: str, *, T: int, W: int, L: int = 10,
+                   r2_season: float = 0.7,
+                   r2_trend: Optional[float] = None):
+    """Build encoder ``name`` for series length ``T`` with ``W`` segments.
+
+    ``r2_season`` is the deterministic-component strength; ``r2_trend``
+    defaults to it for tSAX (there the trend IS the component) and to a
+    mild 0.2 for stSAX's trend share.
+    """
+    from repro.core import SAX, SSAX, STSAX, TSAX
+    if name == "sax":
+        return SAX(T=T, W=W, A=64)
+    if name == "ssax":
+        return SSAX(T=T, W=W, L=L, A_seas=16, A_res=32,
+                    r2_season=r2_season)
+    if name == "tsax":
+        return TSAX(T=T, W=W, A_tr=64, A_res=32,
+                    r2_trend=r2_season if r2_trend is None else r2_trend)
+    if name == "stsax":
+        return STSAX(T=T, W=W, L=L, A_tr=16, A_seas=16, A_res=32,
+                     r2_trend=0.2 if r2_trend is None else r2_trend,
+                     r2_season=r2_season)
+    raise ValueError(f"unknown technique {name!r}; options {TECHNIQUES}")

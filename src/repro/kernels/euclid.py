@@ -2,15 +2,18 @@
 
 d2[qi, n] = sum_t (x[n, t] - q[qi, t])^2 for the candidate batch that
 survived pruning, for one query or a whole query batch.  Grid tiles
-(queries x candidates x time); partial sums accumulate into the output
-block across the time-tile axis (the output BlockSpec revisits the same
-block for every j, so out_ref acts as the accumulator).
+(query-tiles x candidates x time); partial sums accumulate into the
+output block across the time-tile axis (the output BlockSpec revisits the
+same block for every j, so out_ref acts as the accumulator).  The query
+axis is tiled in blocks of ``BLK_Q`` so large query batches fill the grid
+instead of launching one program per query.
 
-Ragged shapes are handled internally: N and T are zero-padded up to block
-multiples before the kernel launches and the padded rows are sliced out
-of the result, so verification batches of any size coming out of pruning
-are legal inputs.  Zero-padding the time axis pads both ``x`` and ``q``,
-contributing exactly 0 to every distance.
+Ragged shapes are handled internally: Q, N and T are zero-padded up to
+block multiples before the kernel launches and the padded rows are sliced
+out of the result, so verification batches of any size coming out of
+pruning are legal inputs.  Zero-padding the time axis pads both ``x`` and
+``q``, contributing exactly 0 to every distance; zero-padded queries
+produce rows that are sliced away.
 """
 
 from __future__ import annotations
@@ -19,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+BLK_Q = 8
 BLK_N = 128
 BLK_T = 2048
 
@@ -26,9 +30,15 @@ BLK_T = 2048
 def _kernel(x_ref, q_ref, out_ref):
     j = pl.program_id(2)
     x = x_ref[...].astype(jnp.float32)        # (BLK_N, BLK_T)
-    q = q_ref[...].astype(jnp.float32)        # (1, BLK_T)
-    d = x - q
-    part = jnp.sum(d * d, axis=-1)[None, :]   # (1, BLK_N)
+    q = q_ref[...].astype(jnp.float32)        # (BLK_Q, BLK_T)
+    # one reduction per query row keeps the per-(query, candidate)
+    # arithmetic identical to the single-query kernel (and to numpy):
+    # each distance is still one elementwise subtract + sum over T
+    rows = []
+    for r in range(q.shape[0]):
+        d = x - q[r][None, :]
+        rows.append(jnp.sum(d * d, axis=-1))
+    part = jnp.stack(rows, axis=0)            # (BLK_Q, BLK_N)
 
     @pl.when(j == 0)
     def _init():
@@ -42,7 +52,7 @@ def _kernel(x_ref, q_ref, out_ref):
 def euclid_pallas(x, q, *, interpret: bool = False):
     """x: (N, T); q: (T,) or (Q, T) -> (N,) or (Q, N) f32 squared distances.
 
-    Accepts ragged N / T (padded internally to block multiples; padded
+    Accepts ragged Q / N / T (padded internally to block multiples; padded
     rows are masked out of the result).
     """
     squeeze = q.ndim == 1
@@ -50,26 +60,28 @@ def euclid_pallas(x, q, *, interpret: bool = False):
         q = q[None, :]
     N, T = x.shape
     Q = q.shape[0]
+    blk_q = min(BLK_Q, Q)
     blk_n = min(BLK_N, N)
     blk_t = min(BLK_T, T)
+    pad_q = (-Q) % blk_q
     pad_n = (-N) % blk_n
     pad_t = (-T) % blk_t
     if pad_n or pad_t:
         x = jnp.pad(x, ((0, pad_n), (0, pad_t)))
-    if pad_t:
-        q = jnp.pad(q, ((0, 0), (0, pad_t)))
-    np_, tp = N + pad_n, T + pad_t
-    grid = (Q, np_ // blk_n, tp // blk_t)
+    if pad_q or pad_t:
+        q = jnp.pad(q, ((0, pad_q), (0, pad_t)))
+    qp, np_, tp = Q + pad_q, N + pad_n, T + pad_t
+    grid = (qp // blk_q, np_ // blk_n, tp // blk_t)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((blk_n, blk_t), lambda qi, i, j: (i, j)),
-            pl.BlockSpec((1, blk_t), lambda qi, i, j: (qi, j)),
+            pl.BlockSpec((blk_q, blk_t), lambda qi, i, j: (qi, j)),
         ],
-        out_specs=pl.BlockSpec((1, blk_n), lambda qi, i, j: (qi, i)),
-        out_shape=jax.ShapeDtypeStruct((Q, np_), jnp.float32),
+        out_specs=pl.BlockSpec((blk_q, blk_n), lambda qi, i, j: (qi, i)),
+        out_shape=jax.ShapeDtypeStruct((qp, np_), jnp.float32),
         interpret=interpret,
     )(x, q)
-    out = out[:, :N]
+    out = out[:Q, :N]
     return out[0] if squeeze else out

@@ -24,6 +24,7 @@ from repro.kernels.euclid import euclid_pallas
 from repro.kernels.paa import paa_pallas
 from repro.kernels.sax_dist import sax_dist_pallas
 from repro.kernels.ssax_dist import ssax_dist_pallas
+from repro.kernels.windowed_euclid import windowed_euclid_pallas
 
 
 def _on_tpu() -> bool:
@@ -100,9 +101,23 @@ def paa_segments(x, n_segments: int, use_kernel: bool = True):
 def euclid_batch(x, q, use_kernel: bool = True):
     """(N, T) vs (T,) or (Q, T) -> (N,) or (Q, N) squared distances.
 
-    Ragged N / T pad inside ``euclid_pallas`` itself."""
+    Ragged Q / N / T pad inside ``euclid_pallas`` itself."""
     if not use_kernel:
         if q.ndim == 1:
             return ref.euclid_ref(x, q)
         return jnp.stack([ref.euclid_ref(x, qi) for qi in q])
     return euclid_pallas(x, q, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "use_kernel"))
+def windowed_euclid(x, q, stride: int = 1, use_kernel: bool = True):
+    """(N, T) raw rows vs (m,) or (Q, m) z-normalized queries ->
+    (N, S) or (Q, N, S) squared z-normalized window distances (the
+    MASS-style distance profile).  Ragged N / S pad inside
+    ``windowed_euclid_pallas`` itself."""
+    if not use_kernel:
+        if q.ndim == 1:
+            return ref.windowed_euclid_ref(x, q[None], stride)[0]
+        return ref.windowed_euclid_ref(x, q, stride)
+    return windowed_euclid_pallas(x, q, stride=stride,
+                                  interpret=not _on_tpu())

@@ -49,3 +49,18 @@ def euclid_ref(x, q):
     """(N, T) vs (T,) -> (N,) squared Euclidean distances."""
     d = x - q[None, :]
     return jnp.sum(jnp.square(d), axis=-1)
+
+
+def windowed_euclid_ref(x, q, stride: int = 1):
+    """(N, T) raw rows vs (Q, m) z-normalized queries -> (Q, N, S)
+    squared distances to every z-normalized length-m window at ``stride``
+    (S = (T - m) // stride + 1), windows materialized explicitly."""
+    from repro.core.normalize import znormalize
+    m = q.shape[-1]
+    T = x.shape[-1]
+    S = (T - m) // stride + 1
+    starts = jnp.arange(S) * stride
+    idx = starts[:, None] + jnp.arange(m)[None, :]     # (S, m)
+    w = znormalize(x[:, idx])                          # (N, S, m)
+    d = w[None] - q[:, None, None, :]                  # (Q, N, S, m)
+    return jnp.sum(jnp.square(d), axis=-1)

@@ -1,0 +1,140 @@
+"""Pallas kernel: MASS-style z-normalized windowed squared distances.
+
+For a (Q, m) batch of z-normalized queries and an (N, T) raw corpus,
+computes
+
+    d2[qi, n, s] = || znorm(x[n, s*stride : s*stride + m]) - q[qi] ||^2
+
+for every window start ``s`` — the distance profile that subsequence
+matching brute-forces — WITHOUT materializing the N * S windows.  Like
+MASS (Mueen et al.), each window's mean / std come from rolling
+sum / sum-of-squares statistics; unlike MASS we compute the sliding dot
+product directly (an m-step accumulation over the window tile, vectorized
+across ``BLK_N`` rows x ``BLK_S`` window starts on the VPU) instead of an
+FFT, which Pallas does not provide.  Per program instance:
+
+* the rolling statistics are O(1) per window: one cumulative sum over the
+  slab and two strided slices give every window's sum and sum-of-squares;
+* with window mean mu and std sigma (clamped at ``EPS`` exactly like
+  :func:`repro.core.normalize.znormalize`), the distance expands to
+
+      d2 = sum(q^2) + (S2 - m*mu^2)/sigma_c^2 - 2*(dot - mu*sum(q))/sigma_c
+
+  so only the three slab reductions are needed.
+
+Grid tiles (queries x row-blocks x window-tiles) like
+``kernels/euclid.py``; ragged N / S pad internally to block multiples and
+the padded rows / window starts are sliced out of the result.  The time
+axis is zero-padded so the last window tile's slab slice stays in bounds
+(padded windows are computed on zeros and discarded).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_N = 8          # corpus rows per program (each holds its full row)
+BLK_S = 512        # window starts per program
+
+EPS = 1e-12        # must match repro.core.normalize.znormalize
+
+
+def n_windows(T: int, m: int, stride: int) -> int:
+    """Number of length-m windows of a length-T series at ``stride``."""
+    if m > T:
+        raise ValueError(f"window m={m} longer than series T={T}")
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    return (T - m) // stride + 1
+
+
+def _kernel(x_ref, q_ref, out_ref, *, m: int, stride: int, blk_s: int):
+    j = pl.program_id(2)
+    x = x_ref[...].astype(jnp.float32)            # (BLK_N, T_pad)
+    q = q_ref[...].astype(jnp.float32)            # (1, m)
+    blk_n = x.shape[0]
+    span = (blk_s - 1) * stride + 1               # strided starts footprint
+    slab_len = span - 1 + m
+    t0 = j * blk_s * stride
+    slab = jax.lax.dynamic_slice(x, (0, t0), (blk_n, slab_len))
+
+    # rolling window sums / sums of squares via one cumulative sum each:
+    # window s covers slab[:, s*stride : s*stride + m]
+    zero = jnp.zeros((blk_n, 1), jnp.float32)
+    cs1 = jnp.concatenate([zero, jnp.cumsum(slab, axis=1)], axis=1)
+    cs2 = jnp.concatenate([zero, jnp.cumsum(slab * slab, axis=1)], axis=1)
+    lo1 = jax.lax.slice(cs1, (0, 0), (blk_n, span), (1, stride))
+    hi1 = jax.lax.slice(cs1, (0, m), (blk_n, m + span), (1, stride))
+    lo2 = jax.lax.slice(cs2, (0, 0), (blk_n, span), (1, stride))
+    hi2 = jax.lax.slice(cs2, (0, m), (blk_n, m + span), (1, stride))
+    s1 = hi1 - lo1                                # (BLK_N, BLK_S)
+    s2 = hi2 - lo2
+
+    # sliding dot product: m vectorized accumulations over the tile
+    def body(i, acc):
+        xi = jax.lax.dynamic_slice(slab, (0, i), (blk_n, span))
+        qi = jax.lax.dynamic_slice(q, (0, i), (1, 1))
+        return acc + qi * xi[:, ::stride]
+
+    dot = jax.lax.fori_loop(0, m, body,
+                            jnp.zeros((blk_n, blk_s), jnp.float32))
+
+    mu = s1 / m
+    var = s2 / m - mu * mu
+    sig = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), EPS)
+    q_sum = jnp.sum(q)
+    q_ss = jnp.sum(q * q)
+    norm2 = jnp.maximum(s2 - m * mu * mu, 0.0) / (sig * sig)
+    d2 = q_ss + norm2 - 2.0 * (dot - mu * q_sum) / sig
+    # a zero-variance window z-normalizes to the zero vector (znormalize's
+    # eps guard), so its distance is exactly sum(q^2); the expanded form
+    # would divide rounding noise by eps instead
+    d2 = jnp.where(var > 0.0, d2, q_ss)
+    out_ref[...] = jnp.maximum(d2, 0.0)[None]     # (1, BLK_N, BLK_S)
+
+
+def windowed_euclid_pallas(x, q, *, stride: int = 1,
+                           interpret: bool = False):
+    """x: (N, T) raw rows; q: (m,) or (Q, m) z-normalized queries ->
+    (N, S) or (Q, N, S) f32 squared distances to every z-normalized
+    window, S = (T - m) // stride + 1.
+
+    Accepts ragged N / S (padded internally to block multiples; padded
+    rows and window starts are sliced out of the result).
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None, :]
+    N, T = x.shape
+    Q, m = q.shape
+    S = n_windows(T, m, stride)
+    blk_n = min(BLK_N, N)
+    blk_s = min(BLK_S, S)
+    pad_n = (-N) % blk_n
+    pad_s = (-S) % blk_s
+    sp = S + pad_s
+    # the last window tile's slab reads up to (sp - 1)*stride + m
+    t_need = (sp - 1) * stride + m
+    pad_t = max(t_need - T, 0)
+    if pad_n or pad_t:
+        x = jnp.pad(x, ((0, pad_n), (0, pad_t)))
+    np_, tp = N + pad_n, T + pad_t
+    grid = (Q, np_ // blk_n, sp // blk_s)
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m, stride=stride, blk_s=blk_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, tp), lambda qi, i, j: (i, 0)),
+            pl.BlockSpec((1, m), lambda qi, i, j: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_n, blk_s),
+                               lambda qi, i, j: (qi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, np_, sp), jnp.float32),
+        interpret=interpret,
+    )(x, q)
+    out = out[:, :N, :S]
+    return out[0] if squeeze else out

@@ -53,13 +53,19 @@ class SymbolicStore:
     media:    "hdd" | "ssd" | "hbm" cost-model preset, or pass explicit
               ``seek_s`` / ``read_bps``.
     capacity: initial row capacity (grows by doubling).
+    store_raw: when False the store keeps ONLY the representation —
+              appended rows are encoded through the same chunked path but
+              their raw values are discarded (``fetch`` raises).  This is
+              the representation-only mode ``repro.subseq.WindowView``
+              uses so N * S sliding windows never materialize as rows.
     """
 
     def __init__(self, encoder, *, media: str = "ssd",
                  seek_s: Optional[float] = None,
                  read_bps: Optional[float] = None,
-                 capacity: int = 0):
+                 capacity: int = 0, store_raw: bool = True):
         self.encoder = encoder
+        self.store_raw = bool(store_raw)
         if seek_s is None or read_bps is None:
             if media not in MEDIA:
                 raise ValueError(
@@ -108,22 +114,25 @@ class SymbolicStore:
         return [np.asarray(leaf) for leaf in rep_leaves(rep)]
 
     def _grow(self, need: int):
-        if need <= self._cap and self._raw is not None:
+        if need <= self._cap and self._rep is not None:
             return
         new_cap = max(need, 2 * self._cap, _MIN_CAPACITY)
-        new_raw = np.empty((new_cap, self.T), np.float32)
-        if self._raw is None:
+        if self._rep is None:
             self._rep = [np.empty((new_cap,) + l.shape[1:], l.dtype)
                          for l in self._probe_rep_struct()]
+            if self.store_raw:
+                self._raw = np.empty((new_cap, self.T), np.float32)
         else:
-            new_raw[:self._n] = self._raw[:self._n]
             new_rep = []
             for old in self._rep:
                 arr = np.empty((new_cap,) + old.shape[1:], old.dtype)
                 arr[:self._n] = old[:self._n]
                 new_rep.append(arr)
             self._rep = new_rep
-        self._raw = new_raw
+            if self.store_raw:
+                new_raw = np.empty((new_cap, self.T), np.float32)
+                new_raw[:self._n] = self._raw[:self._n]
+                self._raw = new_raw
         self._cap = new_cap
 
     # -- ingest -----------------------------------------------------------
@@ -156,7 +165,8 @@ class SymbolicStore:
         self._grow(self._n + m)
         if len(leaves) != len(self._rep):
             raise ValueError("rep structure does not match the encoder")
-        self._raw[self._n:self._n + m] = rows
+        if self.store_raw:
+            self._raw[self._n:self._n + m] = rows
         for dst, src in zip(self._rep, leaves):
             if src.shape[0] != m or src.shape[1:] != dst.shape[1:]:
                 raise ValueError(
@@ -165,7 +175,8 @@ class SymbolicStore:
             dst[self._n:self._n + m] = src
         ids = np.arange(self._n, self._n + m, dtype=np.int64)
         self._n += m
-        self._io.data = self._raw[:self._n]
+        if self.store_raw:
+            self._io.data = self._raw[:self._n]
         self.version += 1
         self.index = None            # coverage changed; rebuild on demand
         return ids
@@ -200,6 +211,10 @@ class SymbolicStore:
         return self._io.fetches
 
     def fetch(self, idx) -> np.ndarray:
+        if not self.store_raw:
+            raise TypeError("store was built with store_raw=False: raw "
+                            "rows were discarded after encoding and "
+                            "cannot be fetched")
         return self._io.fetch(idx)
 
     def modeled_io_seconds(self, n_accesses: Optional[int] = None,
@@ -222,6 +237,10 @@ class SymbolicStore:
     def save(self, directory: str, *, keep: int = 3) -> str:
         """Write an atomic snapshot (see repro.store.snapshot); returns
         its final path."""
+        if not self.store_raw:
+            raise TypeError("store was built with store_raw=False: the "
+                            "snapshot format requires raw rows (re-derive "
+                            "the representation from the source instead)")
         from repro.store.snapshot import save_store
         return save_store(directory, self, keep=keep)
 

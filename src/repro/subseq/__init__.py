@@ -1,0 +1,47 @@
+"""Subsequence matching: sliding-window symbolic search over long series.
+
+The paper evaluates *whole matching* (§4.1): every query is compared
+against same-length dataset rows, candidates are visited in
+representation-distance order, and the scan stops once the best verified
+d_ED is <= the next representation distance — exact because every
+symbolic distance LOWER-BOUNDS d_ED (Appendix A.1–A.5).  Nothing in that
+argument requires the candidates to be distinct stored rows: it holds for
+any candidate set on which the encoder's bound applies.  This package
+instantiates it on the set of **z-normalized sliding windows** of long
+series, which turns the store + engine stack into a general subsequence
+search system:
+
+* :class:`~repro.subseq.windows.WindowView` enumerates the length-m,
+  stride-s windows of an (N, T) corpus and maintains their live symbolic
+  representation — encoded incrementally through the
+  ``repro.store.SymbolicStore`` chunked-encode path (``store_raw=False``,
+  so the N * S window matrix never materializes) and therefore
+  bit-identical to one-shot window encoding for any ingest chunking.
+  The view also speaks the ``RawStore`` verification protocol over
+  *window* indices: fetching candidate windows reads (deduplicated)
+  underlying rows through the source's I/O cost model and re-normalizes
+  the slices on the fly.
+* :class:`~repro.subseq.search.SubseqEngine` runs the paper's pruned
+  scan over window candidates via ``core.engine.topk_verify`` — same
+  representation-distance order, same k-th-best lower-bound early stop,
+  same (distance, index) tie-break — so its top-k windows are exactly
+  the brute-force windowed scan's, at a fraction of the raw I/O.
+  Optional temporal non-overlap suppression discards trivial matches
+  (windows overlapping an already-selected better match in the same
+  series).
+* :mod:`repro.kernels.windowed_euclid` is the brute-force side of the
+  bargain: a MASS-style Pallas kernel producing the full z-normalized
+  distance profile from rolling window statistics, used as the scan
+  baseline and for ``SubseqEngine.scan_topk``.
+
+Why the exactness argument transfers (§4.1): for windows w of the corpus
+and query q, both z-normalized, the encoder bound gives
+d_rep(enc(q), enc(w)) <= d_ED(q, w).  ``topk_verify`` only ever prunes a
+window whose representation distance is STRICTLY above the k-th best
+verified true distance, so — exactly as in the paper's proof — no pruned
+window can enter the true top-k, independent of how many windows share an
+underlying row.
+"""
+
+from repro.subseq.windows import WindowView  # noqa: F401
+from repro.subseq.search import SubseqEngine, SubseqResult  # noqa: F401

@@ -1,0 +1,238 @@
+"""``SubseqEngine``: batched exact top-k subsequence matching.
+
+Answers "find the k best-matching windows of length m anywhere in the
+corpus" for a (Q, m) query batch by routing window candidates through the
+whole-matching frontier machinery (``core.engine.topk_verify``):
+
+1. queries are z-normalized and encoded with the view's encoder;
+2. the (Q, n_windows) representation-distance matrix against the live
+   window representation is the lower-bounding candidate order;
+3. ``topk_verify`` visits windows in that order with the k-th-best
+   lower-bound early stop, fetching candidate windows through the
+   ``WindowView`` — which bills deduplicated *underlying rows* to the
+   ``RawStore`` I/O cost model — and verifying true z-normalized d_ED
+   on host (or the Pallas euclid kernel).
+
+Because every representation distance lower-bounds the true z-normalized
+window distance, the result is bit-identical to a brute-force windowed
+scan (the paper's §4.1 exactness argument applied to the window set; see
+``repro.subseq.__init__``).
+
+Non-overlap suppression: with ``exclusion > 0``, windows that overlap an
+already-selected better match (same source row, |start - start'| <
+exclusion samples) are suppressed — the standard guard against trivial
+matches one sample apart.  Selection stays exact: candidates are taken
+greedily in the verified (distance, window id) order, and the frontier is
+widened (and re-verified) until k non-overlapping survivors exist or the
+window set is exhausted.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import (
+    DeviceRepCache, make_verifier, merge_topk_device, merge_topk_numpy,
+    topk_verify)
+from repro.subseq.windows import WindowView, znorm_windows
+
+
+@dataclass
+class SubseqResult:
+    """Batched top-k window matches.  Rows padded with id/row/start -1 and
+    distance inf when fewer than k (non-overlapping) windows exist."""
+
+    window_ids: np.ndarray       # (Q, k) int64 dense window ids
+    rows: np.ndarray             # (Q, k) source row of each match
+    starts: np.ndarray           # (Q, k) start sample of each match
+    distances: np.ndarray        # (Q, k) true z-normalized d_ED
+    raw_accesses: np.ndarray     # (Q,) windows verified per query
+    pruned_fraction: np.ndarray  # (Q,) 1 - verified / n_windows
+    store_accesses: int          # deduplicated underlying-row reads
+    store_fetches: int           # batched fetch rounds (modeled seeks)
+    io_seconds: float            # modeled I/O of the underlying reads
+
+
+class SubseqEngine:
+    """Batched multi-query top-k subsequence matcher over a WindowView.
+
+    Parameters
+    ----------
+    view:        :class:`repro.subseq.WindowView` (encoder + corpus).
+    batch_size:  verification batch per query per round.
+    verify:      "auto" | "kernel" | "numpy" (see ``core.engine``);
+                 "numpy" is the bit-identical-to-brute-force host path.
+    device_merge: merge frontiers on device (lexsort contract).
+    """
+
+    def __init__(self, view: WindowView, *, batch_size: int = 64,
+                 verify: str = "numpy", device_merge: bool = False):
+        self.view = view
+        self.encoder = view.encoder
+        self.batch_size = batch_size
+        self.verifier = make_verifier(verify)
+        self.merge = merge_topk_device if device_merge else merge_topk_numpy
+        self._rep_cache = DeviceRepCache(view)
+
+    # -- representation sweep --------------------------------------------
+    @property
+    def rep(self):
+        """Device copy of the live window representation, refreshed only
+        when the view version changes (append-aware)."""
+        return self._rep_cache.get()
+
+    def normalize_queries(self, queries_raw) -> np.ndarray:
+        """(Q, m) raw queries -> z-normalized f32 (the matching space)."""
+        qs = np.asarray(queries_raw, np.float32)
+        if qs.ndim == 1:
+            qs = qs[None]
+        if qs.shape[-1] != self.view.m:
+            raise ValueError(f"queries have length {qs.shape[-1]}, "
+                             f"window length is m={self.view.m}")
+        return znorm_windows(qs)
+
+    def repr_distances(self, queries_z) -> np.ndarray:
+        """(Q, n_windows) lower-bounding representation distances for
+        already-normalized queries."""
+        import jax.numpy as jnp
+        q_rep = self.encoder.encode(jnp.asarray(queries_z, jnp.float32))
+        return np.asarray(self.encoder.pairwise_distance(q_rep, self.rep))
+
+    # -- matching ---------------------------------------------------------
+    def topk(self, queries_raw, k: int = 1, *, exclusion: int = 0,
+             batch_size: Optional[int] = None) -> SubseqResult:
+        """Top-k windows for a (Q, m) query batch (or a single (m,)
+        query), exact under z-normalized d_ED.
+
+        exclusion: minimum start-sample distance (same source row) between
+        two reported matches; 0 disables suppression.
+        """
+        zq = self.normalize_queries(queries_raw)
+        rd = self.repr_distances(zq)
+        bs = batch_size or self.batch_size
+        nw = rd.shape[1]
+        acc = {"rows": 0, "fetches": 0, "io": 0.0}
+        if exclusion <= 0:
+            res = topk_verify(zq, rd, self.view, k=k, batch_size=bs,
+                              verifier=self.verifier, merge=self.merge)
+            return self._wrap(res.indices, res.distances, res, nw, acc)
+
+        # widen the verified frontier until k non-overlapping survivors
+        # exist per query (or every window has been considered): greedy
+        # selection over the verified order is exact as long as the
+        # frontier was not cut before the k-th survivor.  Each widening
+        # round seeds the previous round's verified frontier (init_d /
+        # init_i, with those columns masked to +inf in the bound matrix)
+        # so surviving members are never fetched or verified twice.
+        k_fetch = min(nw, max(4 * k, k + 8))
+        rd = np.array(rd)                  # writeable: columns get masked
+        init_d = init_i = None
+        while True:
+            res = topk_verify(zq, rd, self.view, k=k_fetch, batch_size=bs,
+                              verifier=self.verifier, merge=self.merge,
+                              init_d=init_d, init_i=init_i)
+            acc["rows"] += res.store_accesses
+            acc["fetches"] += res.store_fetches
+            acc["io"] += res.io_seconds
+            ids, dists, full = self._suppress(res, k, exclusion)
+            if full or k_fetch >= nw:
+                return self._wrap(ids, dists, res, nw, acc,
+                                  accumulated=True)
+            init_d, init_i = res.distances, res.indices
+            for qi in range(res.indices.shape[0]):
+                seen = res.indices[qi][res.indices[qi] >= 0]
+                rd[qi, seen] = np.inf
+            k_fetch = min(nw, 2 * k_fetch)
+
+    def _suppress(self, res, k: int, exclusion: int):
+        """Greedy non-overlap filter over the verified frontier; returns
+        (ids, dists, every_query_filled_or_exhausted)."""
+        q_n, kf = res.indices.shape
+        rows_all, starts_all = self.view.locate(res.indices)
+        out_i = np.full((q_n, k), -1, np.int64)
+        out_d = np.full((q_n, k), np.inf, np.float64)
+        full = True
+        for qi in range(q_n):
+            taken_rows, taken_starts, m_sel = [], [], 0
+            for j in range(kf):
+                wid = res.indices[qi, j]
+                if wid < 0:
+                    break
+                r, s = rows_all[qi, j], starts_all[qi, j]
+                clash = any(tr == r and abs(ts - s) < exclusion
+                            for tr, ts in zip(taken_rows, taken_starts))
+                if clash:
+                    continue
+                out_i[qi, m_sel] = wid
+                out_d[qi, m_sel] = res.distances[qi, j]
+                taken_rows.append(r)
+                taken_starts.append(s)
+                m_sel += 1
+                if m_sel == k:
+                    break
+            # a query is settled if it filled k slots or its frontier ran
+            # out of real candidates (no more windows exist at all)
+            if m_sel < k and res.indices[qi, -1] >= 0:
+                full = False
+        return out_i, out_d, full
+
+    def _wrap(self, ids, dists, res, nw, acc, *,
+              accumulated: bool = False) -> SubseqResult:
+        rows, starts = self.view.locate(ids)
+        return SubseqResult(
+            window_ids=ids, rows=rows, starts=starts, distances=dists,
+            raw_accesses=res.raw_accesses,
+            pruned_fraction=1.0 - res.raw_accesses / nw,
+            store_accesses=acc["rows"] if accumulated else
+            res.store_accesses,
+            store_fetches=acc["fetches"] if accumulated else
+            res.store_fetches,
+            io_seconds=acc["io"] if accumulated else res.io_seconds)
+
+    # -- brute-force baseline ---------------------------------------------
+    def scan_topk(self, queries_raw, k: int = 1, use_kernel: bool = True,
+                  chunk_bytes: float = 2.5e8) -> SubseqResult:
+        """Brute-force windowed scan through the MASS-style kernel
+        (``kernels.windowed_euclid``): computes the full distance profile
+        and takes top-k.  The modeled I/O is one streaming pass over the
+        whole corpus — the baseline ``topk`` is judged against.
+
+        The corpus is processed in row chunks sized so the (Q, rows, S)
+        profile (and the reference path's window intermediates) stay
+        under ``chunk_bytes`` — per-chunk top-k survivors are merged at
+        the end, so arbitrarily large corpora scan in bounded memory."""
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        zq = self.normalize_queries(queries_raw)
+        q_n, m = zq.shape
+        nw = self.view.windows_per_row
+        n_rows = self.view.n_rows
+        k = min(k, nw * n_rows)
+        blk = max(1, int(chunk_bytes / (4 * max(q_n, 1) * nw * m)))
+        data = self.view.source.data
+        cand_i, cand_d = [], []
+        for r0 in range(0, n_rows, blk):
+            d2 = np.asarray(ops.windowed_euclid(
+                jnp.asarray(data[r0:r0 + blk], jnp.float32),
+                jnp.asarray(zq, jnp.float32), stride=self.view.stride,
+                use_kernel=use_kernel))
+            d = np.sqrt(np.maximum(d2.reshape(q_n, -1), 0.0))
+            kk = min(k, d.shape[1])
+            part = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+            cand_i.append(part + r0 * nw)
+            cand_d.append(np.take_along_axis(d, part, axis=1))
+        all_i = np.concatenate(cand_i, axis=1)
+        all_d = np.concatenate(cand_d, axis=1)
+        sel = np.lexsort((all_i, all_d), axis=1)[:, :k]
+        order = np.take_along_axis(all_i, sel, axis=1).astype(np.int64)
+        dists = np.take_along_axis(all_d, sel, axis=1).astype(np.float64)
+        rows, starts = self.view.locate(order)
+        return SubseqResult(
+            window_ids=order, rows=rows, starts=starts, distances=dists,
+            raw_accesses=np.full(q_n, nw * n_rows, np.int64),
+            pruned_fraction=np.zeros(q_n),
+            store_accesses=n_rows, store_fetches=1,
+            io_seconds=self.view.modeled_io_seconds(n_rows, 1))

@@ -11,6 +11,7 @@ from repro.kernels.euclid import euclid_pallas
 from repro.kernels.paa import paa_pallas
 from repro.kernels.sax_dist import sax_dist_pallas
 from repro.kernels.ssax_dist import ssax_dist_pallas
+from repro.kernels.windowed_euclid import windowed_euclid_pallas
 
 RNG = np.random.default_rng(7)
 
@@ -68,6 +69,51 @@ def test_euclid_shapes_dtypes(N, T, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("Q,N,T", [(2, 37, 480), (5, 300, 1000),
+                                   (13, 130, 3000), (9, 1, 17),
+                                   (31, 257, 129)])
+def test_euclid_query_tiling_ragged(Q, N, T):
+    """BLK_Q tiling: ragged query batches (not block multiples) must pad
+    internally and match the per-query reference."""
+    x = jnp.asarray(RNG.normal(size=(N, T)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(Q, T)), jnp.float32)
+    out = np.asarray(euclid_pallas(x, q, interpret=True))
+    want = np.stack([np.asarray(ref.euclid_ref(x, qi)) for qi in q])
+    assert out.shape == (Q, N)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Q,N,T,m,stride", [
+    (1, 4, 256, 64, 1),      # single query
+    (3, 5, 300, 32, 3),      # stride > 1, ragged tail
+    (2, 9, 1111, 64, 7),     # ragged everything
+    (2, 2, 100, 100, 1),     # exactly one window per row
+    (4, 24, 960, 120, 5),    # more rows than BLK_N
+])
+def test_windowed_euclid_shapes(Q, N, T, m, stride):
+    x = jnp.asarray(RNG.normal(size=(N, T)), jnp.float32)
+    q = RNG.normal(size=(Q, m)).astype(np.float32)
+    q = (q - q.mean(-1, keepdims=True)) / q.std(-1, keepdims=True)
+    out = np.asarray(windowed_euclid_pallas(
+        x, jnp.asarray(q), stride=stride, interpret=True))
+    want = np.asarray(ref.windowed_euclid_ref(x, jnp.asarray(q), stride))
+    S = (T - m) // stride + 1
+    assert out.shape == (Q, N, S)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+def test_windowed_euclid_constant_window_matches_znorm_semantics():
+    """A zero-variance window z-normalizes to the zero vector (the
+    znormalize eps guard); its distance must be sum(q^2), not inf."""
+    x = jnp.ones((1, 64), jnp.float32)
+    q = RNG.normal(size=(1, 16)).astype(np.float32)
+    q = (q - q.mean()) / q.std()
+    out = np.asarray(windowed_euclid_pallas(x, jnp.asarray(q),
+                                            interpret=True))
+    np.testing.assert_allclose(out, np.full_like(out, (q * q).sum()),
+                               rtol=1e-4)
+
+
 def test_ops_wrappers_pad_ragged():
     """Public ops pad ragged candidate counts transparently."""
     N, W, A = 300, 16, 32          # not a multiple of any block
@@ -85,6 +131,17 @@ def test_ops_wrappers_pad_ragged():
     np.testing.assert_allclose(
         np.asarray(ops.euclid_batch(x, q)),
         np.asarray(ref.euclid_ref(x, q)), rtol=1e-4, atol=1e-4)
+    qm = jnp.asarray(RNG.normal(size=(5, 960)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.euclid_batch(x, qm)),
+        np.stack([np.asarray(ref.euclid_ref(x, qi)) for qi in qm]),
+        rtol=1e-4, atol=1e-4)
+    qw = jnp.asarray(RNG.normal(size=(2, 96)), jnp.float32)
+    qw = (qw - qw.mean(-1, keepdims=True)) / qw.std(-1, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(ops.windowed_euclid(x[:7], qw, stride=5)),
+        np.asarray(ref.windowed_euclid_ref(x[:7], qw, 5)),
+        rtol=1e-3, atol=1e-3)
 
 
 def test_kernel_matches_encoder_distance():

@@ -1,0 +1,259 @@
+"""Subsequence subsystem (repro.subseq): SubseqEngine.topk must be
+bit-identical to a brute-force windowed z-normalized scan for every
+encoder (ragged T and stride > 1 included), WindowView's incremental
+window encoding must equal one-shot encoding for any ingest chunking,
+window fetches must bill deduplicated underlying rows through the
+RawStore cost model, and non-overlap suppression must drop trivial
+matches without losing exactness."""
+
+import numpy as np
+import pytest
+
+from repro.core import SAX, SSAX, STSAX, TSAX
+from repro.core.matching import RawStore
+from repro.data.synthetic import season_dataset
+from repro.store import SymbolicStore
+from repro.subseq import SubseqEngine, WindowView
+from repro.subseq.windows import znorm_windows
+
+M = 120        # window length (the encoders' T)
+N_Q = 3
+
+
+def _encoders():
+    return {
+        "sax": SAX(T=M, W=12, A=16),
+        "ssax": SSAX(T=M, W=12, L=10, A_seas=8, A_res=16, r2_season=0.5),
+        "tsax": TSAX(T=M, W=12, A_tr=16, A_res=16, r2_trend=0.3),
+        "stsax": STSAX(T=M, W=12, L=10, A_tr=8, A_seas=8, A_res=16,
+                       r2_trend=0.2, r2_season=0.4),
+    }
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # T deliberately ragged: not a multiple of the stride values below,
+    # leaving a dangling tail shorter than one window
+    X = season_dataset(n=10, T=610, L=10, strength=0.7, seed=5)
+    rng = np.random.default_rng(0)
+    Q = np.stack([X[0, 37:37 + M],
+                  X[3, 250:250 + M] + 0.1 * rng.normal(size=M)
+                  .astype(np.float32),
+                  rng.normal(size=M).astype(np.float32)])
+    return X, Q
+
+
+def _bruteforce_windows(X, stride):
+    """All z-normalized windows, row-major window ids — the ground truth
+    the engine must match bitwise."""
+    W = np.lib.stride_tricks.sliding_window_view(
+        X, M, axis=1)[:, ::stride].reshape(-1, M)
+    return znorm_windows(W)
+
+
+def _bruteforce_topk(Wz, zq, k):
+    idx, dist = [], []
+    for q in zq:
+        d = np.sqrt(np.sum(np.square(Wz - q[None]), -1))
+        o = np.argsort(d, kind="stable")[:k]
+        idx.append(o)
+        dist.append(d[o].astype(np.float64))
+    return np.asarray(idx, np.int64), np.asarray(dist)
+
+
+@pytest.mark.parametrize("tech", ["sax", "ssax", "tsax", "stsax"])
+@pytest.mark.parametrize("stride", [1, 7])
+def test_subseq_topk_bitwise_equals_windowed_bruteforce(corpus, tech,
+                                                        stride):
+    X, Q = corpus
+    enc = _encoders()[tech]
+    view = WindowView(enc, X, stride=stride)
+    eng = SubseqEngine(view, verify="numpy")
+    res = eng.topk(Q, k=5)
+    zq = eng.normalize_queries(Q)
+    want_i, want_d = _bruteforce_topk(_bruteforce_windows(X, stride),
+                                      zq, 5)
+    np.testing.assert_array_equal(res.window_ids, want_i)
+    np.testing.assert_array_equal(res.distances, want_d)
+    # id -> (row, start) translation is consistent with the dense layout
+    nw = view.windows_per_row
+    np.testing.assert_array_equal(res.rows, want_i // nw)
+    np.testing.assert_array_equal(res.starts, (want_i % nw) * stride)
+
+
+def test_subseq_prunes_on_seasonal_corpus(corpus):
+    X, Q = corpus
+    enc = _encoders()["ssax"]
+    eng = SubseqEngine(WindowView(enc, X, stride=1), verify="numpy")
+    res = eng.topk(Q[:2], k=1)        # in-corpus(-ish) queries prune hard
+    assert (res.raw_accesses < eng.view.n).any()
+    assert res.store_accesses > 0 and res.io_seconds > 0
+
+
+def test_windowview_incremental_equals_oneshot(corpus):
+    """Appending the corpus in chunks (and with different encode_chunk
+    sizes) must produce bit-identical window representations — the
+    store-subsystem chunked-encode property lifted to windows."""
+    X, _ = corpus
+    enc = _encoders()["ssax"]
+    one = WindowView(enc, X, stride=3, encode_chunk=4096)
+    for chunks, ec in [((3, 4, 3), 4096), ((5, 5), 57), ((10,), 11)]:
+        inc = WindowView(enc, stride=3, encode_chunk=ec)
+        ofs = 0
+        for c in chunks:
+            inc.append(X[ofs:ofs + c])
+            ofs += c
+        assert inc.n == one.n
+        for a, b in zip(_leaves(inc), _leaves(one)):
+            np.testing.assert_array_equal(a, b)
+
+
+def _leaves(view):
+    rep = view.rep_view()
+    return rep if isinstance(rep, tuple) else (rep,)
+
+
+def test_windowview_append_serves_new_windows(corpus):
+    X, Q = corpus
+    enc = _encoders()["sax"]
+    view = WindowView(enc, X[:6], stride=2)
+    eng = SubseqEngine(view, verify="numpy")
+    eng.topk(Q[:1], k=1)                       # warm the rep cache
+    new_ids = view.append(X[6:])
+    assert new_ids[0] == 6 * view.windows_per_row
+    res = eng.topk(Q[:1], k=3)
+    zq = eng.normalize_queries(Q[:1])
+    want_i, want_d = _bruteforce_topk(_bruteforce_windows(X, 2), zq, 3)
+    np.testing.assert_array_equal(res.window_ids, want_i)
+    np.testing.assert_array_equal(res.distances, want_d)
+
+
+def test_windowview_over_symbolic_store_source(corpus):
+    """A SymbolicStore can be the corpus: its raw rows are windowed, its
+    cost model bills the fetches, and rows appended through the store are
+    picked up by sync()."""
+    X, Q = corpus
+    whole = SAX(T=610, W=61, A=16)             # whole-series encoder
+    store = SymbolicStore.from_rows(whole, X[:8], media="hdd")
+    enc = _encoders()["sax"]
+    view = WindowView(enc, store, stride=2)
+    assert view.n == 8 * view.windows_per_row
+    store.append(X[8:])                        # out-of-band ingest
+    assert view.sync() == 2 * view.windows_per_row
+    eng = SubseqEngine(view, verify="numpy")
+    res = eng.topk(Q[:1], k=2)
+    zq = eng.normalize_queries(Q[:1])
+    want_i, _ = _bruteforce_topk(_bruteforce_windows(X, 2), zq, 2)
+    np.testing.assert_array_equal(res.window_ids, want_i)
+    assert store.accesses > 0                  # billed on the source
+
+
+def test_window_fetch_bills_dedup_rows(corpus):
+    X, _ = corpus
+    view = WindowView(_encoders()["sax"], X, stride=1)
+    nw = view.windows_per_row
+    view.reset()
+    # four windows from row 0, two from row 2 -> 2 row reads, 1 seek
+    out = view.fetch([0, 1, 5, nw - 1, 2 * nw, 2 * nw + 3])
+    assert out.shape == (6, M)
+    assert view.accesses == 2
+    assert view.fetches == 1
+    np.testing.assert_array_equal(
+        out[0], znorm_windows(X[0, :M][None])[0])
+    # modeled I/O charges long-row bytes, not window bytes
+    assert view.modeled_io_seconds(2, 1) == \
+        view.source.modeled_io_seconds(2, 1)
+    # warm rows come from the buffer pool: no new billing, no seek
+    view.fetch([3, nw - 7, 2 * nw + 1])
+    assert view.accesses == 2 and view.fetches == 1
+    # a cold row in the batch bills only itself
+    view.fetch([0, 4 * nw])
+    assert view.accesses == 3 and view.fetches == 2
+    # reset drops the buffer: everything is cold again
+    view.reset()
+    view.fetch([0])
+    assert view.accesses == 1 and view.fetches == 1
+
+
+def test_window_fetch_without_row_buffer(corpus):
+    X, _ = corpus
+    view = WindowView(_encoders()["sax"], X, stride=1, cache_rows=0)
+    view.reset()
+    view.fetch([0, 1])
+    view.fetch([2, 3])
+    assert view.accesses == 2            # same row billed cold each round
+    assert view.fetches == 2
+
+
+def test_rawstore_fetch_bills_unique_rows_only():
+    """Satellite regression: duplicate/overlapping indices in one fetch
+    bill each physical row once."""
+    data = np.arange(20, dtype=np.float32).reshape(5, 4)
+    store = RawStore.ssd(data)
+    out = store.fetch([3, 3, 1, 3, 1])
+    assert out.shape == (5, 4)                 # rows still per-request
+    np.testing.assert_array_equal(out[0], data[3])
+    assert store.accesses == 2                 # ...but billed deduped
+    assert store.fetches == 1
+    store.fetch([2, 2, 2])
+    assert store.accesses == 3
+    assert store.fetches == 2
+
+
+def test_subseq_nonoverlap_suppression(corpus):
+    X, Q = corpus
+    view = WindowView(_encoders()["sax"], X, stride=1)
+    eng = SubseqEngine(view, verify="numpy")
+    plain = eng.topk(Q[:1], k=5)
+    sup = eng.topk(Q[:1], k=5, exclusion=M // 2)
+    # without suppression the best matches crowd around one offset;
+    # with it every reported pair is temporally separated
+    for a in range(5):
+        for b in range(a + 1, 5):
+            if sup.rows[0, a] == sup.rows[0, b]:
+                assert abs(sup.starts[0, a] - sup.starts[0, b]) >= M // 2
+    # the best match is unaffected and results stay sorted
+    assert sup.window_ids[0, 0] == plain.window_ids[0, 0]
+    assert (np.diff(sup.distances[0]) >= 0).all()
+    # suppression is exact: greedy over the full verified ordering
+    zq = eng.normalize_queries(Q[:1])
+    Wz = _bruteforce_windows(X, 1)
+    d = np.sqrt(np.sum(np.square(Wz - zq[0][None]), -1))
+    order = np.argsort(d, kind="stable")
+    nw = view.windows_per_row
+    taken = []
+    for wid in order:
+        r, s = wid // nw, (wid % nw) * 1
+        if any(tr == r and abs(ts - s) < M // 2 for tr, ts in taken):
+            continue
+        taken.append((r, s))
+        if len(taken) == 5:
+            break
+    want = np.asarray([r * nw + s for r, s in taken], np.int64)
+    np.testing.assert_array_equal(sup.window_ids[0], want)
+
+
+def test_rep_only_store_guards():
+    enc = _encoders()["sax"]
+    store = SymbolicStore(enc, store_raw=False)
+    store.append(np.zeros((3, M), np.float32))
+    assert store.n == 3
+    with pytest.raises(TypeError):
+        store.fetch([0])
+    with pytest.raises(TypeError):
+        store.save("/tmp/never-written")
+
+
+def test_scan_topk_agrees_with_engine_on_indices(corpus):
+    """The MASS-style kernel brute force finds the same winners (f32
+    kernel numerics, so indices + allclose distances, not bitwise)."""
+    X, Q = corpus
+    view = WindowView(_encoders()["sax"], X, stride=2)
+    eng = SubseqEngine(view, verify="numpy")
+    exact = eng.topk(Q, k=3)
+    scan = eng.scan_topk(Q, k=3)
+    np.testing.assert_array_equal(scan.window_ids, exact.window_ids)
+    np.testing.assert_allclose(scan.distances, exact.distances,
+                               rtol=1e-3, atol=1e-3)
+    # brute force reads the whole corpus; the pruned path cannot read more
+    assert scan.store_accesses == view.n_rows

@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) for the subsequence analogue of the
+central invariant: for EVERY encoder, the representation distance between
+an encoded z-normalized query and any encoded z-normalized window
+lower-bounds the true z-normalized Euclidean distance — for arbitrary
+window length, stride, and series shape.  This is what makes the pruned
+windowed scan (``repro.subseq.SubseqEngine``) exact (paper §4.1 /
+Appendix A applied to the window set)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SAX, SSAX, STSAX, TSAX
+from repro.subseq import SubseqEngine, WindowView
+from repro.subseq.windows import znorm_windows
+
+TOL = 1e-2     # f32 + normalization slack on distances O(10)
+
+L = 10         # season length; window lengths below are multiples
+
+
+def _corpus(seed, n, T):
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        x = np.cumsum(rng.normal(size=(n, T)), axis=1)
+    elif kind == 1:
+        mask = rng.normal(size=(n, L))
+        x = np.tile(mask, (1, T // L + 1))[:, :T] \
+            + 0.5 * rng.normal(size=(n, T))
+    else:
+        x = rng.normal(size=(n, 1)) * np.arange(T)[None, :] \
+            + rng.normal(size=(n, T))
+    return x.astype(np.float32)
+
+
+def _encoder(name, m):
+    return {
+        "sax": lambda: SAX(T=m, W=m // L, A=16),
+        "ssax": lambda: SSAX(T=m, W=m // L, L=L, A_seas=8, A_res=16,
+                             r2_season=0.5),
+        "tsax": lambda: TSAX(T=m, W=m // L, A_tr=16, A_res=16,
+                             r2_trend=0.4),
+        "stsax": lambda: STSAX(T=m, W=m // L, L=L, A_tr=8, A_seas=8,
+                               A_res=16, r2_trend=0.2, r2_season=0.4),
+    }[name]()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+@pytest.mark.parametrize("tech", ["sax", "ssax", "tsax", "stsax"])
+def test_windowed_repr_distance_lower_bounds_znormalized_ed(tech, data):
+    m = data.draw(st.sampled_from([60, 120, 200]))
+    stride = data.draw(st.sampled_from([1, 3, 11]))
+    extra = data.draw(st.integers(0, 37))      # ragged tail beyond m
+    seed = data.draw(st.integers(0, 2**16))
+    T = m + m // 2 + extra
+    X = _corpus(seed, 4, T)
+    q_raw = _corpus(seed + 1, 2, m)
+
+    view = WindowView(_encoder(tech, m), X, stride=stride)
+    eng = SubseqEngine(view, verify="numpy")
+    zq = eng.normalize_queries(q_raw)
+    d_rep = eng.repr_distances(zq)             # (2, n_windows)
+
+    W = np.lib.stride_tricks.sliding_window_view(
+        X, m, axis=1)[:, ::stride].reshape(-1, m)
+    Wz = znorm_windows(W)
+    d_true = np.stack([
+        np.sqrt(np.sum(np.square(Wz - q[None]), -1)) for q in zq])
+    assert d_rep.shape == d_true.shape
+    assert np.all(d_rep <= d_true + TOL), \
+        (tech, stride, (d_rep - d_true).max())
