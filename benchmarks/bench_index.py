@@ -1,0 +1,159 @@
+"""Index-subsystem benchmark (``repro.index``).
+
+For each representation (SAX / sSAX / tSAX / stSAX), measures the
+split-tree candidate source against the linear lower-bound sweep —
+both exact, both through ``core.engine.topk_verify``, so the only
+difference is HOW MANY candidates each examines and what raw I/O the
+verification order costs:
+
+* **whole-series**: a Season corpus of >= 10k rows in a
+  ``SymbolicStore``; ``MatchEngine.topk(source="index")`` vs the linear
+  ``topk``;
+* **windowed**: >= 100k sliding windows in a ``WindowView``;
+  ``SubseqEngine.topk`` with the window index vs the linear window
+  sweep;
+* **acceptance**: the indexed sSAX path must examine strictly fewer
+  candidates than the linear sweep in both regimes (the index, not the
+  encoder, is where sublinear behavior is won), with bit-identical
+  top-k.
+
+``--dryrun`` shrinks everything so CI exercises the full path —
+incremental build, tree traversal, engine integration — in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_row
+from repro.core import MatchEngine, make_technique
+from repro.data.synthetic import season_dataset
+from repro.subseq import SubseqEngine, WindowView
+
+L = 10
+
+FULL = dict(n=12_000, T=480, queries=8, k=8,
+            sub_n=32, sub_T=3600, m=240, stride=1, sub_k=8, sub_queries=4)
+DRY = dict(n=400, T=240, queries=2, k=4,
+           sub_n=6, sub_T=600, m=120, stride=4, sub_k=4, sub_queries=2)
+
+
+def _encoders(T):
+    w = T // (2 * L)
+    return {
+        "sax": make_technique("sax", T=T, W=w, L=L),
+        "ssax": make_technique("ssax", T=T, W=w, L=L, r2_season=0.7),
+        "tsax": make_technique("tsax", T=T, W=w, L=L, r2_trend=0.3),
+        "stsax": make_technique("stsax", T=T, W=w, L=L, r2_season=0.5),
+    }
+
+
+def _whole(cfg, rows, examined):
+    from repro.store import SymbolicStore
+    n, T, k = cfg["n"], cfg["T"], cfg["k"]
+    X = season_dataset(n + cfg["queries"], T, L, strength=0.7,
+                       per_series_strength=True, seed=31)
+    Q, D = X[:cfg["queries"]], X[cfg["queries"]:]
+    for tech, enc in _encoders(T).items():
+        store = SymbolicStore.from_rows(enc, D, media="ssd")
+        engine = MatchEngine(enc, store, verify="numpy", batch_size=256)
+        store.reset()
+        t0 = time.perf_counter()
+        lin = engine.topk(Q, k=k)
+        t_lin = time.perf_counter() - t0
+        io_lin = lin.io_seconds
+        t0 = time.perf_counter()
+        store.build_index(leaf_fill=64)
+        t_build = time.perf_counter() - t0
+        store.reset()
+        t0 = time.perf_counter()
+        idx = engine.topk(Q, k=k, source="index")
+        t_idx = time.perf_counter() - t0
+        agree = int(np.array_equal(idx.indices, lin.indices)
+                    and np.array_equal(idx.distances, lin.distances))
+        examined[f"whole/{tech}"] = (idx.raw_accesses.mean(),
+                                     lin.raw_accesses.mean())
+        rows.append((
+            f"index/whole/{tech}",
+            f"n={n} cand_idx={idx.raw_accesses.mean():.0f} "
+            f"cand_lin={lin.raw_accesses.mean():.0f} "
+            f"io_idx_s={idx.io_seconds:.5f} io_lin_s={io_lin:.5f} "
+            f"nodes={store.index.n_nodes} build_s={t_build:.2f} "
+            f"bitwise={agree} wall_idx_s={t_idx:.2f} "
+            f"wall_lin_s={t_lin:.2f}"))
+
+
+def _windowed(cfg, rows, examined):
+    n, T, m, stride, k = (cfg["sub_n"], cfg["sub_T"], cfg["m"],
+                          cfg["stride"], cfg["sub_k"])
+    n_q = cfg["sub_queries"]
+    rng = np.random.default_rng(37)
+    D = season_dataset(n, T, L, strength=0.7,
+                       per_series_strength=True, seed=37)
+    q_rows = rng.integers(0, n, size=n_q)
+    offs = rng.integers(0, T - m, size=n_q)
+    Q = np.stack([D[r, o:o + m] for r, o in zip(q_rows, offs)])
+    Q = Q + 0.05 * rng.normal(size=Q.shape).astype(np.float32)
+    for tech, enc in _encoders(m).items():
+        view = WindowView(enc, D, stride=stride, media="ssd")
+        eng = SubseqEngine(view, verify="numpy", batch_size=512)
+        view.reset()
+        t0 = time.perf_counter()
+        lin = eng.topk(Q, k=k, use_index=False)
+        t_lin = time.perf_counter() - t0
+        io_lin = lin.io_seconds
+        t0 = time.perf_counter()
+        view.build_index(leaf_fill=64)
+        t_build = time.perf_counter() - t0
+        view.reset()
+        t0 = time.perf_counter()
+        idx = eng.topk(Q, k=k)
+        t_idx = time.perf_counter() - t0
+        agree = int(np.array_equal(idx.window_ids, lin.window_ids)
+                    and np.array_equal(idx.distances, lin.distances))
+        examined[f"windowed/{tech}"] = (idx.raw_accesses.mean(),
+                                        lin.raw_accesses.mean())
+        rows.append((
+            f"index/windowed/{tech}",
+            f"windows={view.n} cand_idx={idx.raw_accesses.mean():.0f} "
+            f"cand_lin={lin.raw_accesses.mean():.0f} "
+            f"io_idx_s={idx.io_seconds:.5f} io_lin_s={io_lin:.5f} "
+            f"nodes={view.index.n_nodes} build_s={t_build:.2f} "
+            f"bitwise={agree} wall_idx_s={t_idx:.2f} "
+            f"wall_lin_s={t_lin:.2f}"))
+        examined[f"windows/{tech}"] = view.n
+
+
+def run(dryrun: bool = False):
+    cfg = DRY if dryrun else FULL
+    rows: list = []
+    examined: dict = {}
+    _whole(cfg, rows, examined)
+    _windowed(cfg, rows, examined)
+    w_idx, w_lin = examined["whole/ssax"]
+    s_idx, s_lin = examined["windowed/ssax"]
+    ok = (cfg["n"] >= 10_000 and w_idx < w_lin
+          and examined["windows/ssax"] >= 100_000 and s_idx < s_lin)
+    verdict = ("PASS" if ok else
+               "dryrun (acceptance judged at full size)" if dryrun
+               else "MISS")
+    rows.append((
+        "index/acceptance",
+        f"ssax whole {w_idx:.0f}<{w_lin:.0f}@n={cfg['n']} windowed "
+        f"{s_idx:.0f}<{s_lin:.0f}@windows={examined['windows/ssax']} "
+        f"(target: indexed examines strictly fewer candidates at >=10k "
+        f"rows / >=100k windows) {verdict}"))
+    for name, derived in rows:
+        emit_row(name, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny sizes (CI)")
+    args = ap.parse_args()
+    run(dryrun=args.dryrun)

@@ -8,6 +8,7 @@ Paper artifact map:
     approx   -> Fig. 7      matching -> Table 5    kernels -> (engine)
     ingest   -> (store subsystem: append throughput + query-under-ingest)
     subseq   -> (subsequence subsystem: pruned windowed scan vs brute)
+    index    -> (index subsystem: tree candidates vs linear sweep)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -18,7 +19,7 @@ import importlib
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
-          "extensions", "ingest", "subseq", "roofline", "perf"]
+          "extensions", "ingest", "subseq", "index", "roofline", "perf"]
 
 
 def main() -> None:

@@ -14,10 +14,13 @@ lifted to sliding windows:
    materializes);
 3. a ``SubseqEngine`` answers exact top-k window queries through the
    same frontier machinery as whole matching, reading only the
-   underlying rows the candidate order touches;
+   underlying rows the candidate order touches — and a split-tree
+   window index (``view.build_index()``) generates those candidates
+   sublinearly instead of sweeping every window, bit-identically;
 4. non-overlap suppression returns the k distinct occurrences instead
    of k shifted copies of the best one;
-5. appended series are searchable immediately (streaming ingest).
+5. appended series are searchable immediately (streaming ingest) and
+   the window index follows along without a rebuild.
 """
 
 import numpy as np
@@ -49,16 +52,24 @@ def main():
     print(f"corpus: {N} series x {T} samples -> {view.n} windows "
           f"(m={M}, stride={STRIDE}); only the symbolic rep is stored")
 
-    # 3. exact top-1: localize the pattern from a fresh noisy observation
+    # 3. exact top-1: localize the pattern from a fresh noisy observation.
+    # The window index turns candidate generation sublinear: instead of
+    # sorting a distance to every window, the tree walk hands the engine
+    # a compact candidate set — same answer, bit for bit.
     engine = SubseqEngine(view, batch_size=256)
     query = template + 0.02 * rng.normal(size=M).astype(np.float32)
     view.reset()
+    lin = engine.topk(query, k=1, use_index=False)
+    view.build_index(leaf_fill=64)
+    view.reset()
     res = engine.topk(query, k=1)
+    assert np.array_equal(res.window_ids, lin.window_ids)
     r, s = res.rows[0, 0], res.starts[0, 0]
     print(f"top-1: row {r} @ {s} (planted at {plants[0]}), "
-          f"d={res.distances[0, 0]:.3f}; verified "
+          f"d={res.distances[0, 0]:.3f}; indexed: examined "
           f"{res.raw_accesses[0]} of {view.n} windows "
-          f"({res.pruned_fraction[0]:.1%} pruned), read "
+          f"({res.pruned_fraction[0]:.1%} pruned; linear sweep examined "
+          f"{lin.raw_accesses[0]}), read "
           f"{res.store_accesses}/{N} rows, modeled HDD "
           f"{res.io_seconds * 1e3:.1f}ms")
 
@@ -77,10 +88,12 @@ def main():
     extra[0, 600:600 + M] = template + 0.1 * rng.normal(size=M)\
         .astype(np.float32)
     view.append(extra)
+    assert view.index.n == view.n        # index followed the append
     res = engine.topk(query, k=4, exclusion=M // 2)
     print(f"after append: top-4 occurrences {fmt(res)}")
-    print("-> the window set grew by one series and the new occurrence "
-          "is found without re-encoding anything")
+    print("-> the window set AND its index grew by one series; the new "
+          "occurrence is found without re-encoding or rebuilding "
+          "anything")
 
 
 if __name__ == "__main__":

@@ -183,7 +183,8 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
 
     ``init_d`` / ``init_i``: optional (Q, <=k) already-verified frontier
     (sorted ascending, ties by index) to seed the best-k with — used by
-    ``SSaxIndex.topk`` so seed candidates are not verified twice.  Seeded
+    the index candidate source (``repro.index.candidates``) so tree seed
+    candidates are not verified twice.  Seeded
     candidates must carry +inf in ``repr_dists`` (or be absent), otherwise
     they would enter the merge a second time.
 
@@ -289,7 +290,11 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
         cand = cand[None]
     q_n, c = cand.shape
     k = c if k is None else min(k, c)
-    n = store.data.shape[0]
+    # candidate-id space size: windows for a WindowView (``n``), rows
+    # for a raw/symbolic store
+    n = getattr(store, "n", None)
+    if n is None:
+        n = store.data.shape[0]
     mask = cand >= 0
     ids = np.unique(cand[mask])
     if ids.size == 0:
@@ -363,6 +368,13 @@ class MatchEngine:
                 (queries_raw -> (Q, N)); used by the sharded service.
     cand_fn:    override for approximate candidates
                 (queries_raw, k -> (Q, k) indices).
+
+    Candidate sources: exact ``topk`` consumes candidates from a
+    ``repro.index.candidates.CandidateSource``.  The default is the
+    linear lower-bound sweep; pass ``source="index"`` (or any source
+    object) to generate candidates sublinearly from the backing store's
+    split-tree index (``store.build_index()``) — bit-identical results,
+    same k-th-best early-stop verification.
     """
 
     def __init__(self, encoder, store, *, batch_size: int = 64,
@@ -437,25 +449,46 @@ class MatchEngine:
         return np.take_along_axis(part, np.argsort(part_d, axis=1,
                                                    kind="stable"), axis=1)
 
+    def index_source(self):
+        """The backing store's split-tree index as a candidate source
+        (``store.build_index()`` first)."""
+        idx = getattr(self.store, "index", None)
+        if idx is None:
+            raise ValueError("store has no index; call "
+                             "store.build_index() first")
+        return idx.source()
+
     # -- matching --------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exact: bool = True,
-             batch_size: Optional[int] = None,
-             expand: int = 4) -> TopKResult:
+             batch_size: Optional[int] = None, expand: int = 4,
+             source=None) -> TopKResult:
         """Top-k matches for a (Q, T) query batch (or a single (T,) query).
 
         exact=True:  pruned scan, provably identical to brute force.
+                     ``source`` picks the candidate generator: None for
+                     the linear lower-bound sweep, "index" for the
+                     store's split-tree index, or any
+                     ``CandidateSource`` — all bit-identical.
         exact=False: verify the top ``k * expand`` representation
                      candidates only (the paper's approximate matching,
-                     generalized to k-NN).
+                     generalized to k-NN); ``source`` is ignored.
         """
         qs = np.asarray(queries_raw)
         if qs.ndim == 1:
             qs = qs[None]
         if exact:
-            rd = self.repr_distances(qs)
-            return topk_verify(qs, rd, self.store, k=k,
-                               batch_size=batch_size or self.batch_size,
-                               verifier=self.verifier, merge=self.merge)
+            from repro.index.candidates import LinearSweep, topk_from_source
+            if source is None:
+                source = LinearSweep(self.repr_distances)
+            elif source == "index":
+                source = self.index_source()
+            total = getattr(self.store, "n", None)
+            if total is None:
+                total = self.store.data.shape[0]
+            return topk_from_source(
+                qs, source, self.store, k=k,
+                batch_size=batch_size or self.batch_size,
+                verifier=self.verifier, merge=self.merge, total=total)
         cand = self.candidates(qs, k * max(expand, 1))
         return verify_candidates(qs, cand, self.store, k=k,
                                  verifier=self.verifier, merge=self.merge)

@@ -1,407 +1,17 @@
-"""sSAX-indexed search — an iSAX-style tree over season-aware words
-(beyond-paper; the paper's §6 notes its representations "have the
-potential to efficiently index ... much longer time series").
+"""Compatibility shim — the index implementation migrated to the
+first-class subsystem :mod:`repro.index` (season-aware split tree,
+candidate-source protocol, incremental insert shared with bulk build).
 
-Structure: binary iSAX splitting.  Every indexed series is a word of
-L + W dimensions (L season symbols at ``max_bits`` cardinality, W residual
-symbols likewise).  A node holds a per-dimension bit count; splitting
-promotes one dimension by one bit (round-robin over the highest-variance
-dims).  Leaves hold series ids.
-
-Pruning bound: season extraction leaves residuals with zero mean per
-phase, so season and residual components are orthogonal and
-
-    d_ED(x, q)^2  >=  (T/L) * sum_l gap(sigma_q_l, node_l)^2
-                    + (T/W) * sum_w gap(resbar_q_w, node_w)^2
-
-where gap(f, node-dim) is the distance from the query's real-valued
-feature to the node's breakpoint interval at its current cardinality —
-the standard (asymmetric) iSAX MINDIST generalized to the two-component
-word.  Exact matching then walks leaves in bound order with best-so-far
-verification against the raw store (same early-stop argument as
-core/matching.py).
+Importing ``SSaxIndex`` / ``ndtri_np`` from here keeps working; new code
+should use :class:`repro.index.SeriesIndex` (all four encoders, raw rows
+or windows) or the pieces in :mod:`repro.index` directly.
 """
 
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Optional
+from repro.index.features import gauss_breaks as _gauss_breaks  # noqa: F401
+from repro.index.features import ndtri_np  # noqa: F401
+from repro.index.legacy import SSaxIndex  # noqa: F401
+from repro.index.tree import TreeNode as _Node  # noqa: F401
 
-import numpy as np
-
-from repro.core.matching import MatchResult, RawStore
-
-
-def ndtri_np(q):
-    """Inverse normal CDF (Acklam's rational approximation, |err|<1.2e-8)
-    — keeps this host-side module importable without jax/scipy."""
-    q = np.asarray(q, np.float64)
-    a = [-3.969683028665376e+01, 2.209460984245205e+02,
-         -2.759285104469687e+02, 1.383577518672690e+02,
-         -3.066479806614716e+01, 2.506628277459239e+00]
-    b = [-5.447609879822406e+01, 1.615858368580409e+02,
-         -1.556989798598866e+02, 6.680131188771972e+01,
-         -1.328068155288572e+01]
-    c = [-7.784894002430293e-03, -3.223964580411365e-01,
-         -2.400758277161838e+00, -2.549732539343734e+00,
-         4.374664141464968e+00, 2.938163982698783e+00]
-    d = [7.784695709041462e-03, 3.224671290700398e-01,
-         2.445134137142996e+00, 3.754408661907416e+00]
-    plow, phigh = 0.02425, 1 - 0.02425
-    out = np.empty_like(q)
-    lo = q < plow
-    hi = q > phigh
-    mid = ~(lo | hi)
-    if lo.any():
-        r = np.sqrt(-2 * np.log(q[lo]))
-        out[lo] = (((((c[0] * r + c[1]) * r + c[2]) * r + c[3]) * r + c[4])
-                   * r + c[5]) / ((((d[0] * r + d[1]) * r + d[2]) * r
-                                   + d[3]) * r + 1)
-    if hi.any():
-        r = np.sqrt(-2 * np.log(1 - q[hi]))
-        out[hi] = -((((((c[0] * r + c[1]) * r + c[2]) * r + c[3]) * r
-                      + c[4]) * r + c[5]) /
-                    ((((d[0] * r + d[1]) * r + d[2]) * r + d[3]) * r + 1))
-    if mid.any():
-        r = q[mid] - 0.5
-        t = r * r
-        out[mid] = (((((a[0] * t + a[1]) * t + a[2]) * t + a[3]) * t
-                     + a[4]) * t + a[5]) * r / \
-            (((((b[0] * t + b[1]) * t + b[2]) * t + b[3]) * t + b[4]) * t + 1)
-    return out
-
-
-def _gauss_breaks(card: int, sd: float) -> np.ndarray:
-    qs = np.arange(1, card) / card
-    return sd * ndtri_np(qs)
-
-
-@dataclass
-class _Node:
-    bits: np.ndarray                  # (D,) cardinality bits per dim
-    ids: Optional[np.ndarray] = None  # leaf payload
-    children: Optional[dict] = None   # symbol-prefix tuple -> _Node
-    split_dim: int = -1
-    lo: Optional[np.ndarray] = None   # (D,) feature bounding box (tight:
-    hi: Optional[np.ndarray] = None   # computed from actual members)
-
-    @property
-    def is_leaf(self) -> bool:
-        return self.children is None
-
-
-class SSaxIndex:
-    """iSAX-style index over sSAX words.
-
-    features: (sigma (N, L), resbar (N, W)) real-valued sPAA features
-    (keep them host-side; symbols are derived per cardinality).
-    """
-
-    def __init__(self, sigma: np.ndarray, resbar: np.ndarray, *, T: int,
-                 sd_seas: float, sd_res: float, max_bits: int = 8,
-                 leaf_capacity: int = 64):
-        self.sigma = np.asarray(sigma, np.float32)
-        self.resbar = np.asarray(resbar, np.float32)
-        self.T = T
-        self.sd_seas = float(sd_seas)
-        self.sd_res = float(sd_res)
-        self.L = self.sigma.shape[1]
-        self.W = self.resbar.shape[1]
-        self.D = self.L + self.W
-        self.max_bits = max_bits
-        self.leaf_capacity = leaf_capacity
-        self.feats = np.concatenate([self.sigma, self.resbar], axis=1)
-        self.sds = np.asarray([sd_seas] * self.L + [sd_res] * self.W,
-                              np.float32)
-        self.weights = np.asarray([T / self.L] * self.L +
-                                  [T / self.W] * self.W, np.float32)
-        # precompute breakpoint tables per bit level
-        self._breaks = {b: [_gauss_breaks(1 << b, float(sd))
-                            for sd in self.sds]
-                        for b in range(1, max_bits + 1)}
-        self.n_nodes = 1
-        self.root = _Node(bits=np.zeros(self.D, np.int8),
-                          ids=np.arange(self.feats.shape[0]))
-        self._split(self.root)
-
-    # -- construction ----------------------------------------------------
-    def _symbols(self, feats: np.ndarray, dim: int, bits: int) -> np.ndarray:
-        if bits == 0:
-            return np.zeros(feats.shape[0], np.int64)
-        bp = self._breaks[bits][dim]
-        return np.searchsorted(bp, feats[:, dim], side="right")
-
-    def _split(self, node: _Node):
-        rows = self.feats[node.ids]
-        node.lo = rows.min(axis=0)
-        node.hi = rows.max(axis=0)
-        if len(node.ids) <= self.leaf_capacity:
-            return
-        if node.bits.min() >= self.max_bits:
-            return                      # cannot refine further
-        # split the refinable dim with the highest feature variance
-        var = self.feats[node.ids].var(axis=0)
-        var[node.bits >= self.max_bits] = -1.0
-        dim = int(np.argmax(var))
-        node.split_dim = dim
-        new_bits = node.bits.copy()
-        new_bits[dim] += 1
-        syms = self._symbols(self.feats[node.ids], dim, int(new_bits[dim]))
-        node.children = {}
-        for s in np.unique(syms):
-            ids = node.ids[syms == s]
-            child = _Node(bits=new_bits.copy(), ids=ids)
-            node.children[int(s)] = child
-            self.n_nodes += 1
-            self._split(child)
-        node.ids = None
-
-    # -- search ----------------------------------------------------------
-    def _bbox_lb(self, q: np.ndarray, node: _Node) -> float:
-        """Weighted distance from the query features to the node's tight
-        member bounding box — a valid d_ED lower bound by the
-        season/residual orthogonality + PAA argument (module docstring).
-        Much tighter than breakpoint-interval MINDIST because every dim
-        contributes from the first split (DS-tree-style)."""
-        gap = np.maximum(0.0, np.maximum(node.lo - q, q - node.hi))
-        return math.sqrt(float(np.sum(self.weights * gap * gap)))
-
-    def _member_lb(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        """Exact d_sPAA (Table 2) per member: sqrt(T/(W*L) *
-        sum_{l,w}(d_sigma_l + d_res_w)^2), expanded to avoid the LxW
-        cross product:  T/L*|ds|^2 + T/W*|dr|^2 + 2T/(WL)*sum(ds)sum(dr)."""
-        ds = self.feats[ids, :self.L] - q[None, :self.L]
-        dr = self.feats[ids, self.L:] - q[None, self.L:]
-        t = (self.T / self.L) * np.sum(ds * ds, axis=1) \
-            + (self.T / self.W) * np.sum(dr * dr, axis=1) \
-            + 2.0 * self.T / (self.W * self.L) * ds.sum(1) * dr.sum(1)
-        return np.sqrt(np.maximum(t, 0.0))
-
-    def _seed_candidates(self, q: np.ndarray, k: int) -> list:
-        """Best-first leaf walk until >= k member ids are collected — the
-        seed set whose verified distances upper-bound the true k-th NN."""
-        heap = [(0.0, 0, self.root)]
-        counter = 1
-        out: list = []
-        while heap and len(out) < k:
-            _, _, node = heapq.heappop(heap)
-            if node.is_leaf:
-                out.extend(node.ids.tolist())
-                continue
-            for child in node.children.values():
-                heapq.heappush(heap, (self._bbox_lb(q, child), counter,
-                                      child))
-                counter += 1
-        return out
-
-    def _collect_bounds(self, q: np.ndarray, thresh: float):
-        """Compact (ids, d_sPAA bounds) of every member that could still
-        beat ``thresh`` (subtrees pruned by the bbox bound, members by the
-        exact sPAA bound) — O(survivors), never corpus-width."""
-        ids_out, lb_out = [], []
-        stack = [self.root]
-        while stack:
-            node = stack.pop()
-            if self._bbox_lb(q, node) > thresh:
-                continue
-            if node.is_leaf:
-                mlb = self._member_lb(q, node.ids)
-                keep = mlb <= thresh
-                ids_out.append(node.ids[keep])
-                lb_out.append(mlb[keep])
-            else:
-                stack.extend(node.children.values())
-        if not ids_out:
-            return np.empty(0, np.int64), np.empty(0)
-        return (np.concatenate(ids_out).astype(np.int64),
-                np.concatenate(lb_out))
-
-    def topk(self, sigma_q: np.ndarray, resbar_q: np.ndarray, store,
-             queries_raw: np.ndarray, *, k: int = 1, batch_size: int = 64,
-             verifier=None, merge=None):
-        """Batched multi-query exact top-k through the indexed traversal.
-
-        Three phases, all exact (same tie-break contract as the engine:
-        distance, then dataset index):
-
-        1. *Seed*: per query, walk leaves best-first until >= k members,
-           verify them in one batched fetch (``engine.verify_candidates``)
-           — the k-th verified distance U upper-bounds the true k-th NN.
-        2. *Collect*: walk the tree pruning subtrees with bbox bound > U;
-           surviving members with sPAA bound <= U become a COMPACT
-           candidate set (everything else provably cannot enter the
-           top-k, even on ties, since bound > U >= d_k implies d > d_k).
-        3. *Verify*: ``engine.topk_verify`` consumes the candidate bounds
-           in sorted order with the k-th-best early stop over the compact
-           candidate columns (``col_ids`` maps them to dataset rows —
-           memory O(survivors), not O(corpus)), seeded with the phase-1
-           frontier (seed members are excluded so no candidate is
-           verified twice).
-
-        Returns an ``engine.TopKResult`` with combined access accounting.
-        """
-        from repro.core.engine import (
-            TopKResult, merge_topk_numpy, numpy_verifier, topk_verify,
-            verify_candidates)
-        verifier = verifier or numpy_verifier
-        merge = merge or merge_topk_numpy
-
-        sigma_q = np.asarray(sigma_q, np.float32)
-        resbar_q = np.asarray(resbar_q, np.float32)
-        if sigma_q.ndim == 1:
-            sigma_q, resbar_q = sigma_q[None], resbar_q[None]
-        qs_raw = np.asarray(queries_raw)
-        if qs_raw.ndim == 1:
-            qs_raw = qs_raw[None]
-        feats_q = np.concatenate([sigma_q, resbar_q], axis=1)
-        n = self.feats.shape[0]
-        q_n = feats_q.shape[0]
-        k = min(k, n)
-
-        seeds = [self._seed_candidates(feats_q[r], k) for r in range(q_n)]
-        width = max(len(s) for s in seeds)
-        cand = np.full((q_n, width), -1, np.int64)
-        for r, s in enumerate(seeds):
-            cand[r, :len(s)] = s
-        seed_res = verify_candidates(qs_raw, cand, store, k=k,
-                                     verifier=verifier, merge=merge)
-
-        all_ids, all_lbs = [], []
-        for r in range(q_n):
-            ids_r, lb_r = self._collect_bounds(
-                feats_q[r], float(seed_res.distances[r, -1]))
-            fresh = ~np.isin(ids_r, np.asarray(seeds[r], np.int64))
-            all_ids.append(ids_r[fresh])       # seeds already in frontier
-            all_lbs.append(lb_r[fresh])
-        union = np.unique(np.concatenate(all_ids))     # sorted row ids
-        bounds = np.full((q_n, union.size), np.inf, np.float64)
-        for r in range(q_n):
-            bounds[r, np.searchsorted(union, all_ids[r])] = all_lbs[r]
-        res = topk_verify(qs_raw, bounds, store, k=k, batch_size=batch_size,
-                          verifier=verifier, merge=merge, col_ids=union,
-                          init_d=seed_res.distances, init_i=seed_res.indices)
-
-        acc = res.raw_accesses + seed_res.raw_accesses
-        return TopKResult(
-            indices=res.indices, distances=res.distances, raw_accesses=acc,
-            pruned_fraction=1.0 - acc / n,
-            store_accesses=res.store_accesses + seed_res.store_accesses,
-            store_fetches=res.store_fetches + seed_res.store_fetches,
-            io_seconds=res.io_seconds + seed_res.io_seconds)
-
-    def query(self, q_sigma: np.ndarray, q_resbar: np.ndarray,
-              store: RawStore, q_raw: np.ndarray) -> MatchResult:
-        """Exact 1-NN — thin wrapper over the batched ``topk`` path, so
-        indexed search shares the engine's verification machinery."""
-        res = self.topk(q_sigma, q_resbar, store, q_raw, k=1)
-        return MatchResult(index=int(res.indices[0, 0]),
-                           distance=float(res.distances[0, 0]),
-                           raw_accesses=int(res.raw_accesses[0]),
-                           pruned_fraction=float(res.pruned_fraction[0]))
-
-    # -- store integration ------------------------------------------------
-    @classmethod
-    def from_store(cls, store, *, max_bits: int = 8,
-                   leaf_capacity: int = 64) -> "SSaxIndex":
-        """Build an index over a ``repro.store.SymbolicStore`` whose
-        encoder exposes sSAX-style (sigma, resbar) features."""
-        import jax.numpy as jnp
-        enc = store.encoder
-        if not (hasattr(enc, "features") and hasattr(enc, "sd_seas")
-                and hasattr(enc, "sd_res")):
-            raise TypeError(f"{type(enc).__name__} does not expose "
-                            "season-aware (sigma, resbar) features")
-        feats = enc.features(jnp.asarray(store.data, jnp.float32))
-        if len(feats) != 2:
-            raise TypeError(f"{type(enc).__name__}.features returns "
-                            f"{len(feats)} components, need (sigma, resbar)")
-        sigma, resbar = feats
-        return cls(np.asarray(sigma), np.asarray(resbar), T=enc.T,
-                   sd_seas=enc.sd_seas, sd_res=enc.sd_res,
-                   max_bits=max_bits, leaf_capacity=leaf_capacity)
-
-    # -- snapshot serialization -------------------------------------------
-    def to_snapshot(self):
-        """Flatten the split tree to (meta dict, arrays dict) — preorder
-        node table + concatenated leaf payloads, rebuildable without
-        re-splitting by ``from_snapshot``."""
-        nodes, parents, syms = [], [], []
-
-        def walk(node, parent, sym):
-            nid = len(nodes)
-            nodes.append(node)
-            parents.append(parent)
-            syms.append(sym)
-            if not node.is_leaf:
-                for s in sorted(node.children):
-                    walk(node.children[s], nid, s)
-
-        walk(self.root, -1, -1)
-        n_nodes = len(nodes)
-        leaf_ids = [nd.ids if nd.is_leaf else np.empty(0, np.int64)
-                    for nd in nodes]
-        counts = np.asarray([len(x) for x in leaf_ids], np.int64)
-        arrays = {
-            "sigma": self.sigma,
-            "resbar": self.resbar,
-            "node_bits": np.stack([nd.bits for nd in nodes]),
-            "node_parent": np.asarray(parents, np.int32),
-            "node_sym": np.asarray(syms, np.int32),
-            "node_split_dim": np.asarray([nd.split_dim for nd in nodes],
-                                         np.int32),
-            "node_lo": np.stack([nd.lo for nd in nodes]),
-            "node_hi": np.stack([nd.hi for nd in nodes]),
-            "leaf_counts": counts,
-            "leaf_ids": (np.concatenate(leaf_ids) if n_nodes else
-                         np.empty(0, np.int64)).astype(np.int64),
-        }
-        meta = {"T": int(self.T), "max_bits": int(self.max_bits),
-                "leaf_capacity": int(self.leaf_capacity),
-                "sd_seas": float(self.sd_seas), "sd_res": float(self.sd_res),
-                "n_nodes": n_nodes}
-        return meta, arrays
-
-    @classmethod
-    def from_snapshot(cls, meta: dict, arrays: dict) -> "SSaxIndex":
-        """Rebuild an index from ``to_snapshot`` output (no re-split)."""
-        self = cls.__new__(cls)
-        self.sigma = np.asarray(arrays["sigma"], np.float32)
-        self.resbar = np.asarray(arrays["resbar"], np.float32)
-        self.T = int(meta["T"])
-        self.sd_seas = float(meta["sd_seas"])
-        self.sd_res = float(meta["sd_res"])
-        self.L = self.sigma.shape[1]
-        self.W = self.resbar.shape[1]
-        self.D = self.L + self.W
-        self.max_bits = int(meta["max_bits"])
-        self.leaf_capacity = int(meta["leaf_capacity"])
-        self.feats = np.concatenate([self.sigma, self.resbar], axis=1)
-        self.sds = np.asarray([self.sd_seas] * self.L +
-                              [self.sd_res] * self.W, np.float32)
-        self.weights = np.asarray([self.T / self.L] * self.L +
-                                  [self.T / self.W] * self.W, np.float32)
-        self._breaks = {b: [_gauss_breaks(1 << b, float(sd))
-                            for sd in self.sds]
-                        for b in range(1, self.max_bits + 1)}
-        n_nodes = int(meta["n_nodes"])
-        counts = arrays["leaf_counts"]
-        offsets = np.concatenate([[0], np.cumsum(counts)])
-        nodes = []
-        for i in range(n_nodes):
-            is_leaf = int(arrays["node_split_dim"][i]) < 0
-            node = _Node(bits=np.asarray(arrays["node_bits"][i], np.int8),
-                         ids=(arrays["leaf_ids"][offsets[i]:offsets[i + 1]]
-                              .astype(np.int64) if is_leaf else None),
-                         children={} if not is_leaf else None,
-                         split_dim=int(arrays["node_split_dim"][i]),
-                         lo=np.asarray(arrays["node_lo"][i], np.float32),
-                         hi=np.asarray(arrays["node_hi"][i], np.float32))
-            nodes.append(node)
-            parent = int(arrays["node_parent"][i])
-            if parent >= 0:
-                nodes[parent].children[int(arrays["node_sym"][i])] = node
-        self.root = nodes[0]
-        self.n_nodes = n_nodes
-        return self
+__all__ = ["SSaxIndex", "ndtri_np"]

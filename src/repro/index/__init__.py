@@ -1,0 +1,43 @@
+"""Season-aware index subsystem: an incremental iSAX-style split tree
+over any encoder's symbolic feature space.
+
+The paper's headline speedup — matching orders of magnitude faster than
+SAX — combines the improved symbolic distribution with an index over the
+symbolic space, so indexing is a first-class subsystem here, not an
+sSAX-only afterthought:
+
+* :mod:`repro.index.features` — per-encoder *feature adapters* mapping
+  raw series to a real-valued feature vector whose weighted distance
+  lower-bounds d_ED (SAX: PAA means; sSAX: season mask + residual means;
+  tSAX: scaled trend slope + residual means; stSAX: all three), plus the
+  exact per-member feature-distance bound of Table 2.
+* :mod:`repro.index.tree` / :mod:`repro.index.insert` — the adaptive
+  split tree.  Splitting promotes one feature dimension by one bit of
+  cardinality, **season-aware**: the split order is a deterministic
+  function of the node's bit-state that refines seasonal dimensions
+  first (then trend, then residual).  Because the split dimension never
+  depends on *which* members a node currently holds, the tree built by
+  incremental :meth:`~repro.index.tree.SplitTree.insert` is structurally
+  identical to a bulk rebuild for ANY append chunking — leaf membership
+  and all — so ``SymbolicStore.append`` maintains the index in place
+  instead of invalidating it.
+* :mod:`repro.index.candidates` — the ``CandidateSource`` protocol that
+  feeds ``core.engine.topk_verify``.  ``LinearSweep`` is the paper's
+  full lower-bound sweep; ``TreeCandidates`` generates a *compact*
+  candidate set from the tree (best-first seed walk, verified upper
+  bound U, then a pruned collect of every member whose bound can still
+  beat U).  Both run through the same k-th-best early-stop verification,
+  so indexed top-k is bit-identical to the linear sweep.
+* :class:`repro.index.series.SeriesIndex` — the store-facing object:
+  built from a ``SymbolicStore`` (or raw rows / z-normalized windows),
+  incrementally maintained by ``insert_rows``, snapshot-round-trippable,
+  and usable as a candidate source by ``MatchEngine`` and
+  ``SubseqEngine`` (via ``WindowView.build_index``).
+"""
+
+from repro.index.features import (  # noqa: F401
+    FeatureAdapter, adapter_for, ndtri_np)
+from repro.index.tree import SplitTree, TreeNode  # noqa: F401
+from repro.index.candidates import (  # noqa: F401
+    CandidateSet, LinearSweep, TreeCandidates, topk_from_source)
+from repro.index.series import SeriesIndex  # noqa: F401

@@ -1,0 +1,171 @@
+"""``CandidateSource``: where ``topk_verify`` gets its candidates.
+
+The engine's exactness argument (``core.engine`` docstring) only needs a
+set of candidates with valid d_ED lower bounds, consumed in bound order
+with the k-th-best early stop.  This module abstracts WHERE that set
+comes from:
+
+* :class:`LinearSweep` — the paper's linear scan: the full (Q, N)
+  representation-distance matrix (device sweep), every row a candidate.
+* :class:`TreeCandidates` — sublinear generation from a
+  :class:`repro.index.tree.SplitTree`:
+
+  1. *Seed*: per query, walk leaves best-first until >= k members; the
+     engine verifies them in one batched fetch — the k-th verified
+     distance U upper-bounds the true k-th NN.
+  2. *Collect*: walk the tree pruning subtrees with box bound > U;
+     surviving members with feature bound <= U become a COMPACT
+     candidate set (everything else provably cannot enter the top-k,
+     even on ties, since bound > U >= d_k implies d > d_k).
+  3. The engine's ``topk_verify`` consumes the compact bounds in sorted
+     order with the same k-th-best early stop (``col_ids`` maps columns
+     to dataset rows), seeded with the phase-1 frontier (seed members
+     are excluded so no candidate is verified twice).
+
+Both sources flow through :func:`topk_from_source`, so indexed and
+linear top-k share one verification path and identical exactness
+guarantees — results are bit-identical (same verifier, same (distance,
+id) tie-break), only the number of candidates examined differs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.index.tree import SplitTree
+
+
+@dataclass
+class CandidateSet:
+    """What a source hands the verification scan."""
+
+    bounds: np.ndarray                 # (Q, C) d_ED lower bounds
+    col_ids: Optional[np.ndarray]      # (C,) dataset id per column
+                                       # (None: column j IS row j)
+    init_d: Optional[np.ndarray] = None  # (Q, <=k) pre-verified frontier
+    init_i: Optional[np.ndarray] = None
+    seed_res: Optional[object] = None  # TopKResult of the seed phase
+
+
+@runtime_checkable
+class CandidateSource(Protocol):
+    def candidate_bounds(self, queries_raw, k: int,
+                         verify: Callable) -> CandidateSet:
+        """Produce the candidate set for a (Q, T) query batch.
+        ``verify(cand_idx) -> TopKResult`` verifies a (Q, S) id matrix
+        against raw storage (engine-supplied; sources that need a
+        verified upper bound — the tree's seed phase — call it)."""
+        ...
+
+
+class LinearSweep:
+    """The full lower-bound sweep as a candidate source."""
+
+    def __init__(self, repr_fn: Callable):
+        self._repr_fn = repr_fn       # queries_raw -> (Q, N) bounds
+
+    def candidate_bounds(self, queries_raw, k: int,
+                         verify: Callable) -> CandidateSet:
+        return CandidateSet(bounds=np.asarray(self._repr_fn(queries_raw)),
+                            col_ids=None)
+
+
+class TreeCandidates:
+    """Sublinear candidate generation from a split tree.
+
+    ``query_features`` maps the engine's query batch to (Q, D) adapter
+    features — precomputed-feature callers pass a closure ignoring the
+    raw queries.
+    """
+
+    def __init__(self, tree: SplitTree, query_features: Callable):
+        self.tree = tree
+        self._query_features = query_features
+
+    def candidate_bounds(self, queries_raw, k: int,
+                         verify: Callable) -> CandidateSet:
+        tree = self.tree
+        qf = np.asarray(self._query_features(queries_raw), np.float32)
+        if qf.ndim == 1:
+            qf = qf[None]
+        q_n = qf.shape[0]
+        if tree.n == 0:
+            return CandidateSet(bounds=np.empty((q_n, 0)), col_ids=None)
+        k = min(k, tree.n)
+
+        seeds = [tree.seed_candidates(qf[r], k) for r in range(q_n)]
+        width = max(len(s) for s in seeds)
+        cand = np.full((q_n, width), -1, np.int64)
+        for r, s in enumerate(seeds):
+            cand[r, :len(s)] = s
+        seed_res = verify(cand)
+
+        all_ids, all_lbs = [], []
+        for r in range(q_n):
+            # U upper-bounds the true k-th NN only once k members are
+            # verified; a short frontier (corpus < k) collects everything
+            u = (float(seed_res.distances[r, k - 1])
+                 if seed_res.distances.shape[1] >= k else np.inf)
+            ids_r, lb_r = tree.collect_bounds(qf[r], u)
+            fresh = ~np.isin(ids_r, np.asarray(seeds[r], np.int64))
+            all_ids.append(ids_r[fresh])   # seeds already in the frontier
+            all_lbs.append(lb_r[fresh])
+        union = np.unique(np.concatenate(all_ids))     # sorted row ids
+        bounds = np.full((q_n, union.size), np.inf, np.float64)
+        for r in range(q_n):
+            bounds[r, np.searchsorted(union, all_ids[r])] = all_lbs[r]
+        return CandidateSet(bounds=bounds, col_ids=union,
+                            init_d=seed_res.distances,
+                            init_i=seed_res.indices, seed_res=seed_res)
+
+
+def topk_from_source(queries_raw, source: CandidateSource, store, *,
+                     k: int = 1, batch_size: int = 64, verifier=None,
+                     merge=None, total: Optional[int] = None):
+    """Exact top-k through any candidate source — one verification path
+    (``core.engine.topk_verify``) for linear and indexed search.
+
+    ``total``: corpus size for access accounting (``pruned_fraction``);
+    defaults to the candidate-column count (correct for dense sources).
+    Returns ``core.engine.TopKResult`` with combined accounting across
+    the source's seed phase and the pruned scan.
+    """
+    from repro.core.engine import (
+        TopKResult, merge_topk_numpy, numpy_verifier, topk_verify,
+        verify_candidates)
+    verifier = verifier or numpy_verifier
+    merge = merge or merge_topk_numpy
+
+    qs = np.asarray(queries_raw)
+    if qs.ndim == 1:
+        qs = qs[None]
+
+    def verify(cand_idx):
+        return verify_candidates(qs, cand_idx, store, k=k,
+                                 verifier=verifier, merge=merge)
+
+    cs = source.candidate_bounds(qs, k, verify)
+    res = topk_verify(qs, cs.bounds, store, k=k, batch_size=batch_size,
+                      verifier=verifier, merge=merge, col_ids=cs.col_ids,
+                      init_d=cs.init_d, init_i=cs.init_i)
+    n = cs.bounds.shape[1] if total is None else int(total)
+    if cs.seed_res is None:
+        if total is None or n == cs.bounds.shape[1] or n == 0:
+            return res
+        return TopKResult(
+            indices=res.indices, distances=res.distances,
+            raw_accesses=res.raw_accesses,
+            pruned_fraction=1.0 - res.raw_accesses / n,
+            store_accesses=res.store_accesses,
+            store_fetches=res.store_fetches, io_seconds=res.io_seconds)
+    seed = cs.seed_res
+    acc = res.raw_accesses + seed.raw_accesses
+    return TopKResult(
+        indices=res.indices, distances=res.distances, raw_accesses=acc,
+        pruned_fraction=1.0 - acc / max(n, 1),
+        store_accesses=res.store_accesses + seed.store_accesses,
+        store_fetches=res.store_fetches + seed.store_fetches,
+        io_seconds=res.io_seconds + seed.io_seconds)

@@ -1,0 +1,126 @@
+"""``SeriesIndex``: the store-facing incremental index.
+
+One object ties the pieces together for a concrete corpus: the encoder's
+feature adapter, the split tree, and the engine protocol.  It indexes
+raw rows (``SymbolicStore`` / whole matching) or z-normalized windows
+(``subseq.WindowView`` / subsequence matching) — anything whose items
+the adapter's ``features`` accepts row-wise.
+
+Contracts:
+
+* ``insert_rows`` is incremental and chunking-invariant: the tree after
+  any sequence of inserts equals a bulk build over the same rows
+  (:mod:`repro.index.insert`), so ``SymbolicStore.append`` and
+  ``WindowView.sync`` maintain it in place.
+* ``topk`` routes through ``core.engine.topk_verify`` via
+  :class:`repro.index.candidates.TreeCandidates` — bit-identical to the
+  linear sweep, sublinear candidates examined.
+* ``to_snapshot`` / ``from_snapshot`` round-trip the tree INCLUDING its
+  split history, so a reopened incrementally-built index answers
+  queries identically and keeps accepting inserts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.index.candidates import TreeCandidates, topk_from_source
+from repro.index.features import FeatureAdapter, adapter_for
+from repro.index.tree import SplitTree
+
+_INSERT_CHUNK = 8192
+
+
+class SeriesIndex:
+    """Incremental split-tree index for one encoder's corpus."""
+
+    def __init__(self, encoder, *, leaf_fill: int = 64, max_bits: int = 8,
+                 adapter: Optional[FeatureAdapter] = None):
+        self.encoder = encoder
+        self.adapter = adapter if adapter is not None \
+            else adapter_for(encoder)
+        self.tree = SplitTree(self.adapter, leaf_fill=leaf_fill,
+                              max_bits=max_bits)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_store(cls, store, *, leaf_fill: int = 64,
+                   max_bits: int = 8) -> "SeriesIndex":
+        """Index every row of a ``SymbolicStore`` (or any object with
+        raw ``.data``) — the bulk build is just ``insert_rows`` over the
+        existing rows, the same code path appends keep using."""
+        idx = cls(store.encoder, leaf_fill=leaf_fill, max_bits=max_bits)
+        idx.insert_rows(store.data)
+        return idx
+
+    def insert_rows(self, rows) -> np.ndarray:
+        """Compute features of new rows (chunked — features are row-wise
+        maps, so chunking is bit-identical) and route them into the
+        tree; returns their item ids (insertion order)."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.shape[0] == 0:
+            return np.empty(0, np.int64)
+        out = []
+        for c0 in range(0, rows.shape[0], _INSERT_CHUNK):
+            chunk = rows[c0:c0 + _INSERT_CHUNK]
+            out.append(self.tree.insert(self.adapter.features(chunk)))
+        return np.concatenate(out)
+
+    # -- views -----------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.tree.n
+
+    def __len__(self) -> int:
+        return self.tree.n
+
+    @property
+    def n_nodes(self) -> int:
+        return self.tree.n_nodes
+
+    @property
+    def leaf_fill(self) -> int:
+        return self.tree.leaf_fill
+
+    @property
+    def max_bits(self) -> int:
+        return self.tree.max_bits
+
+    # -- engine integration ----------------------------------------------
+    def query_features(self, queries_raw) -> np.ndarray:
+        qs = np.asarray(queries_raw, np.float32)
+        if qs.ndim == 1:
+            qs = qs[None]
+        return self.adapter.features(qs)
+
+    def source(self) -> TreeCandidates:
+        """This index as a ``CandidateSource`` for the match engine."""
+        return TreeCandidates(self.tree, self.query_features)
+
+    def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
+             verifier=None, merge=None):
+        """Exact top-k over ``store`` through the indexed traversal —
+        bit-identical to the linear-sweep engine (same verification
+        path, same tie-break)."""
+        return topk_from_source(queries_raw, self.source(), store, k=k,
+                                batch_size=batch_size, verifier=verifier,
+                                merge=merge, total=self.n)
+
+    # -- snapshot serialization ------------------------------------------
+    def to_snapshot(self):
+        meta, arrays = self.tree.to_snapshot()
+        meta["kind"] = "series"
+        return meta, arrays
+
+    @classmethod
+    def from_snapshot(cls, encoder, meta: dict, arrays: dict,
+                      ) -> "SeriesIndex":
+        self = cls.__new__(cls)
+        self.encoder = encoder
+        self.adapter = adapter_for(encoder)
+        self.tree = SplitTree.from_snapshot(self.adapter, meta, arrays)
+        return self

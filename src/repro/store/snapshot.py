@@ -1,15 +1,26 @@
 """On-disk snapshot format for :class:`repro.store.SymbolicStore`.
 
 Layout follows the checkpoint conventions of ``checkpoint/ckpt.py``
-(atomic manifest commit, LATEST pointer, bounded GC):
+(atomic manifest commit, per-host shards, LATEST pointer, bounded GC):
 
     <dir>/snap_00000003/
         manifest.json        # row count, encoder class+params, leaf
-                             # shapes/dtypes, cost model, hash, index meta
-        arrays.npz           # raw rows + representation leaves +
-                             # encoder breakpoint tables (validated on open)
-        index.npz            # optional: flattened SSaxIndex split tree
+                             # shapes/dtypes, shard row ranges, cost
+                             # model, hash, index meta
+        shard_h000.npz       # host 0's row range of raw + rep leaves,
+                             # plus the global breakpoint tables
+        shard_h001.npz       # further hosts' row ranges (n_hosts > 1)
+        index.npz            # optional: flattened split-tree index
+                             # (features, node table, split history)
     <dir>/LATEST             # atomically-replaced pointer file
+
+Row-indexed arrays (raw rows, representation leaves) are split into
+contiguous per-host row ranges — on a real pod each process writes its
+own locally-addressable ``shard_hNNN.npz`` exactly like ``ckpt.py``; in
+a single-process container host 0 owns everything, and the layout is
+already multi-host shaped.  The content hash is computed over the
+LOGICAL (concatenated) arrays, so it is independent of the shard layout
+and a re-sharded save of identical data hashes identically.
 
 Crash safety: everything is written into ``snap_XXXX.tmp`` and renamed
 only after the manifest fsyncs, so a torn write can never produce a
@@ -19,10 +30,21 @@ explicit snapshot id).
 Encoder round-trip: encoders are frozen dataclasses of plain numbers, so
 the manifest stores ``{"class": name, "params": asdict}`` and ``open``
 rebuilds through a registry.  The *derived* breakpoint tables (the
-season/trend components' alphabets) are additionally stored in
-``arrays.npz`` and compared against the rebuilt encoder's tables — a
-library change that silently moved the breakpoints (re-interpreting every
-stored symbol) fails loudly instead of returning wrong matches.
+season/trend components' alphabets) are additionally stored in shard 0
+and compared against the rebuilt encoder's tables — a library change
+that silently moved the breakpoints (re-interpreting every stored
+symbol) fails loudly instead of returning wrong matches.
+
+Index round-trip: ``manifest["index"]["kind"]`` dispatches between the
+generic :class:`repro.index.SeriesIndex` (rebuilt against the manifest
+encoder, so it keeps accepting incremental inserts after reopen) and a
+legacy ``SSaxIndex`` a caller attached by hand before saving.
+
+Format history: format 1 (single ``arrays.npz``, variance-split
+``SSaxIndex`` tree) is NOT readable by this version — its index node
+semantics predate the deterministic split rule the subsystem's
+incremental guarantees rest on.  ``open`` rejects it loudly; re-save
+from the source data.
 """
 
 from __future__ import annotations
@@ -36,6 +58,8 @@ import time
 from typing import Optional
 
 import numpy as np
+
+FORMAT = 2
 
 
 def _encoder_registry() -> dict:
@@ -74,7 +98,8 @@ def _breakpoint_arrays(encoder) -> dict:
 
 def _content_hash(arrays: dict) -> str:
     """sha256 over names, shapes, dtypes AND array bytes — verified on
-    open, so a corrupted arrays.npz cannot open silently."""
+    open, so a corrupted shard cannot open silently.  Computed over the
+    logical arrays, independent of the shard layout."""
     h = hashlib.sha256()
     for k in sorted(arrays):
         v = np.ascontiguousarray(arrays[k])
@@ -97,10 +122,24 @@ def _snap_ids(directory: str):
                   if d.startswith("snap_") and not d.endswith(".tmp"))
 
 
-def save_store(directory: str, store, *, keep: int = 3) -> str:
-    """Write one snapshot of ``store``; returns its final path."""
+def _shard_ranges(n: int, n_hosts: int):
+    """Contiguous per-host row ranges covering [0, n)."""
+    bounds = [int(round(h * n / n_hosts)) for h in range(n_hosts + 1)]
+    return [(bounds[h], bounds[h + 1]) for h in range(n_hosts)]
+
+
+def save_store(directory: str, store, *, keep: int = 3,
+               n_hosts: int = 1) -> str:
+    """Write one snapshot of ``store``; returns its final path.
+
+    ``n_hosts`` mocks the multi-host pod layout: row-indexed arrays are
+    split into ``n_hosts`` contiguous row ranges, one ``shard_hNNN.npz``
+    each (this single process writes them all; on a real pod each host
+    writes its own shard of locally-addressable rows)."""
     from repro.store.symbolic import rep_leaves
 
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
     os.makedirs(directory, exist_ok=True)
     for leftover in os.listdir(directory):   # crashed saves: never reuse
         if leftover.startswith("snap_") and leftover.endswith(".tmp"):
@@ -113,13 +152,20 @@ def save_store(directory: str, store, *, keep: int = 3) -> str:
     os.makedirs(tmp, exist_ok=True)
 
     leaves = rep_leaves(store.rep_view())
-    arrays = {"raw": np.ascontiguousarray(store.data)}
+    row_arrays = {"raw": np.ascontiguousarray(store.data)}
     for i, leaf in enumerate(leaves):
-        arrays[f"rep_{i}"] = np.ascontiguousarray(leaf)
-    arrays.update(_breakpoint_arrays(store.encoder))
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        row_arrays[f"rep_{i}"] = np.ascontiguousarray(leaf)
+    global_arrays = _breakpoint_arrays(store.encoder)
+    arrays = {**row_arrays, **global_arrays}     # logical view (hashed)
 
-    hashed = dict(arrays)                # arrays.npz + index.npz contents
+    ranges = _shard_ranges(int(store.n), n_hosts)
+    for h, (lo, hi) in enumerate(ranges):
+        shard = {k: v[lo:hi] for k, v in row_arrays.items()}
+        if h == 0:
+            shard.update(global_arrays)          # host 0 owns globals
+        np.savez(os.path.join(tmp, f"shard_h{h:03d}.npz"), **shard)
+
+    hashed = dict(arrays)                # logical arrays + index contents
     index_meta = None
     if store.index is not None:
         meta, idx_arrays = store.index.to_snapshot()
@@ -128,11 +174,15 @@ def save_store(directory: str, store, *, keep: int = 3) -> str:
         index_meta = meta
 
     manifest = {
-        "format": 1,
+        "format": FORMAT,
         "time": time.time(),
         "n": int(store.n),
         "T": int(store.T),
         "version": int(store.version),
+        "hosts": int(n_hosts),
+        "shards": [{"file": f"shard_h{h:03d}.npz", "rows": [lo, hi]}
+                   for h, (lo, hi) in enumerate(ranges)],
+        "row_keys": sorted(row_arrays),
         "encoder": encoder_manifest(store.encoder),
         "rep_tuple": isinstance(store.rep_view(), tuple),
         "media": {"name": store.media, "seek_s": store.seek_s,
@@ -168,9 +218,28 @@ def latest_snap(directory: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
+def _load_shards(path: str, manifest: dict) -> dict:
+    """Reassemble the logical arrays from the per-host shard files."""
+    row_keys = set(manifest["row_keys"])
+    parts: dict = {k: [] for k in row_keys}
+    arrays: dict = {}
+    for shard in manifest["shards"]:
+        with np.load(os.path.join(path, shard["file"])) as z:
+            for k in z.files:
+                if k in row_keys:
+                    parts[k].append(z[k])
+                else:
+                    arrays[k] = z[k]             # global (host-0) arrays
+    for k, chunks in parts.items():
+        arrays[k] = np.concatenate(chunks, axis=0) if len(chunks) > 1 \
+            else chunks[0]
+    return arrays
+
+
 def open_store(directory: str, *, snap: Optional[int] = None):
     """Reopen a snapshot as a live, append-ready ``SymbolicStore``."""
-    from repro.core.index import SSaxIndex
+    from repro.index import SeriesIndex
+    from repro.index.legacy import SSaxIndex
     from repro.store.symbolic import SymbolicStore
 
     if snap is None:
@@ -179,13 +248,13 @@ def open_store(directory: str, *, snap: Optional[int] = None):
             raise FileNotFoundError(f"no snapshot under {directory}")
     path = os.path.join(directory, f"snap_{snap:08d}")
     manifest = json.load(open(os.path.join(path, "manifest.json")))
-    if manifest.get("format") != 1:
+    if manifest.get("format") != FORMAT:
         raise ValueError(f"unsupported snapshot format "
-                         f"{manifest.get('format')!r}")
+                         f"{manifest.get('format')!r} (this build reads "
+                         f"format {FORMAT})")
     encoder = encoder_from_manifest(manifest["encoder"])
 
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        arrays = {k: z[k] for k in z.files}
+    arrays = _load_shards(path, manifest)
     idx_arrays = None
     if manifest.get("index") is not None:
         with np.load(os.path.join(path, "index.npz")) as z:
@@ -231,5 +300,11 @@ def open_store(directory: str, *, snap: Optional[int] = None):
     store.version = int(manifest["version"])
 
     if idx_arrays is not None:
-        store.index = SSaxIndex.from_snapshot(manifest["index"], idx_arrays)
+        meta = manifest["index"]
+        if meta.get("kind", "ssax") == "series":
+            store.index = SeriesIndex.from_snapshot(encoder, meta,
+                                                    idx_arrays)
+        else:
+            store.index = SSaxIndex.from_snapshot(meta, idx_arrays,
+                                                  encoder=encoder)
     return store

@@ -23,8 +23,12 @@ them consistent under streaming ingestion:
   models, so it drops in wherever a bare ``RawStore`` was used.
 * ``save(dir)`` / ``SymbolicStore.open(dir)`` persist everything —
   raw manifest, representation arrays, encoder params (breakpoints
-  validated on open), and the ``SSaxIndex`` split tree — in the atomic
-  snapshot layout of :mod:`repro.store.snapshot`.
+  validated on open), and the split-tree index with its split history —
+  in the atomic snapshot layout of :mod:`repro.store.snapshot`
+  (optionally sharded per host, ckpt.py style).
+* ``build_index()`` attaches a :class:`repro.index.SeriesIndex` that
+  ``append`` maintains incrementally — engine queries take sublinear
+  candidates from it with bit-identical results.
 """
 
 from __future__ import annotations
@@ -88,7 +92,7 @@ class SymbolicStore:
         self._rep: Optional[list] = None   # list of (cap, ...) leaf arrays
         self._rep_is_tuple = True
         self.version = 0                   # bumped on every append
-        self.index = None                  # optional SSaxIndex over rows
+        self.index = None                  # optional SeriesIndex over rows
         # the verification protocol (fetch accounting + I/O model) is the
         # one RawStore implements — delegated, not duplicated; its .data
         # is re-pointed at the live prefix after every append
@@ -148,8 +152,12 @@ class SymbolicStore:
         representation of exactly these rows (e.g. from a sharded encode
         pass) — structure must match ``encoder.encode`` output.  Only the
         new rows are encoded; existing rows and their representation are
-        never touched.  Appending invalidates ``self.index`` (rebuild via
-        ``build_index``; incremental tree insertion is future work).
+        never touched.  A ``self.index`` built by ``build_index`` is
+        maintained INCREMENTALLY: the new rows are routed into the split
+        tree through the same code path bulk construction uses, so
+        index-accelerated queries keep serving without a rebuild (an
+        index that cannot insert — e.g. a legacy precomputed-feature
+        ``SSaxIndex`` — is invalidated instead).
         """
         rows = np.asarray(rows, np.float32)
         if rows.ndim == 1:
@@ -178,7 +186,13 @@ class SymbolicStore:
         if self.store_raw:
             self._io.data = self._raw[:self._n]
         self.version += 1
-        self.index = None            # coverage changed; rebuild on demand
+        if self.index is not None:
+            if getattr(self.index, "encoder", None) is None:
+                # legacy feature-only index cannot derive features from
+                # raw rows: invalidate rather than serve stale coverage
+                self.index = None
+            else:
+                self.index.insert_rows(rows)   # same path as bulk build
         return ids
 
     # -- views ------------------------------------------------------------
@@ -225,24 +239,36 @@ class SymbolicStore:
         self._io.reset()
 
     # -- index ------------------------------------------------------------
-    def build_index(self, *, max_bits: int = 8, leaf_capacity: int = 64):
-        """Build (and remember) an ``SSaxIndex`` over the current rows.
-        Requires a season-aware encoder (sSAX-style two-part features)."""
-        from repro.core.index import SSaxIndex
-        self.index = SSaxIndex.from_store(self, max_bits=max_bits,
-                                          leaf_capacity=leaf_capacity)
+    def build_index(self, *, leaf_fill: int = 64, max_bits: int = 8,
+                    leaf_capacity: Optional[int] = None):
+        """Build (and remember) a ``repro.index.SeriesIndex`` over the
+        current rows — any of the four techniques.  Subsequent
+        ``append`` calls maintain it incrementally (no rebuild); the
+        engine consumes it via ``MatchEngine.topk(..., source="index")``.
+        ``leaf_capacity`` is a legacy alias for ``leaf_fill``."""
+        if not self.store_raw:
+            raise TypeError("store was built with store_raw=False: index "
+                            "features are derived from raw rows (index "
+                            "the view that owns the raw source instead)")
+        if leaf_capacity is not None:
+            leaf_fill = leaf_capacity
+        from repro.index import SeriesIndex
+        self.index = SeriesIndex.from_store(self, leaf_fill=leaf_fill,
+                                            max_bits=max_bits)
         return self.index
 
     # -- persistence -------------------------------------------------------
-    def save(self, directory: str, *, keep: int = 3) -> str:
+    def save(self, directory: str, *, keep: int = 3,
+             n_hosts: int = 1) -> str:
         """Write an atomic snapshot (see repro.store.snapshot); returns
-        its final path."""
+        its final path.  ``n_hosts`` splits the row-indexed arrays into
+        per-host ``shard_hNNN.npz`` files (ckpt.py conventions)."""
         if not self.store_raw:
             raise TypeError("store was built with store_raw=False: the "
                             "snapshot format requires raw rows (re-derive "
                             "the representation from the source instead)")
         from repro.store.snapshot import save_store
-        return save_store(directory, self, keep=keep)
+        return save_store(directory, self, keep=keep, n_hosts=n_hosts)
 
     @classmethod
     def open(cls, directory: str, *, snap: Optional[int] = None

@@ -18,6 +18,12 @@ window distance, the result is bit-identical to a brute-force windowed
 scan (the paper's §4.1 exactness argument applied to the window set; see
 ``repro.subseq.__init__``).
 
+Candidate generation is linear (the (Q, n_windows) sweep) or — when the
+view carries a split-tree index (``view.build_index()``) — sublinear
+through ``repro.index``: the tree's seed/collect walk hands
+``topk_verify`` a compact candidate set instead of all N*S windows, with
+bit-identical results (same verifier, same tie-break).
+
 Non-overlap suppression: with ``exclusion > 0``, windows that overlap an
 already-selected better match (same source row, |start - start'| <
 exclusion samples) are suppressed — the standard guard against trivial
@@ -103,18 +109,31 @@ class SubseqEngine:
 
     # -- matching ---------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exclusion: int = 0,
-             batch_size: Optional[int] = None) -> SubseqResult:
+             batch_size: Optional[int] = None,
+             use_index: object = "auto") -> SubseqResult:
         """Top-k windows for a (Q, m) query batch (or a single (m,)
         query), exact under z-normalized d_ED.
 
         exclusion: minimum start-sample distance (same source row) between
         two reported matches; 0 disables suppression.
+
+        use_index: "auto" (use ``view.index`` when built), True (require
+        it), or False (force the linear window sweep).  Indexed and
+        linear candidate generation verify through the same k-th-best
+        early-stop scan and return bit-identical results — the index
+        only changes how many windows are examined.
         """
         zq = self.normalize_queries(queries_raw)
-        rd = self.repr_distances(zq)
         bs = batch_size or self.batch_size
-        nw = rd.shape[1]
+        idx = self.view.index if use_index in ("auto", True) else None
+        if use_index is True and idx is None:
+            raise ValueError("use_index=True but the view has no index; "
+                             "call view.build_index() first")
         acc = {"rows": 0, "fetches": 0, "io": 0.0}
+        if idx is not None:
+            return self._topk_indexed(zq, idx, k, exclusion, bs, acc)
+        rd = self.repr_distances(zq)
+        nw = rd.shape[1]
         if exclusion <= 0:
             res = topk_verify(zq, rd, self.view, k=k, batch_size=bs,
                               verifier=self.verifier, merge=self.merge)
@@ -146,6 +165,36 @@ class SubseqEngine:
                 seen = res.indices[qi][res.indices[qi] >= 0]
                 rd[qi, seen] = np.inf
             k_fetch = min(nw, 2 * k_fetch)
+
+    def _topk_indexed(self, zq, idx, k: int, exclusion: int, bs: int,
+                      acc: dict) -> SubseqResult:
+        """Indexed candidate generation: route the tree's compact
+        candidate set through the same verification scan
+        (``repro.index.candidates.topk_from_source``) — bit-identical to
+        the linear sweep.  With suppression, re-query at doubled k until
+        k non-overlapping survivors exist (each round is a self-contained
+        exact top-k_fetch, so greedy selection stays exact)."""
+        if idx.n != self.view.n:
+            raise ValueError(f"window index covers {idx.n} of "
+                             f"{self.view.n} windows; call view.sync()")
+        nw_total = self.view.n
+        if exclusion <= 0:
+            res = idx.topk(zq, self.view, k=k, batch_size=bs,
+                           verifier=self.verifier, merge=self.merge)
+            return self._wrap(res.indices, res.distances, res, nw_total,
+                              acc)
+        k_fetch = min(nw_total, max(4 * k, k + 8))
+        while True:
+            res = idx.topk(zq, self.view, k=k_fetch, batch_size=bs,
+                           verifier=self.verifier, merge=self.merge)
+            acc["rows"] += res.store_accesses
+            acc["fetches"] += res.store_fetches
+            acc["io"] += res.io_seconds
+            ids, dists, full = self._suppress(res, k, exclusion)
+            if full or k_fetch >= nw_total:
+                return self._wrap(ids, dists, res, nw_total, acc,
+                                  accumulated=True)
+            k_fetch = min(nw_total, 2 * k_fetch)
 
     def _suppress(self, res, k: int, exclusion: int):
         """Greedy non-overlap filter over the verified frontier; returns

@@ -16,6 +16,11 @@ N * S window matrix:
   encodes only the new rows' windows; ``sync()`` picks up rows appended
   to a shared source out-of-band.  Windows of previously ingested rows
   are never re-encoded.
+* **Indexable.**  ``build_index()`` attaches a
+  :class:`repro.index.SeriesIndex` whose tree items are the windows
+  themselves (ids = window ids); ``sync`` maintains it incrementally and
+  ``SubseqEngine`` takes sublinear candidates from it — bit-identical
+  results to the linear window sweep.
 * **Verification protocol over window ids.**  ``fetch(window_ids)``
   returns the z-normalized windows themselves, but bills the I/O cost
   model for the *deduplicated underlying rows* the windows live in —
@@ -89,6 +94,7 @@ class WindowView:
         self._rows_done = 0
         self._nw: Optional[int] = None     # windows per row, fixed by T
         self._rep = SymbolicStore(encoder, media=media, store_raw=False)
+        self.index = None                  # optional SeriesIndex (windows)
         if source is None:
             self.source = None
         elif hasattr(source, "fetch") and hasattr(source, "data"):
@@ -167,18 +173,49 @@ class WindowView:
     def sync(self) -> int:
         """Encode windows of any source rows not yet windowed (rows
         appended through a shared source land here); returns the number
-        of windows added."""
+        of windows added.  A window index built by ``build_index`` is
+        maintained incrementally: each chunk's z-normalized windows are
+        routed into the split tree in window-id order — the same code
+        path the bulk build uses, so no rebuild is ever needed."""
         added = 0
-        nw = self.windows_per_row
-        data = self.source.data
-        for r in range(self._rows_done, data.shape[0]):
-            wv = np.lib.stride_tricks.sliding_window_view(
-                data[r], self.m)[::self.stride]          # (nw, m) view
-            for c0 in range(0, nw, self.encode_chunk):
-                self._rep.append(znorm_windows(wv[c0:c0 + self.encode_chunk]))
-            added += nw
-        self._rows_done = data.shape[0]
+        n_rows = self.source.data.shape[0]
+        for z in self._window_chunks(self._rows_done, n_rows):
+            self._rep.append(z)
+            if self.index is not None:
+                self.index.insert_rows(z)
+            added += z.shape[0]
+        self._rows_done = n_rows
         return added
+
+    def _window_chunks(self, row_lo: int, row_hi: int):
+        """Yield the z-normalized windows of source rows [row_lo, row_hi)
+        in window-id order, ``encode_chunk`` windows at a time — the ONE
+        extraction path both incremental ``sync`` and the bulk
+        ``build_index`` consume, so the two can never drift apart (the
+        bulk == incremental invariance the index subsystem rests on)."""
+        nw = self.windows_per_row
+        for r in range(row_lo, row_hi):
+            wv = np.lib.stride_tricks.sliding_window_view(
+                self.source.data[r], self.m)[::self.stride]  # (nw, m) view
+            for c0 in range(0, nw, self.encode_chunk):
+                yield znorm_windows(wv[c0:c0 + self.encode_chunk])
+
+    # -- index ------------------------------------------------------------
+    def build_index(self, *, leaf_fill: int = 64, max_bits: int = 8):
+        """Build (and remember) a ``repro.index.SeriesIndex`` over every
+        window currently encoded — tree item ids ARE window ids (both
+        are dense row-major insertion order).  Windows of rows appended
+        afterwards are inserted incrementally by ``sync``;
+        ``SubseqEngine`` generates candidates from the tree instead of
+        sweeping all N*S windows linearly."""
+        from repro.index import SeriesIndex
+        idx = SeriesIndex(self.encoder, leaf_fill=leaf_fill,
+                          max_bits=max_bits)
+        for z in self._window_chunks(0, self._rows_done):
+            idx.insert_rows(z)
+        assert idx.n == self.n, (idx.n, self.n)
+        self.index = idx
+        return idx
 
     # -- representation ---------------------------------------------------
     def rep_view(self):

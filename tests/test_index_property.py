@@ -1,0 +1,64 @@
+"""Property tests (hypothesis) for the index subsystem: for EVERY
+encoder and ANY append chunking, incremental ``insert`` must yield a
+tree whose top-k is bit-identical to a bulk-rebuilt tree — the index
+analogue of test_store_property.py's chunked-encode property.  The
+structural claim is stronger and also checked: leaf membership itself is
+chunking-invariant (the split dimension is a function of node bit-state
+only, so bulk build and incremental maintenance are the same code
+path)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import MatchEngine, make_technique  # noqa: E402
+from repro.data.synthetic import season_dataset  # noqa: E402
+from repro.store import SymbolicStore  # noqa: E402
+
+N, N_Q, T, W, L = 120, 3, 240, 12, 10
+_X = season_dataset(n=N + N_Q, T=T, L=L, strength=0.7, seed=47)
+Q, D = _X[:N_Q], _X[N_Q:]
+ENCODERS = {tech: make_technique(tech, T=T, W=W, L=L)
+            for tech in ("sax", "ssax", "tsax", "stsax")}
+
+
+@st.composite
+def chunk_splits(draw):
+    """An arbitrary ordered partition of [0, N) into append chunks."""
+    cuts = draw(st.lists(st.integers(min_value=1, max_value=N - 1),
+                         unique=True, max_size=10))
+    return [0] + sorted(cuts) + [N]
+
+
+@pytest.mark.parametrize("tech", sorted(ENCODERS))
+@settings(max_examples=6, deadline=None)
+@given(chunk_splits(), st.integers(min_value=1, max_value=6))
+def test_incremental_insert_topk_bit_identical_to_bulk(tech, splits, k):
+    enc = ENCODERS[tech]
+    inc = SymbolicStore(enc)
+    inc.append(D[:splits[1]])
+    inc.build_index(leaf_fill=12, max_bits=4)    # index from chunk 1 on
+    for lo, hi in zip(splits[1:-1], splits[2:]):
+        inc.append(D[lo:hi])
+    assert inc.index is not None and inc.index.n == N
+
+    bulk = SymbolicStore.from_rows(enc, D)
+    bulk.build_index(leaf_fill=12, max_bits=4)
+
+    # structural invariance: same split history, same leaf membership
+    assert inc.index.n_nodes == bulk.index.n_nodes
+    assert inc.index.tree.leaf_membership() == \
+        bulk.index.tree.leaf_membership()
+
+    # behavioral invariance: bit-identical top-k (and both == linear)
+    r_inc = MatchEngine(enc, inc, verify="numpy").topk(Q, k=k,
+                                                      source="index")
+    r_blk = MatchEngine(enc, bulk, verify="numpy").topk(Q, k=k,
+                                                       source="index")
+    r_lin = MatchEngine(enc, bulk, verify="numpy").topk(Q, k=k)
+    np.testing.assert_array_equal(r_inc.indices, r_blk.indices)
+    np.testing.assert_array_equal(r_inc.distances, r_blk.distances)
+    np.testing.assert_array_equal(r_inc.indices, r_lin.indices)
+    np.testing.assert_array_equal(r_inc.distances, r_lin.distances)

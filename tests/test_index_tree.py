@@ -1,0 +1,200 @@
+"""Index subsystem (repro/index): exactness vs the linear sweep for all
+four encoders (whole-series and windowed), incremental == bulk tree
+structure, snapshot round-trips, sharded snapshot layout."""
+
+import numpy as np
+import pytest
+
+from repro.core import MatchEngine, make_technique
+from repro.data.synthetic import season_dataset
+from repro.store import SymbolicStore
+from repro.subseq import SubseqEngine, WindowView
+
+N, N_Q, T, W, L = 260, 4, 240, 12, 10
+TECHS = ("sax", "ssax", "tsax", "stsax")
+
+
+@pytest.fixture(scope="module")
+def season():
+    X = season_dataset(n=N + N_Q, T=T, L=L, strength=0.7, seed=41)
+    return X[:N_Q], X[N_Q:]
+
+
+def _enc(tech):
+    return make_technique(tech, T=T, W=W, L=L)
+
+
+@pytest.mark.parametrize("tech", TECHS)
+@pytest.mark.parametrize("k", [1, 6])
+def test_indexed_topk_bitwise_equals_linear(season, tech, k):
+    """MatchEngine.topk from the tree candidate source is bit-identical
+    to the linear lower-bound sweep — same verification path, same
+    (distance, index) tie-break (acceptance criterion)."""
+    Q, D = season
+    enc = _enc(tech)
+    store = SymbolicStore.from_rows(enc, D)
+    store.build_index(leaf_fill=16, max_bits=5)
+    engine = MatchEngine(enc, store, verify="numpy")
+    lin = engine.topk(Q, k=k)
+    idx = engine.topk(Q, k=k, source="index")
+    np.testing.assert_array_equal(idx.indices, lin.indices)
+    np.testing.assert_array_equal(idx.distances, lin.distances)
+
+
+def test_indexed_examines_fewer_candidates_ssax(season):
+    """On strong-season data the season-aware tree must examine fewer
+    candidates than the linear pruned scan (sSAX)."""
+    Q, D = season
+    store = SymbolicStore.from_rows(_enc("ssax"), D)
+    store.build_index(leaf_fill=16, max_bits=5)
+    engine = MatchEngine(_enc("ssax"), store, verify="numpy")
+    lin = engine.topk(Q, k=4)
+    idx = engine.topk(Q, k=4, source="index")
+    assert idx.raw_accesses.mean() < lin.raw_accesses.mean()
+
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_incremental_insert_equals_bulk_rebuild(season, tech):
+    """The satellite-fix regression: appends maintain the index through
+    the SAME code path as bulk construction — the incremental tree and a
+    bulk-rebuilt tree agree on leaf membership exactly, and answer
+    queries bit-identically (no silent re-split drift)."""
+    Q, D = season
+    enc = _enc(tech)
+    inc = SymbolicStore(enc)
+    inc.append(D[:60])
+    inc.build_index(leaf_fill=16, max_bits=5)
+    for lo, hi in ((60, 61), (61, 150), (150, 151), (151, N)):
+        inc.append(D[lo:hi])
+    assert inc.index is not None and inc.index.n == inc.n == N
+    bulk = SymbolicStore.from_rows(enc, D)
+    bulk.build_index(leaf_fill=16, max_bits=5)
+    assert inc.index.n_nodes == bulk.index.n_nodes
+    assert inc.index.tree.leaf_membership() == \
+        bulk.index.tree.leaf_membership()
+    r_inc = MatchEngine(enc, inc, verify="numpy").topk(Q, k=5,
+                                                      source="index")
+    r_blk = MatchEngine(enc, bulk, verify="numpy").topk(Q, k=5,
+                                                       source="index")
+    np.testing.assert_array_equal(r_inc.indices, r_blk.indices)
+    np.testing.assert_array_equal(r_inc.distances, r_blk.distances)
+
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_windowed_indexed_equals_linear_and_scan(tech):
+    """SubseqEngine over an indexed WindowView: bit-identical to the
+    linear window sweep and the brute-force scan, with stride > 1 and
+    ragged T (T - m not divisible by the stride), including after an
+    append with no rebuild (acceptance criterion)."""
+    T_long, m, stride = 250, 120, 3
+    D = season_dataset(10, T_long, L, strength=0.7,
+                       per_series_strength=True, seed=43)
+    rng = np.random.default_rng(2)
+    Q = np.stack([D[2, 40:40 + m], D[7, 100:100 + m]]) \
+        + 0.05 * rng.normal(size=(2, m)).astype(np.float32)
+    enc = make_technique(tech, T=m, W=m // L, L=L)
+    view = WindowView(enc, D, stride=stride, media="ssd")
+    eng = SubseqEngine(view, verify="numpy")
+    lin = eng.topk(Q, k=5, use_index=False)
+    view.build_index(leaf_fill=12, max_bits=5)
+    idx = eng.topk(Q, k=5)
+    np.testing.assert_array_equal(idx.window_ids, lin.window_ids)
+    np.testing.assert_array_equal(idx.distances, lin.distances)
+    scan = eng.scan_topk(Q, k=5, use_kernel=False)
+    np.testing.assert_array_equal(idx.window_ids, scan.window_ids)
+    # append: the index follows incrementally, answers stay identical
+    view.append(season_dataset(2, T_long, L, 0.7, seed=44))
+    assert view.index.n == view.n
+    lin2 = eng.topk(Q, k=5, use_index=False)
+    idx2 = eng.topk(Q, k=5)
+    np.testing.assert_array_equal(idx2.window_ids, lin2.window_ids)
+    np.testing.assert_array_equal(idx2.distances, lin2.distances)
+    # suppression routes through the index too, still exact
+    s_lin = eng.topk(Q, k=3, exclusion=m // 2, use_index=False)
+    s_idx = eng.topk(Q, k=3, exclusion=m // 2)
+    np.testing.assert_array_equal(s_idx.window_ids, s_lin.window_ids)
+
+
+def test_windowed_index_requires_sync_coverage():
+    D = season_dataset(4, 250, L, 0.7, seed=45)
+    enc = _enc("ssax")
+    view = WindowView(enc, D[:3], stride=2)
+    view.build_index(leaf_fill=8)
+    eng = SubseqEngine(view, verify="numpy")
+    with pytest.raises(ValueError, match="no index"):
+        SubseqEngine(WindowView(enc, D, stride=2),
+                     verify="numpy").topk(D[0, :T], k=1, use_index=True)
+    # out-of-band source growth is caught (WindowView.append syncs, so
+    # only manual misuse can desynchronize)
+    view.index.tree.insert(np.zeros((1, view.index.adapter.D), np.float32))
+    with pytest.raises(ValueError, match="covers"):
+        eng.topk(D[0, :enc.T], k=1)
+
+
+def test_snapshot_roundtrip_incremental_index(tmp_path, season):
+    """open(save(store)) restores an incrementally-built tree that
+    answers queries identically and KEEPS accepting inserts (acceptance
+    criterion)."""
+    Q, D = season
+    enc = _enc("stsax")
+    store = SymbolicStore(enc)
+    store.append(D[:90])
+    store.build_index(leaf_fill=16, max_bits=5)
+    store.append(D[90:])
+    store.save(str(tmp_path))
+    reopened = SymbolicStore.open(str(tmp_path))
+    assert reopened.index is not None
+    assert reopened.index.n_nodes == store.index.n_nodes
+    r0 = MatchEngine(enc, store, verify="numpy").topk(Q, k=3,
+                                                     source="index")
+    r1 = MatchEngine(enc, reopened, verify="numpy").topk(Q, k=3,
+                                                        source="index")
+    np.testing.assert_array_equal(r0.indices, r1.indices)
+    np.testing.assert_array_equal(r0.distances, r1.distances)
+    # the reopened tree continues inserting exactly like the original
+    store.append(Q)
+    reopened.append(Q)
+    assert reopened.index.tree.leaf_membership() == \
+        store.index.tree.leaf_membership()
+
+
+def test_sharded_snapshot_two_host_roundtrip(tmp_path, season):
+    """save(n_hosts=2) writes per-host shard_hNNN.npz files (ckpt.py
+    conventions) that reassemble into the identical store + index."""
+    import os
+    Q, D = season
+    enc = _enc("ssax")
+    store = SymbolicStore.from_rows(enc, D, media="hdd")
+    store.build_index(leaf_fill=16, max_bits=5)
+    path = store.save(str(tmp_path), n_hosts=2)
+    shards = sorted(f for f in os.listdir(path) if f.startswith("shard_"))
+    assert shards == ["shard_h000.npz", "shard_h001.npz"]
+    with np.load(os.path.join(path, "shard_h000.npz")) as z0, \
+            np.load(os.path.join(path, "shard_h001.npz")) as z1:
+        assert z0["raw"].shape[0] + z1["raw"].shape[0] == N
+        assert "bp_b_seas" in z0.files       # host 0 owns the globals
+        assert "bp_b_seas" not in z1.files
+    reopened = SymbolicStore.open(str(tmp_path))
+    np.testing.assert_array_equal(reopened.data, store.data)
+    assert reopened.seek_s == store.seek_s
+    r0 = MatchEngine(enc, store, verify="numpy").topk(Q, k=5,
+                                                     source="index")
+    r1 = MatchEngine(enc, reopened, verify="numpy").topk(Q, k=5,
+                                                        source="index")
+    np.testing.assert_array_equal(r0.indices, r1.indices)
+    np.testing.assert_array_equal(r0.distances, r1.distances)
+
+
+def test_build_index_rejects_rep_only_store():
+    enc = _enc("ssax")
+    store = SymbolicStore(enc, store_raw=False)
+    store.append(np.zeros((4, T), np.float32))
+    with pytest.raises(TypeError, match="store_raw"):
+        store.build_index()
+
+
+def test_adapter_for_rejects_unknown_encoder():
+    from repro.core import OneDSAX
+    from repro.index import adapter_for
+    with pytest.raises(TypeError, match="adapter"):
+        adapter_for(OneDSAX(T=T, W=W, A_a=16, A_s=16))

@@ -143,10 +143,8 @@ def test_snapshot_roundtrip_index(tmp_path, season):
     reopened = SymbolicStore.open(str(tmp_path))
     assert reopened.index is not None
     assert reopened.index.n_nodes == store.index.n_nodes
-    sq, rq = enc.features(jnp.asarray(Q, jnp.float32))
-    r0 = store.index.topk(np.asarray(sq), np.asarray(rq), store, Q, k=3)
-    r1 = reopened.index.topk(np.asarray(sq), np.asarray(rq), reopened, Q,
-                             k=3)
+    r0 = store.index.topk(Q, store, k=3)
+    r1 = reopened.index.topk(Q, reopened, k=3)
     np.testing.assert_array_equal(r0.indices, r1.indices)
     np.testing.assert_array_equal(r0.distances, r1.distances)
 
@@ -165,13 +163,23 @@ def test_snapshot_latest_pointer_and_gc(tmp_path, season):
     assert reopened.n == store.n
 
 
-def test_append_invalidates_index(season):
-    _, D = season
-    store = SymbolicStore.from_rows(ENCODERS["ssax"], D)
+def test_append_maintains_index_incrementally(season):
+    """Appends route new rows into the split tree through the bulk-build
+    code path — the index keeps full coverage with no rebuild and the
+    indexed engine stays bit-identical to the linear sweep."""
+    Q, D = season
+    enc = ENCODERS["ssax"]
+    store = SymbolicStore.from_rows(enc, D[:-2])
     store.build_index(max_bits=4, leaf_capacity=32)
     assert store.index is not None
-    store.append(D[:2])
-    assert store.index is None           # stale coverage must not linger
+    store.append(D[-2:])
+    assert store.index is not None       # maintained, not invalidated
+    assert store.index.n == store.n == N
+    engine = MatchEngine(enc, store, verify="numpy")
+    res_idx = engine.topk(Q, k=3, source="index")
+    res_lin = engine.topk(Q, k=3)
+    np.testing.assert_array_equal(res_idx.indices, res_lin.indices)
+    np.testing.assert_array_equal(res_idx.distances, res_lin.distances)
 
 
 def test_open_rejects_corruption_and_drifted_breakpoints(tmp_path, season):
@@ -185,9 +193,9 @@ def test_open_rejects_corruption_and_drifted_breakpoints(tmp_path, season):
     _, D = season
     store = SymbolicStore.from_rows(ENCODERS["ssax"], D)
     path = store.save(str(tmp_path))
-    arrays = dict(np.load(os.path.join(path, "arrays.npz")))
+    arrays = dict(np.load(os.path.join(path, "shard_h000.npz")))
     arrays["bp_b_res"] = arrays["bp_b_res"] + 0.25
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    np.savez(os.path.join(path, "shard_h000.npz"), **arrays)
     with pytest.raises(ValueError, match="hash mismatch"):
         SymbolicStore.open(str(tmp_path))
     # consistent hash but drifted tables: the breakpoint check fires
