@@ -74,6 +74,7 @@ def _whole(cfg, rows, examined):
         t_idx = time.perf_counter() - t0
         agree = int(np.array_equal(idx.indices, lin.indices)
                     and np.array_equal(idx.distances, lin.distances))
+        examined[f"bitwise/whole/{tech}"] = agree
         examined[f"whole/{tech}"] = (idx.raw_accesses.mean(),
                                      lin.raw_accesses.mean())
         rows.append((
@@ -114,6 +115,7 @@ def _windowed(cfg, rows, examined):
         t_idx = time.perf_counter() - t0
         agree = int(np.array_equal(idx.window_ids, lin.window_ids)
                     and np.array_equal(idx.distances, lin.distances))
+        examined[f"bitwise/windowed/{tech}"] = agree
         examined[f"windowed/{tech}"] = (idx.raw_accesses.mean(),
                                         lin.raw_accesses.mean())
         rows.append((
@@ -148,6 +150,14 @@ def run(dryrun: bool = False):
         f"rows / >=100k windows) {verdict}"))
     for name, derived in rows:
         emit_row(name, derived)
+    # bit-identity is a hard contract, not a printed observation: any
+    # indexed-vs-linear divergence fails the run (and the CI dryrun leg)
+    diverged = sorted(key for key, agree in examined.items()
+                      if key.startswith("bitwise/") and not agree)
+    if diverged:
+        raise RuntimeError(
+            "indexed results diverged from the linear sweep: "
+            + ", ".join(k.removeprefix("bitwise/") for k in diverged))
     return rows
 
 

@@ -1,0 +1,157 @@
+"""Sharded-verification benchmark (``core.distributed``).
+
+For each representation (SAX / sSAX / tSAX / stSAX), measures exact
+top-k with **device-resident** raw verification (``verify="device"``:
+raw rows sharded across the mesh next to the representation, candidates
+distanced per shard through the multi-query Pallas euclid kernel,
+device-side merge) against the **host** fallback (``verify="host"``:
+one batched store fetch per round, same kernel distance math), in both
+regimes:
+
+* **whole-series**: ``make_engine_service`` over a Season corpus;
+* **windowed**: ``SubseqEngine`` with a sharded window sweep — window
+  candidates are sliced + z-normalized on device from the sharded
+  source rows.
+
+Reported per path: verification wall-clock and **candidates moved to
+host** (``store_accesses`` — the device path must move zero).  The two
+paths share one distance definition (the kernel's f32 reduction), so
+results must be bit-identical — any divergence or any host movement on
+the device path fails the run (the CI dryrun legs run this on a forced
+4-device host platform).
+
+``--dryrun`` shrinks everything so CI exercises the full path — sharded
+mirrors, shard_map verification, device merge — in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_row
+from repro.core import make_technique
+from repro.data.synthetic import season_dataset
+from repro.subseq import SubseqEngine, WindowView
+
+L = 10
+
+FULL = dict(n=2048, T=480, queries=6, k=16, batch=256,
+            sub_n=24, sub_T=1200, m=240, stride=2, sub_k=8, sub_queries=3)
+DRY = dict(n=96, T=240, queries=2, k=4, batch=64,
+           sub_n=5, sub_T=610, m=120, stride=7, sub_k=3, sub_queries=2)
+
+
+def _encoders(T):
+    w = T // (2 * L)
+    return {
+        "sax": make_technique("sax", T=T, W=w, L=L),
+        "ssax": make_technique("ssax", T=T, W=w, L=L, r2_season=0.7),
+        "tsax": make_technique("tsax", T=T, W=w, L=L, r2_trend=0.3),
+        "stsax": make_technique("stsax", T=T, W=w, L=L, r2_season=0.5),
+    }
+
+
+def _whole(cfg, mesh, rows, failures):
+    import jax.numpy as jnp
+
+    from repro.core import MatchEngine
+    from repro.core.distributed import make_engine_service
+    n, T, k = cfg["n"], cfg["T"], cfg["k"]
+    X = season_dataset(n + cfg["queries"], T, L, strength=0.7,
+                       per_series_strength=True, seed=41)
+    Q, D = X[:cfg["queries"]], X[cfg["queries"]:]
+    for tech, enc in _encoders(T).items():
+        dev = make_engine_service(enc, jnp.asarray(D), mesh,
+                                  verify="device", batch_size=cfg["batch"])
+        # the host path under comparison is the plain SymbolicStore
+        # engine (store fetch + the same kernel math) — no sharded sweep
+        host = MatchEngine(enc, dev.store, verify="host",
+                           batch_size=cfg["batch"])
+        t0 = time.perf_counter()
+        r_d = dev.topk(Q, k=k)
+        t_dev = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r_h = host.topk(Q, k=k)
+        t_host = time.perf_counter() - t0
+        agree = int(np.array_equal(r_d.indices, r_h.indices)
+                    and np.array_equal(r_d.distances, r_h.distances))
+        if not agree or r_d.store_accesses != 0:
+            failures.append(f"whole/{tech}")
+        rows.append((
+            f"sharded_verify/whole/{tech}",
+            f"n={n} k={k} moved_dev={r_d.store_accesses} "
+            f"moved_host={r_h.store_accesses} bitwise={agree} "
+            f"io_host_s={r_h.io_seconds:.5f} wall_dev_s={t_dev:.2f} "
+            f"wall_host_s={t_host:.2f}"))
+
+
+def _windowed(cfg, mesh, rows, failures):
+    n, T, m, stride, k = (cfg["sub_n"], cfg["sub_T"], cfg["m"],
+                          cfg["stride"], cfg["sub_k"])
+    n_q = cfg["sub_queries"]
+    rng = np.random.default_rng(43)
+    D = season_dataset(n, T, L, strength=0.7,
+                       per_series_strength=True, seed=43)
+    q_rows = rng.integers(0, n, size=n_q)
+    offs = rng.integers(0, T - m, size=n_q)
+    Q = np.stack([D[r, o:o + m] for r, o in zip(q_rows, offs)])
+    Q = Q + 0.05 * rng.normal(size=Q.shape).astype(np.float32)
+    for tech, enc in _encoders(m).items():
+        view = WindowView(enc, D, stride=stride, media="ssd")
+        e_dev = SubseqEngine(view, mesh=mesh, verify="device",
+                             batch_size=cfg["batch"])
+        e_host = SubseqEngine(view, verify="host", batch_size=cfg["batch"])
+        t0 = time.perf_counter()
+        r_d = e_dev.topk(Q, k=k)
+        t_dev = time.perf_counter() - t0
+        view.reset()
+        t0 = time.perf_counter()
+        r_h = e_host.topk(Q, k=k)
+        t_host = time.perf_counter() - t0
+        agree = int(np.array_equal(r_d.window_ids, r_h.window_ids)
+                    and np.array_equal(r_d.distances, r_h.distances))
+        if not agree or r_d.store_accesses != 0:
+            failures.append(f"windowed/{tech}")
+        rows.append((
+            f"sharded_verify/windowed/{tech}",
+            f"windows={view.n} k={k} moved_dev={r_d.store_accesses} "
+            f"moved_host={r_h.store_accesses} bitwise={agree} "
+            f"io_host_s={r_h.io_seconds:.5f} wall_dev_s={t_dev:.2f} "
+            f"wall_host_s={t_host:.2f}"))
+
+
+def run(dryrun: bool = False):
+    import jax
+
+    from repro.launch.mesh import make_mesh_compat
+    cfg = DRY if dryrun else FULL
+    n_dev = len(jax.devices())
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    rows: list = []
+    failures: list = []
+    _whole(cfg, mesh, rows, failures)
+    _windowed(cfg, mesh, rows, failures)
+    verdict = "PASS" if not failures else "FAIL " + ",".join(failures)
+    rows.append((
+        "sharded_verify/acceptance",
+        f"devices={n_dev} (target: device path bit-identical to host "
+        f"fallback with zero candidates moved to host) {verdict}"))
+    for name, derived in rows:
+        emit_row(name, derived)
+    if failures:
+        raise RuntimeError(
+            "device-resident verification broke its contract "
+            "(bit-identity to the host path / zero host movement): "
+            + ", ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny sizes + forced multi-device fleet (CI)")
+    args = ap.parse_args()
+    run(dryrun=args.dryrun)

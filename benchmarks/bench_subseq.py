@@ -66,6 +66,7 @@ def run(dryrun: bool = False):
     rows = []
     n_windows = None
     speedups = {}
+    diverged = []
     for tech, enc in _encoders(m).items():
         view = WindowView(enc, D, stride=stride, media="ssd")
         n_windows = view.n
@@ -79,6 +80,13 @@ def run(dryrun: bool = False):
         t_scan = time.perf_counter() - t0
         hit1 = int(sum(res.window_ids[qi, 0] == scan.window_ids[qi, 0]
                        for qi in range(n_q)))
+        # ids must match exactly; distances to kernel tolerance (the
+        # scan profile comes from the MASS-style rolling-stats kernel,
+        # a different f32 computation than the pruned path's verifier)
+        if not (np.array_equal(res.window_ids, scan.window_ids)
+                and np.allclose(res.distances, scan.distances,
+                                rtol=1e-3, atol=1e-3)):
+            diverged.append(tech)
         speedup = scan.io_seconds / max(res.io_seconds, 1e-12)
         speedups[tech] = speedup
         rows.append((
@@ -102,6 +110,12 @@ def run(dryrun: bool = False):
         f"(target: pruned beats scan at >= 10k windows) {verdict}"))
     for name, derived in rows:
         emit_row(name, derived)
+    # exactness is a hard contract: the pruned windowed scan must return
+    # the brute-force scan's top-k for every representation — any
+    # divergence fails the run (and the CI dryrun leg), not just a print
+    if diverged:
+        raise RuntimeError("pruned top-k diverged from the brute-force "
+                           "windowed scan for: " + ", ".join(diverged))
     return rows
 
 

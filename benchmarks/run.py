@@ -9,6 +9,7 @@ Paper artifact map:
     ingest   -> (store subsystem: append throughput + query-under-ingest)
     subseq   -> (subsequence subsystem: pruned windowed scan vs brute)
     index    -> (index subsystem: tree candidates vs linear sweep)
+    sharded_verify -> (device-resident sharded verification vs host)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -19,7 +20,8 @@ import importlib
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
-          "extensions", "ingest", "subseq", "index", "roofline", "perf"]
+          "extensions", "ingest", "subseq", "index", "sharded_verify",
+          "roofline", "perf"]
 
 
 def main() -> None:

@@ -15,7 +15,26 @@ are replicated.  One ``shard_map`` pass per stage:
      ``repr_topk_sharded`` produces the candidate frontier for
      approximate top-k, ``repr_distances_sharded`` the full lower-bound
      matrix for exact top-k — ``make_engine_service`` wires both into an
-     engine whose raw verification is one batched fetch per round.
+     engine whose raw verification is one batched fetch per round
+     (host path) or never leaves the devices (``verify="device"``).
+
+Device-resident verification (``verify="device"``): the raw rows are
+mirrored on device alongside the representation, sharded by the SAME
+contiguous row ranges the ``SymbolicStore`` snapshot raw manifest uses
+(``store.snapshot._shard_ranges`` — shard h of the device mirror holds
+exactly the rows ``shard_hNNN.npz`` would, so a per-host snapshot
+restore feeds each device shard without resharding).  A verification
+round hands the candidate id batch to every shard; each shard distances
+its own candidates through the multi-query Pallas euclid kernel
+(``kernels.euclid``) and a device-side min-merge combines shards (each
+candidate is owned by exactly one).  The distance definition is the
+kernel's f32 reduction — identical math to the host ``verify="host"``
+fallback (store fetch + the same kernel), so the two paths are
+bit-identical; the host ``verify="numpy"`` path stays the brute-force
+oracle with modeled I/O.  The non-shard-divisible remainder
+(< n_shards rows) is distanced host-side through the same kernel —
+those rows are already host-resident, so the device path still moves
+zero raw rows device->host.
 
 The helpers take any encoder with ``encode`` + ``pairwise_distance`` —
 SAX, sSAX, tSAX and 1d-SAX all plug in.
@@ -23,7 +42,7 @@ SAX, sSAX, tSAX and 1d-SAX all plug in.
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable
 
 import jax
@@ -37,43 +56,89 @@ def _data_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+# The shard_map'd sweep callables are built once per (mesh, encoder /
+# pairwise, pytree structure) and jitted: rebuilding the closure per
+# call used to defeat jax's trace cache entirely, paying a full XLA
+# recompile on EVERY sweep (tens of seconds for the richer encoders).
+# The cached callables compile once per input shape and are shared by
+# every engine over the same mesh.  The compiled body is unchanged, so
+# results are unchanged.
+
+@lru_cache(maxsize=64)
+def _encode_fn(mesh: Mesh, encoder, out_def, out_ndims):
+    axes = _data_axes(mesh)
+    # representation leaves keep their leading N axis sharded; trailing
+    # axes replicated
+    spec_out = jax.tree.unflatten(
+        out_def, [P(axes, *([None] * (nd - 1))) for nd in out_ndims])
+    return jax.jit(shard_map(
+        lambda x: encoder.encode(x), mesh=mesh, in_specs=(P(axes, None),),
+        out_specs=spec_out, check_rep=False))
+
+
 def encode_sharded(encoder, dataset, mesh: Mesh):
     """Encode a dataset sharded over the data axes.  dataset: (N, T)."""
-    axes = _data_axes(mesh)
-
-    def local(x):
-        return encoder.encode(x)
-
-    spec_in = P(axes, None)
     rep_struct = jax.eval_shape(encoder.encode,
                                 jax.ShapeDtypeStruct(dataset.shape,
                                                      dataset.dtype))
-    spec_out = jax.tree.map(lambda _: P(axes, *([None] * 0)), rep_struct)
-    # representation leaves keep their leading N axis sharded; trailing
-    # axes replicated
-    spec_out = jax.tree.map(
-        lambda s: P(axes, *([None] * (len(s.shape) - 1))), rep_struct)
-    fn = shard_map(local, mesh=mesh, in_specs=(spec_in,),
-                   out_specs=spec_out, check_rep=False)
+    leaves, out_def = jax.tree.flatten(rep_struct)
+    fn = _encode_fn(mesh, encoder, out_def,
+                    tuple(len(l.shape) for l in leaves))
     return fn(dataset)
+
+
+def _rep_specs(rep_query, rep_data):
+    """Hashable (treedefs, ndims) cache key for a (query, data) rep
+    pair — enough to rebuild the P-specs (query replicated, data
+    sharded on its leading axis)."""
+    ql, q_def = jax.tree.flatten(rep_query)
+    xl, x_def = jax.tree.flatten(rep_data)
+    return (q_def, x_def, tuple(l.ndim for l in ql),
+            tuple(l.ndim for l in xl))
+
+
+@lru_cache(maxsize=64)
+def _repr_dists_fn(mesh: Mesh, pw, q_def, x_def, q_ndims, x_ndims):
+    axes = _data_axes(mesh)
+    in_q = jax.tree.unflatten(q_def, [P(*([None] * nd)) for nd in q_ndims])
+    in_x = jax.tree.unflatten(
+        x_def, [P(axes, *([None] * (nd - 1))) for nd in x_ndims])
+    return jax.jit(shard_map(
+        lambda rq, rx: pw(rq, rx), mesh=mesh, in_specs=(in_q, in_x),
+        out_specs=P(None, axes), check_rep=False))
 
 
 def repr_distances_sharded(encoder, rep_query, rep_data, mesh: Mesh,
                            pairwise: Callable | None = None):
     """(Q, N) representation distances, N sharded.  Output replicated-Q,
     N-sharded."""
-    axes = _data_axes(mesh)
     pw = pairwise or encoder.pairwise_distance
+    fn = _repr_dists_fn(mesh, pw, *_rep_specs(rep_query, rep_data))
+    return fn(rep_query, rep_data)
+
+
+@lru_cache(maxsize=64)
+def _repr_topk_fn(mesh: Mesh, pw, k: int, q_def, x_def, q_ndims, x_ndims):
+    axes = _data_axes(mesh)
 
     def local(rq, rx):
-        return pw(rq, rx)
+        d = pw(rq, rx)                                 # (Q, n_local)
+        n_local = d.shape[1]
+        kk = min(k, n_local)
+        neg, idx = jax.lax.top_k(-d, kk)               # smallest distances
+        gidx = idx + _shard_index(axes) * n_local      # global offset
+        cand_d = jax.lax.all_gather(-neg, axes, axis=1, tiled=True)
+        cand_i = jax.lax.all_gather(gidx, axes, axis=1, tiled=True)
+        best_neg, best_pos = jax.lax.top_k(-cand_d, min(k, cand_d.shape[1]))
+        best_i = jnp.take_along_axis(cand_i, best_pos, axis=1)
+        return -best_neg, best_i
 
-    in_q = jax.tree.map(lambda s: P(*([None] * s.ndim)), rep_query)
-    in_x = jax.tree.map(
-        lambda s: P(axes, *([None] * (s.ndim - 1))), rep_data)
-    fn = shard_map(local, mesh=mesh, in_specs=(in_q, in_x),
-                   out_specs=P(None, axes), check_rep=False)
-    return fn(rep_query, rep_data)
+    in_q = jax.tree.unflatten(q_def, [P(*([None] * nd)) for nd in q_ndims])
+    in_x = jax.tree.unflatten(
+        x_def, [P(axes, *([None] * (nd - 1))) for nd in x_ndims])
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(in_q, in_x),
+        out_specs=(P(None, None), P(None, None)), check_rep=False))
 
 
 def repr_topk_sharded(encoder, rep_query, rep_data, mesh: Mesh, *,
@@ -84,36 +149,170 @@ def repr_topk_sharded(encoder, rep_query, rep_data, mesh: Mesh, *,
     all-gathered and reduced — collective volume O(Q*k*shards), never O(N).
     Returns (dists (Q, k), global indices (Q, k)).
     """
-    axes = _data_axes(mesh)
     pw = pairwise or encoder.pairwise_distance
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
-
-    def local(rq, rx):
-        d = pw(rq, rx)                                 # (Q, n_local)
-        n_local = d.shape[1]
-        kk = min(k, n_local)
-        neg, idx = jax.lax.top_k(-d, kk)               # smallest distances
-        # global index offset of this shard
-        shard_id = jax.lax.axis_index(axes[0])
-        if len(axes) == 2:
-            shard_id = shard_id * jax.lax.axis_size(axes[1]) + \
-                jax.lax.axis_index(axes[1])
-        gidx = idx + shard_id * n_local
-        cand_d = jax.lax.all_gather(-neg, axes, axis=1, tiled=True)
-        cand_i = jax.lax.all_gather(gidx, axes, axis=1, tiled=True)
-        best_neg, best_pos = jax.lax.top_k(-cand_d, min(k, cand_d.shape[1]))
-        best_i = jnp.take_along_axis(cand_i, best_pos, axis=1)
-        return -best_neg, best_i
-
-    in_q = jax.tree.map(lambda s: P(*([None] * s.ndim)), rep_query)
-    in_x = jax.tree.map(
-        lambda s: P(axes, *([None] * (s.ndim - 1))), rep_data)
-    fn = shard_map(local, mesh=mesh, in_specs=(in_q, in_x),
-                   out_specs=(P(None, None), P(None, None)),
-                   check_rep=False)
+    fn = _repr_topk_fn(mesh, pw, int(k),
+                       *_rep_specs(rep_query, rep_data))
     return fn(rep_query, rep_data)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident candidate verification
+# ---------------------------------------------------------------------------
+
+def _shard_index(axes):
+    """Linear shard id of the executing program over the data axes."""
+    sid = jax.lax.axis_index(axes[0])
+    if len(axes) == 2:
+        sid = sid * jax.lax.axis_size(axes[1]) + jax.lax.axis_index(axes[1])
+    return sid
+
+
+def _mirror_rows(mesh: Mesh, axes, current, data, old_head: int,
+                 head: int):
+    """Incrementally maintain a device mirror of (N, T) host rows,
+    sharded over the data axes by contiguous row ranges: upload only the
+    [old_head, head) delta and concatenate with the resident mirror on
+    device (host->device traffic O(delta); the re-layout is
+    device-to-device), or upload from scratch on first sync."""
+    sh = NamedSharding(mesh, P(axes, None))
+    if current is not None and 0 < old_head < head:
+        return jax.device_put(
+            jnp.concatenate([current, jnp.asarray(data[old_head:head])],
+                            axis=0), sh)
+    if head:
+        # device_put on the numpy slice splits host-side per shard — no
+        # transient full-corpus copy on one device (matching the
+        # rep-leaf mirror path)
+        return jax.device_put(data[:head], sh)
+    return None
+
+
+def _kernel_cand_d2(rows, qs):
+    """rows (Qa, B, T) x qs (Qa, T) -> (Qa, B) squared distances through
+    the multi-query Pallas euclid kernel — one launch per query row, all
+    with the same (B, T) shape so repeated rounds hit the jit cache.
+    Per (query, candidate) the reduction order over T is the kernel's,
+    independent of batch shape — the shared distance definition that
+    makes the device and host-kernel paths bit-identical."""
+    from repro.kernels import ops
+    return jnp.stack([ops.euclid_batch(rows[r], qs[r])
+                      for r in range(rows.shape[0])])
+
+
+@lru_cache(maxsize=64)
+def _rows_verify_fn(mesh: Mesh):
+    """Jitted sharded row-verification callable, cached per mesh (the
+    jit cache then folds repeated (Qa, B, T) round shapes)."""
+    axes = _data_axes(mesh)
+
+    def local(x, q, c):
+        n_local = x.shape[0]
+        loc = c - _shard_index(axes) * n_local
+        valid = (c >= 0) & (loc >= 0) & (loc < n_local)
+        rows = x[jnp.clip(loc, 0, n_local - 1)]        # (Qa, B, T)
+        d2 = _kernel_cand_d2(rows, q)
+        # each candidate is owned by exactly one shard: min-merge
+        return jax.lax.pmin(jnp.where(valid, d2, jnp.inf), axes)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(None, None)),
+        out_specs=P(None, None), check_rep=False))
+
+
+def cand_dists_rows_sharded(raw_head, q_dev, cand, mesh: Mesh) -> np.ndarray:
+    """True d_ED of candidate ROW ids against the sharded raw head.
+
+    raw_head: (head, T) device array sharded over the data axes
+    (contiguous row ranges — the snapshot raw-manifest shard unit).
+    q_dev: (Qa, T) replicated queries.  cand: (Qa, B) int ids, -1
+    padding.  Ids outside [0, head) return +inf (the caller min-merges
+    the host-side tail).  Raw rows never leave the devices."""
+    d2 = _rows_verify_fn(mesh)(raw_head, q_dev, jnp.asarray(cand))
+    return np.asarray(jnp.sqrt(jnp.maximum(d2, 0.0)))
+
+
+@lru_cache(maxsize=64)
+def _windows_gather_fn(mesh: Mesh, nw: int, stride: int, m: int):
+    """Jitted sharded window-extraction callable, cached per
+    (mesh, window geometry): each shard slices its own rows' windows
+    (pure gather — bit-exact), off-shard entries contribute zeros and a
+    psum re-assembles the full batch (x + 0 is exact in f32)."""
+    axes = _data_axes(mesh)
+
+    def local(x, c):
+        n_local = x.shape[0]
+        row = jnp.where(c >= 0, c // nw, -1)
+        start = (c % nw) * stride          # in-bounds even for c == -1
+        loc = row - _shard_index(axes) * n_local
+        valid = (c >= 0) & (loc >= 0) & (loc < n_local)
+        slab = x[jnp.clip(loc, 0, n_local - 1)]        # (Qa, B, T)
+        gat = start[..., None] + jnp.arange(m)[None, None, :]
+        w = jnp.take_along_axis(slab, gat, axis=2)     # (Qa, B, m)
+        return jax.lax.psum(jnp.where(valid[..., None], w, 0.0), axes)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(P(axes, None), P(None, None)),
+        out_specs=P(None, None, None), check_rep=False))
+
+
+def cand_dists_windows_sharded(raw_rows_head, q_dev, cand, mesh: Mesh, *,
+                               nw: int, stride: int, m: int,
+                               head_rows: int) -> np.ndarray:
+    """True z-normalized d_ED of candidate WINDOW ids against windows of
+    the sharded SOURCE rows (``repro.subseq.WindowView`` geometry:
+    ``wid = row * nw + j`` covers ``source[row, j*stride : j*stride+m]``).
+
+    Each shard extracts its own rows' windows on device (sharded
+    gather); the assembled device batch is then z-normalized and
+    distanced through the SAME eagerly-dispatched ``znormalize`` +
+    jitted euclid-kernel pipeline the host ``WindowView.fetch`` +
+    kernel-verifier path runs — z-normalization must not be fused into
+    a larger jit graph, or XLA re-associates its reductions and the
+    device path drifts from the host path by an ulp.  Window ids whose
+    source row falls outside the sharded head return +inf (the caller
+    min-merges the host-side tail); window values never reach the
+    host."""
+    from repro.core.normalize import znormalize
+    fn = _windows_gather_fn(mesh, int(nw), int(stride), int(m))
+    w = fn(raw_rows_head, jnp.asarray(cand))           # (Qa, B, m) device
+    wz = znormalize(w)                   # eager: host-identical dispatch
+    d2 = np.asarray(_kernel_cand_d2(wz, q_dev))  # one host transfer
+    out = np.sqrt(np.maximum(d2, 0.0))
+    row = np.where(cand >= 0, cand // nw, -1)
+    valid = (cand >= 0) & (row < head_rows)
+    return np.where(valid, out, np.float32(np.inf)).astype(np.float32)
+
+
+def _host_cand_dists_rows(tail_rows, lo, qs, cand) -> np.ndarray:
+    """Host twin of :func:`cand_dists_rows_sharded` for the
+    non-shard-divisible tail remainder — same kernel distance math; the
+    tail rows are already host-resident, so nothing moves off device."""
+    loc = cand - lo
+    valid = (cand >= 0) & (loc >= 0) & (loc < tail_rows.shape[0])
+    rows = tail_rows[np.clip(loc, 0, tail_rows.shape[0] - 1)]
+    d2 = np.asarray(_kernel_cand_d2(jnp.asarray(rows, jnp.float32),
+                                    jnp.asarray(qs, jnp.float32)))
+    return np.where(valid, np.sqrt(np.maximum(d2, 0.0)),
+                    np.float32(np.inf)).astype(np.float32)
+
+
+def _host_cand_dists_windows(tail_rows, row_lo, qs, cand, *, nw: int,
+                             stride: int, m: int) -> np.ndarray:
+    """Host twin of :func:`cand_dists_windows_sharded` for windows whose
+    source row lives in the tail remainder."""
+    from repro.subseq.windows import znorm_windows
+    row = np.where(cand >= 0, cand // nw, -1)
+    start = (cand % nw) * stride
+    loc = row - row_lo
+    valid = (cand >= 0) & (loc >= 0) & (loc < tail_rows.shape[0])
+    slab = tail_rows[np.clip(loc, 0, tail_rows.shape[0] - 1)]
+    gat = start[..., None] + np.arange(m)[None, None, :]
+    wz = znorm_windows(np.take_along_axis(slab, gat, axis=2))
+    d2 = np.asarray(_kernel_cand_d2(jnp.asarray(wz),
+                                    jnp.asarray(qs, jnp.float32)))
+    return np.where(valid, np.sqrt(np.maximum(d2, 0.0)),
+                    np.float32(np.inf)).astype(np.float32)
 
 
 def make_matching_service(encoder, dataset, mesh: Mesh, *, k: int = 64,
@@ -149,10 +348,17 @@ class ShardedRepSweep:
       shard-divisible prefix lives sharded on the mesh; the small
       remainder (< n_shards rows) is swept host-side and merged — so any
       corpus size serves exact answers between ingests.
+    * With ``mirror_raw=True`` the RAW rows are mirrored on device next
+      to the representation, sharded by the same contiguous row ranges
+      (the snapshot raw-manifest shard unit), and kept in sync by the
+      same incremental device-append — ``make_dist_fn`` then verifies
+      candidate rows entirely on device (``verify="device"``); old rows
+      are never re-encoded and never re-uploaded.
     """
 
     def __init__(self, encoder, mesh: Mesh, store, *,
-                 pairwise: Callable | None = None):
+                 pairwise: Callable | None = None,
+                 mirror_raw: bool = False):
         self.encoder = encoder
         self.mesh = mesh
         self.store = store
@@ -161,10 +367,15 @@ class ShardedRepSweep:
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
+        self.mirror_raw = bool(mirror_raw)
+        if self.mirror_raw and not getattr(store, "store_raw", True):
+            raise ValueError("device-resident verification needs raw rows "
+                             "in the store (store_raw=True)")
         self._synced_version = -1
         self._head = 0
         self._head_leaves = None         # device leaves, sharded
         self._tail_rep = None            # host, < n_shards rows
+        self._raw_head = None            # device raw mirror, sharded
 
     # -- ingest -----------------------------------------------------------
     def _encode_chunk(self, rows: np.ndarray):
@@ -225,6 +436,10 @@ class ShardedRepSweep:
                     for l, sh in zip(leaves, shardings))
             else:
                 self._head_leaves = None
+            if self.mirror_raw:          # raw mirror: same shard unit,
+                self._raw_head = _mirror_rows(   # same incremental append
+                    self.mesh, self.axes, self._raw_head,
+                    self.store.data, self._head, head)
         self._tail_rep = (self._restructure(
             tuple(jnp.asarray(l[head:]) for l in leaves))
             if head < n else None)
@@ -275,6 +490,52 @@ class ShardedRepSweep:
         _, out_i = merge_topk_numpy(d_all, i_all, min(k, d_all.shape[1]))
         return out_i
 
+    # -- device-resident verification -------------------------------------
+    def shard_ranges(self):
+        """Contiguous row ranges of the device head — identical to the
+        snapshot raw manifest's per-host ranges for the same shard count
+        (``store.snapshot._shard_ranges``)."""
+        from repro.store.snapshot import _shard_ranges
+        return _shard_ranges(self._head, self.n_shards)
+
+    def make_dist_fn(self, queries_raw):
+        """Device-resident verification closure for one query batch:
+        ``dist(q_idx, cand) -> (Qa, B)`` true d_ED of candidate row ids,
+        computed per shard through the multi-query euclid kernel over
+        the raw device mirror — raw rows never move device->host.  The
+        contract matches ``core.engine.topk_verify``'s ``dist_fn``."""
+        if not self.mirror_raw:
+            raise ValueError("ShardedRepSweep was built without "
+                             "mirror_raw=True; no raw device mirror to "
+                             "verify against")
+        self._sync()
+        qs = np.asarray(queries_raw, np.float32)
+        if qs.ndim == 1:
+            qs = qs[None]
+        q_n = qs.shape[0]
+        q_dev = jnp.asarray(qs)
+        head = self._head
+
+        def dist(aq, cand):
+            # pad the active-query batch back to the full query set so
+            # the jitted shard_map sees ONE (Q, B) shape per batch size
+            # — rounds with fewer active queries reuse the compile cache
+            aq = np.asarray(aq)
+            cand = np.asarray(cand, np.int64)
+            full = np.full((q_n, cand.shape[1]), -1, np.int64)
+            full[aq] = cand
+            out = np.full(full.shape, np.inf, np.float32)
+            if self._raw_head is not None and \
+                    ((full >= 0) & (full < head)).any():
+                out = np.minimum(out, cand_dists_rows_sharded(
+                    self._raw_head, q_dev, full, self.mesh))
+            if self.store.n > head and (full >= head).any():
+                out = np.minimum(out, _host_cand_dists_rows(
+                    self.store.data[head:], head, qs, full))
+            return out[aq]
+
+        return dist
+
 
 def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
                         batch_size: int = 64, verify: str = "auto",
@@ -292,11 +553,19 @@ def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
     The engine supports ingest-while-serving: ``engine.ingest(rows)``
     encodes only the new chunk (sharded) and re-shards the device mirror
     without re-encoding old rows; the next query serves the new rows.
+    With ``verify="device"`` the raw mirror is kept in sync by the same
+    incremental device-append, so ingest never re-uploads old rows.
 
     ``store``: a ``SymbolicStore`` (adopted as-is; ``dataset`` may be None
     to serve its existing rows), a legacy ``RawStore`` (its cost model AND
     its rows are adopted — verification accounting moves to the returned
     ``engine.store``), or None (a fresh store with the ``media`` preset).
+
+    ``verify``: "device" shards the raw rows across devices alongside the
+    representation and verifies per shard through the euclid kernel —
+    zero raw rows moved to the host; "host" is the bit-identical
+    host-side fallback (store fetch + the same kernel math, modeled-I/O
+    oracle); "auto" / "numpy" / "kernel" as in ``core.engine``.
     """
     from repro.core.engine import MatchEngine
     from repro.store import SymbolicStore
@@ -316,14 +585,110 @@ def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
     else:
         sym = SymbolicStore(encoder, media=media)
 
-    sweep = ShardedRepSweep(encoder, mesh, sym, pairwise=pairwise)
+    device_verify = verify == "device"
+    sweep = ShardedRepSweep(encoder, mesh, sym, pairwise=pairwise,
+                            mirror_raw=device_verify)
     if dataset is not None and sym.n == 0:
         sweep.ingest(np.asarray(dataset, np.float32))
 
     engine = MatchEngine(encoder, sym, batch_size=batch_size,
                          verify=verify, pairwise=pairwise,
                          repr_fn=sweep.repr_distances,
-                         cand_fn=sweep.candidates)
+                         cand_fn=sweep.candidates,
+                         dist_factory=(sweep.make_dist_fn
+                                       if device_verify else None))
     engine.sweep = sweep
     engine.ingest = sweep.ingest
     return engine
+
+
+class ShardedWindowSweep:
+    """Sharded window sweep + device-resident window verification for
+    ``repro.subseq.SubseqEngine``.
+
+    * The (Q, n_windows) representation sweep shards the view's live
+      window representation exactly like whole-series matching — an
+      inner :class:`ShardedRepSweep` over the view's representation
+      store, so stride > 1 and ragged T (already folded into the window
+      geometry by ``WindowView``) and any non-shard-divisible window
+      count are handled by the same head/tail split, and window appends
+      refresh the mirror incrementally.
+    * ``make_dist_fn`` verifies candidate WINDOWS device-side: the
+      SOURCE long rows are mirrored on device, sharded by the same
+      contiguous row ranges the snapshot raw manifest uses; each shard
+      slices and z-normalizes its own rows' windows (the same
+      ``core.normalize.znormalize`` the host fetch path applies) and
+      distances them through the multi-query euclid kernel
+      (:func:`cand_dists_windows_sharded`).  Window values never
+      materialize on the host; rows of the tail remainder are distanced
+      host-side through the same kernel.
+    """
+
+    def __init__(self, view, mesh: Mesh, *, mirror_raw: bool = True):
+        self.view = view
+        self.mesh = mesh
+        self.rep_sweep = ShardedRepSweep(view.encoder, mesh, view.rep_store)
+        self.axes = self.rep_sweep.axes
+        self.n_shards = self.rep_sweep.n_shards
+        self.mirror_raw = bool(mirror_raw)
+        self._raw_head = None            # device mirror of SOURCE rows
+        self._head_rows = 0
+        self._rows_synced = -1
+
+    def repr_distances(self, queries_z) -> np.ndarray:
+        """(Q, n_windows) lower-bound matrix for already z-normalized
+        queries — sharded sweep over the window-representation head,
+        host sweep over the remainder."""
+        return self.rep_sweep.repr_distances(queries_z)
+
+    def _sync_raw(self):
+        """Incremental device mirror of the source rows (append-only
+        corpus: a row-count check is a complete freshness test)."""
+        n_rows = self.view.n_rows
+        if n_rows == self._rows_synced:
+            return
+        head = (n_rows // self.n_shards) * self.n_shards
+        if head != self._head_rows:
+            self._raw_head = _mirror_rows(
+                self.mesh, self.axes, self._raw_head,
+                self.view.source.data, self._head_rows, head)
+            self._head_rows = head
+        self._rows_synced = n_rows
+
+    def make_dist_fn(self, queries_z):
+        """Device-resident window verification closure (the
+        ``core.engine.topk_verify`` ``dist_fn`` contract over window
+        ids) for one z-normalized query batch."""
+        if not self.mirror_raw:
+            raise ValueError("ShardedWindowSweep was built without "
+                             "mirror_raw=True")
+        self._sync_raw()
+        qs = np.asarray(queries_z, np.float32)
+        if qs.ndim == 1:
+            qs = qs[None]
+        q_n = qs.shape[0]
+        q_dev = jnp.asarray(qs)
+        view = self.view
+        nw, stride, m = view.windows_per_row, view.stride, view.m
+        head_rows = self._head_rows
+        head_wid = head_rows * nw
+
+        def dist(aq, cand):
+            # full-Q padding: one (Q, B) shard_map shape per batch size
+            aq = np.asarray(aq)
+            cand = np.asarray(cand, np.int64)
+            full = np.full((q_n, cand.shape[1]), -1, np.int64)
+            full[aq] = cand
+            out = np.full(full.shape, np.inf, np.float32)
+            if self._raw_head is not None and \
+                    ((full >= 0) & (full < head_wid)).any():
+                out = np.minimum(out, cand_dists_windows_sharded(
+                    self._raw_head, q_dev, full, self.mesh,
+                    nw=nw, stride=stride, m=m, head_rows=head_rows))
+            if view.n_rows > head_rows and (full >= head_wid).any():
+                out = np.minimum(out, _host_cand_dists_windows(
+                    view.source.data[head_rows:], head_rows, qs, full,
+                    nw=nw, stride=stride, m=m))
+            return out[aq]
+
+        return dist

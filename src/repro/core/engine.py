@@ -123,7 +123,11 @@ def kernel_verifier(rows: np.ndarray, qs: np.ndarray,
 def make_verifier(mode: str) -> Callable:
     if mode == "numpy":
         return numpy_verifier
-    if mode == "kernel":
+    if mode in ("kernel", "host"):
+        # "host" is the host-side fallback of the device-resident
+        # verification path: raw rows are fetched from the store (modeled
+        # I/O oracle) but distanced through the SAME Pallas kernel math
+        # the sharded device path uses, so the two are bit-identical
         return kernel_verifier
     if mode == "auto":
         import jax
@@ -176,7 +180,9 @@ def merge_topk_device(all_d: np.ndarray, all_i: np.ndarray, k: int):
 def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
                 batch_size: int = 64, verifier: Callable = numpy_verifier,
                 merge: Callable = merge_topk_numpy,
-                init_d=None, init_i=None, col_ids=None) -> TopKResult:
+                init_d=None, init_i=None, col_ids=None,
+                dist_fn: Optional[Callable] = None,
+                on_verified: Optional[Callable] = None) -> TopKResult:
     """Exact top-k under d_ED for a query batch given lower-bounding
     representation distances (Q, N).  See the module docstring for the
     correctness argument.
@@ -192,7 +198,21 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     column, STRICTLY INCREASING — lets a sparse caller pass only the
     surviving candidates instead of a full-corpus-width matrix (column j
     means row ``col_ids[j]``; ``pruned_fraction`` is then relative to the
-    candidate set, not the corpus)."""
+    candidate set, not the corpus).
+
+    ``dist_fn``: optional device-resident verification hook
+    (``core.distributed``): ``dist_fn(q_idx, cand) -> (Qa, B) true
+    distances`` for the active-query id batch, computed WITHOUT moving
+    raw rows to the host — the store is never fetched (its accounting
+    stays untouched: zero rows moved to host is the device path's
+    truthful I/O).  ``-1`` candidate entries may return anything; they
+    are masked to +inf here.
+
+    ``on_verified``: optional ``on_verified(qi, ids, dists)`` callback
+    fired once per verification round per active query with exactly the
+    (dataset/window ids, true distances) that round verified — the hook
+    exclusion widening uses to accumulate the every-id-verified-once
+    frontier (``repro.subseq.SubseqEngine``)."""
     qs = np.asarray(queries_raw)        # native dtype: the host verifier
     if qs.ndim == 1:                    # stays bit-identical to brute force
         qs = qs[None]
@@ -252,11 +272,18 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
         if col_ids is not None:          # column -> dataset row translation
             cand = np.where(cand >= 0, col_ids[cand], -1)
         mask = cand >= 0
-        ids = np.unique(cand[mask])              # sorted
-        rows = store.fetch(ids)                  # one physical fetch/round
-        gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
-        d = verifier(rows, qs[aq], gather)
+        if dist_fn is not None:          # device-resident: no host fetch
+            d = np.asarray(dist_fn(aq, cand))
+        else:
+            ids = np.unique(cand[mask])          # sorted
+            rows = store.fetch(ids)              # one physical fetch/round
+            gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
+            d = verifier(rows, qs[aq], gather)
         d = np.where(mask, d, np.inf)
+        if on_verified is not None:
+            for r, qi in enumerate(aq):
+                on_verified(int(qi), cand[r][mask[r]],
+                            np.asarray(d[r][mask[r]], np.float64))
 
         new_d, new_i = merge(np.concatenate([front_d[aq], d], axis=1),
                              np.concatenate([front_i[aq], cand], axis=1), k)
@@ -278,10 +305,15 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
 def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
                       k: Optional[int] = None,
                       verifier: Callable = numpy_verifier,
-                      merge: Callable = merge_topk_numpy) -> TopKResult:
+                      merge: Callable = merge_topk_numpy,
+                      dist_fn: Optional[Callable] = None,
+                      on_verified: Optional[Callable] = None) -> TopKResult:
     """Approximate top-k: verify an externally supplied candidate set
     (e.g. the sharded representation top-k) and rank by true d_ED.
-    cand_idx: (Q, C) dataset rows; -1 entries are padding."""
+    cand_idx: (Q, C) dataset rows; -1 entries are padding.  ``dist_fn``
+    / ``on_verified``: same contracts as :func:`topk_verify` — with a
+    ``dist_fn`` the store is never fetched (device-resident
+    verification)."""
     qs = np.asarray(queries_raw)
     if qs.ndim == 1:
         qs = qs[None]
@@ -305,10 +337,17 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
                           store_accesses=0, store_fetches=0,
                           io_seconds=0.0)
     start_acc, start_fetch = store.accesses, store.fetches
-    rows = store.fetch(ids)                      # one batched fetch
-    gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
-    d = verifier(rows, qs, gather)
+    if dist_fn is not None:                      # device-resident path
+        d = np.asarray(dist_fn(np.arange(q_n), cand))
+    else:
+        rows = store.fetch(ids)                  # one batched fetch
+        gather = np.searchsorted(ids, np.where(mask, cand, ids[0]))
+        d = verifier(rows, qs, gather)
     d = np.where(mask, d, np.inf)
+    if on_verified is not None:
+        for r in range(q_n):
+            on_verified(r, cand[r][mask[r]],
+                        np.asarray(d[r][mask[r]], np.float64))
     out_d, out_i = merge(d, cand, k)
     total = store.accesses - start_acc
     n_fetch = store.fetches - start_fetch
@@ -361,7 +400,14 @@ class MatchEngine:
     batch_size: verification batch per query per round.
     verify:     "auto" (kernel on TPU, numpy host elsewhere), "kernel"
                 (always route through euclid_pallas; interpret off-TPU),
-                or "numpy" (bit-identical to a host brute-force scan).
+                "numpy" (bit-identical to a host brute-force scan),
+                "host" (alias of "kernel": the host-side fallback of the
+                device-resident path — store fetch + modeled I/O, same
+                kernel distance math as "device"), or "device"
+                (device-resident sharded verification: raw rows never
+                move to the host; requires ``dist_factory``, wired by
+                ``core.distributed.make_engine_service``; bit-identical
+                to "host").
     rep:        precomputed dataset representation (skips encode), e.g.
                 the sharded output of ``distributed.encode_sharded``.
     repr_fn:    override for representation distances
@@ -381,12 +427,25 @@ class MatchEngine:
                  verify: str = "auto", pairwise: Callable | None = None,
                  rep=None, repr_fn: Callable | None = None,
                  cand_fn: Callable | None = None,
-                 device_merge: bool = False):
+                 device_merge: bool = False,
+                 dist_factory: Callable | None = None):
         self.encoder = encoder
         self.store = store
         self.batch_size = batch_size
-        self.verifier = make_verifier(verify)
-        self.merge = merge_topk_device if device_merge else merge_topk_numpy
+        self.device_verify = verify == "device"
+        if self.device_verify and dist_factory is None:
+            raise ValueError(
+                'verify="device" needs a dist_factory (device-resident '
+                "sharded verification; build the engine through "
+                "core.distributed.make_engine_service)")
+        self._dist_factory = dist_factory
+        # the device path's host twin is the kernel verifier: same f32
+        # distance definition, so "device" and "host" are bit-identical
+        self.verifier = (kernel_verifier if self.device_verify
+                         else make_verifier(verify))
+        self.merge = (merge_topk_device
+                      if device_merge or self.device_verify
+                      else merge_topk_numpy)
         self._pw = pairwise or encoder.pairwise_distance
         self._repr_fn = repr_fn
         self._cand_fn = cand_fn
@@ -476,6 +535,7 @@ class MatchEngine:
         qs = np.asarray(queries_raw)
         if qs.ndim == 1:
             qs = qs[None]
+        dfn = self._make_dist_fn(qs)
         if exact:
             from repro.index.candidates import LinearSweep, topk_from_source
             if source is None:
@@ -488,14 +548,27 @@ class MatchEngine:
             return topk_from_source(
                 qs, source, self.store, k=k,
                 batch_size=batch_size or self.batch_size,
-                verifier=self.verifier, merge=self.merge, total=total)
+                verifier=self.verifier, merge=self.merge, total=total,
+                dist_fn=dfn)
         cand = self.candidates(qs, k * max(expand, 1))
         return verify_candidates(qs, cand, self.store, k=k,
-                                 verifier=self.verifier, merge=self.merge)
+                                 verifier=self.verifier, merge=self.merge,
+                                 dist_fn=dfn)
+
+    def _make_dist_fn(self, qs) -> Optional[Callable]:
+        """Device-resident verification closure for this query batch
+        (None outside verify="device")."""
+        if not self.device_verify:
+            return None
+        return self._dist_factory(qs)
 
     def verify_candidates(self, queries_raw, cand_idx,
                           k: Optional[int] = None) -> TopKResult:
         """Rank an external candidate frontier by true d_ED (one batched
-        raw fetch)."""
-        return verify_candidates(queries_raw, cand_idx, self.store, k=k,
-                                 verifier=self.verifier, merge=self.merge)
+        raw fetch; device-resident under verify="device")."""
+        qs = np.asarray(queries_raw)
+        if qs.ndim == 1:
+            qs = qs[None]
+        return verify_candidates(qs, cand_idx, self.store, k=k,
+                                 verifier=self.verifier, merge=self.merge,
+                                 dist_fn=self._make_dist_fn(qs))

@@ -79,11 +79,49 @@ class TreeCandidates:
     ``query_features`` maps the engine's query batch to (Q, D) adapter
     features — precomputed-feature callers pass a closure ignoring the
     raw queries.
+
+    Frontier reuse (exclusion widening): ``prior_d`` / ``prior_i`` seed
+    an already-verified frontier ((Q, <=k) ascending, -1 / +inf padded)
+    and ``seen`` lists EVERY id verified in earlier rounds (a per-query
+    superset of the prior ids).  The seed walk then only verifies ids
+    never seen before, and the collect phase excludes all seen ids — so
+    across widening rounds no id is ever verified twice.  Exactness is
+    preserved under the caller's contract that ``prior`` holds the best
+    ``min(k, |verified|)`` of the accumulated verified set: a seen id
+    outside that frontier is dominated by >= k verified better ids and
+    can never re-enter the top-k.
     """
 
-    def __init__(self, tree: SplitTree, query_features: Callable):
+    def __init__(self, tree: SplitTree, query_features: Callable, *,
+                 prior_d=None, prior_i=None, seen=None):
         self.tree = tree
         self._query_features = query_features
+        # prior and seen travel together: seen ids without their verified
+        # frontier cannot be excluded exactly (their distances are lost),
+        # and a seeded frontier without the seen set would be re-collected
+        # and double-merged
+        if (seen is None) != (prior_i is None) or \
+                (prior_d is None) != (prior_i is None):
+            raise ValueError("prior_d, prior_i and seen must be passed "
+                             "together (or all omitted)")
+        self._prior_d = prior_d
+        self._prior_i = prior_i
+        self._seen = seen
+
+    def _fresh_seeds(self, qf_r, k: int, n_prior: int, seen_r):
+        """Best-first seed ids never verified before, walking deeper
+        until prior + fresh can pin the k-th-NN upper bound U (or the
+        tree is exhausted)."""
+        need = k - n_prior
+        if need <= 0:
+            return np.empty(0, np.int64)
+        m = k
+        while True:
+            s = np.asarray(self.tree.seed_candidates(qf_r, m), np.int64)
+            fresh = s[~np.isin(s, seen_r)]
+            if len(fresh) >= need or len(s) < m:   # < m: walk exhausted
+                return fresh
+            m *= 2
 
     def candidate_bounds(self, queries_raw, k: int,
                          verify: Callable) -> CandidateSet:
@@ -96,35 +134,64 @@ class TreeCandidates:
             return CandidateSet(bounds=np.empty((q_n, 0)), col_ids=None)
         k = min(k, tree.n)
 
-        seeds = [tree.seed_candidates(qf[r], k) for r in range(q_n)]
+        seen = self._seen if self._seen is not None \
+            else [np.empty(0, np.int64)] * q_n
+        seen = [np.asarray(s, np.int64) for s in seen]
+        if self._prior_i is not None:
+            prior_d = np.asarray(self._prior_d, np.float64)
+            prior_i = np.asarray(self._prior_i, np.int64)
+            n_prior = (prior_i >= 0).sum(axis=1)
+        else:
+            prior_d = prior_i = None
+            n_prior = np.zeros(q_n, np.int64)
+
+        seeds = [self._fresh_seeds(qf[r], k, int(n_prior[r]), seen[r])
+                 for r in range(q_n)]
         width = max(len(s) for s in seeds)
-        cand = np.full((q_n, width), -1, np.int64)
-        for r, s in enumerate(seeds):
-            cand[r, :len(s)] = s
-        seed_res = verify(cand)
+        seed_res = None
+        if width:
+            cand = np.full((q_n, width), -1, np.int64)
+            for r, s in enumerate(seeds):
+                cand[r, :len(s)] = s
+            seed_res = verify(cand)
+
+        # merged frontier: prior rounds + freshly verified seeds — this
+        # seeds the scan (init_d/init_i) and pins U per query
+        if seed_res is None:
+            merged_d = prior_d[:, :k]
+            merged_i = prior_i[:, :k]
+        elif prior_d is None:
+            merged_d, merged_i = seed_res.distances, seed_res.indices
+        else:
+            from repro.core.engine import merge_topk_numpy
+            merged_d, merged_i = merge_topk_numpy(
+                np.concatenate([prior_d, seed_res.distances], axis=1),
+                np.concatenate([prior_i, seed_res.indices], axis=1), k)
 
         all_ids, all_lbs = [], []
         for r in range(q_n):
             # U upper-bounds the true k-th NN only once k members are
             # verified; a short frontier (corpus < k) collects everything
-            u = (float(seed_res.distances[r, k - 1])
-                 if seed_res.distances.shape[1] >= k else np.inf)
+            u = (float(merged_d[r, k - 1])
+                 if merged_d.shape[1] >= k else np.inf)
             ids_r, lb_r = tree.collect_bounds(qf[r], u)
-            fresh = ~np.isin(ids_r, np.asarray(seeds[r], np.int64))
-            all_ids.append(ids_r[fresh])   # seeds already in the frontier
-            all_lbs.append(lb_r[fresh])
+            drop = np.concatenate([seen[r], seeds[r]])
+            keep = ~np.isin(ids_r, drop)   # verified ids never re-enter
+            all_ids.append(ids_r[keep])
+            all_lbs.append(lb_r[keep])
         union = np.unique(np.concatenate(all_ids))     # sorted row ids
         bounds = np.full((q_n, union.size), np.inf, np.float64)
         for r in range(q_n):
             bounds[r, np.searchsorted(union, all_ids[r])] = all_lbs[r]
         return CandidateSet(bounds=bounds, col_ids=union,
-                            init_d=seed_res.distances,
-                            init_i=seed_res.indices, seed_res=seed_res)
+                            init_d=merged_d,
+                            init_i=merged_i, seed_res=seed_res)
 
 
 def topk_from_source(queries_raw, source: CandidateSource, store, *,
                      k: int = 1, batch_size: int = 64, verifier=None,
-                     merge=None, total: Optional[int] = None):
+                     merge=None, total: Optional[int] = None,
+                     dist_fn=None, on_verified=None):
     """Exact top-k through any candidate source — one verification path
     (``core.engine.topk_verify``) for linear and indexed search.
 
@@ -132,6 +199,10 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
     defaults to the candidate-column count (correct for dense sources).
     Returns ``core.engine.TopKResult`` with combined accounting across
     the source's seed phase and the pruned scan.
+
+    ``dist_fn`` / ``on_verified`` follow the ``core.engine.topk_verify``
+    contracts and apply to BOTH phases — with a ``dist_fn`` the seed
+    verification is device-resident too.
     """
     from repro.core.engine import (
         TopKResult, merge_topk_numpy, numpy_verifier, topk_verify,
@@ -145,12 +216,14 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
 
     def verify(cand_idx):
         return verify_candidates(qs, cand_idx, store, k=k,
-                                 verifier=verifier, merge=merge)
+                                 verifier=verifier, merge=merge,
+                                 dist_fn=dist_fn, on_verified=on_verified)
 
     cs = source.candidate_bounds(qs, k, verify)
     res = topk_verify(qs, cs.bounds, store, k=k, batch_size=batch_size,
                       verifier=verifier, merge=merge, col_ids=cs.col_ids,
-                      init_d=cs.init_d, init_i=cs.init_i)
+                      init_d=cs.init_d, init_i=cs.init_i,
+                      dist_fn=dist_fn, on_verified=on_verified)
     n = cs.bounds.shape[1] if total is None else int(total)
     if cs.seed_res is None:
         if total is None or n == cs.bounds.shape[1] or n == 0:

@@ -97,18 +97,28 @@ class SeriesIndex:
             qs = qs[None]
         return self.adapter.features(qs)
 
-    def source(self) -> TreeCandidates:
-        """This index as a ``CandidateSource`` for the match engine."""
-        return TreeCandidates(self.tree, self.query_features)
+    def source(self, *, prior_d=None, prior_i=None,
+               seen=None) -> TreeCandidates:
+        """This index as a ``CandidateSource`` for the match engine.
+        ``prior_d`` / ``prior_i`` / ``seen`` enable frontier reuse across
+        exclusion-widening rounds (see ``TreeCandidates``): already
+        verified ids are seeded, never verified twice."""
+        return TreeCandidates(self.tree, self.query_features,
+                              prior_d=prior_d, prior_i=prior_i, seen=seen)
 
     def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
-             verifier=None, merge=None):
+             verifier=None, merge=None, dist_fn=None, on_verified=None,
+             prior_d=None, prior_i=None, seen=None):
         """Exact top-k over ``store`` through the indexed traversal —
         bit-identical to the linear-sweep engine (same verification
-        path, same tie-break)."""
-        return topk_from_source(queries_raw, self.source(), store, k=k,
+        path, same tie-break).  ``dist_fn`` routes verification through
+        a device-resident distance hook; ``prior_d``/``prior_i``/``seen``
+        reuse an earlier round's verified frontier."""
+        src = self.source(prior_d=prior_d, prior_i=prior_i, seen=seen)
+        return topk_from_source(queries_raw, src, store, k=k,
                                 batch_size=batch_size, verifier=verifier,
-                                merge=merge, total=self.n)
+                                merge=merge, total=self.n,
+                                dist_fn=dist_fn, on_verified=on_verified)
 
     # -- snapshot serialization ------------------------------------------
     def to_snapshot(self):

@@ -28,7 +28,12 @@ Device count is taken from the environment (set XLA_FLAGS
 the same code drives the production ("pod","data") mesh axes.  The
 sharded sweep produces lower bounds / candidate frontiers; raw
 verification goes through ``core.engine.MatchEngine`` (Pallas euclid
-kernel on TPU, one batched store fetch per round).  The engine is backed
+kernel on TPU, one batched store fetch per round) — or, with
+``--verify device``, stays device-resident end to end: the raw rows are
+sharded across the mesh next to the representation and candidates are
+verified per shard through the euclid kernel, moving zero raw rows to
+the host (``--verify host`` is the bit-identical host fallback; both
+apply to ``--subseq`` too).  The engine is backed
 by a ``repro.store.SymbolicStore``: ``--ingest N`` appends N chunks while
 serving queries between them (only new rows are encoded), and
 ``--snapshot-dir`` persists the store + representation after the run.
@@ -60,6 +65,14 @@ def run_subseq(args):
     tech = make_technique(args.technique, T=m, W=m // args.L, L=args.L,
                           r2_season=args.strength)
 
+    mesh = None
+    if args.verify == "device":
+        import jax
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((len(jax.devices()),), ("data",))
+        print(f"[subseq] device-resident verification over "
+              f"{len(jax.devices())} devices")
+
     rng = np.random.default_rng(7)
     D = season_dataset(args.n, args.T, args.L, args.strength,
                        per_series_strength=True, seed=7)
@@ -73,7 +86,8 @@ def run_subseq(args):
     print(f"[subseq] {args.technique} over {args.n} x {args.T} "
           f"-> {view.n} windows (m={m}, stride={s}); "
           f"encode {time.perf_counter() - t0:.2f}s")
-    engine = SubseqEngine(view, batch_size=args.batch)
+    engine = SubseqEngine(view, batch_size=args.batch, verify=args.verify,
+                          mesh=mesh)
 
     if args.index:
         t0 = time.perf_counter()
@@ -141,6 +155,13 @@ def main():
     ap.add_argument("--batch", type=int, default=256,
                     help="verification batch per query per round")
     ap.add_argument("--store", default="ssd", choices=["hdd", "ssd", "hbm"])
+    ap.add_argument("--verify", default="auto",
+                    choices=["auto", "numpy", "kernel", "host", "device"],
+                    help="raw verification path: 'device' shards the raw "
+                    "rows across devices and verifies through the euclid "
+                    "kernel without moving a row to the host; 'host' is "
+                    "the bit-identical host fallback (store fetch + the "
+                    "same kernel math, modeled-I/O oracle)")
     ap.add_argument("--ingest", type=int, default=0,
                     help="chunks to append while serving (ingest demo)")
     ap.add_argument("--ingest-rows", type=int, default=1024,
@@ -189,10 +210,11 @@ def main():
                           r2_season=args.strength)
 
     print(f"[match] {args.technique} over {n} x {args.T} "
-          f"on {n_dev} devices")
+          f"on {n_dev} devices (verify={args.verify})")
     t0 = time.perf_counter()
     engine = make_engine_service(tech, jnp.asarray(D), mesh,
-                                 batch_size=args.batch, media=args.store)
+                                 batch_size=args.batch, media=args.store,
+                                 verify=args.verify)
     store = engine.store                 # SymbolicStore: raw + live rep
     jax.block_until_ready(engine.rep)
     print(f"[match] encode: {time.perf_counter() - t0:.2f}s")

@@ -29,8 +29,23 @@ already-selected better match (same source row, |start - start'| <
 exclusion samples) are suppressed — the standard guard against trivial
 matches one sample apart.  Selection stays exact: candidates are taken
 greedily in the verified (distance, window id) order, and the frontier is
-widened (and re-verified) until k non-overlapping survivors exist or the
-window set is exhausted.
+widened until k non-overlapping survivors exist or the window set is
+exhausted.  Widening reuses the verified frontier on BOTH candidate
+paths: every (window id, true distance) pair ever verified is
+accumulated (``topk_verify``'s ``on_verified`` hook), the next round is
+seeded with the best of them and excludes the rest — so no window id is
+ever fetched or verified twice, matching the engine's accounting
+contract (the indexed path used to re-run the whole top-k per round).
+
+Sharding: pass ``mesh=`` to route the (Q, n_windows) representation
+sweep through ``core.distributed.ShardedWindowSweep`` (the window
+representation shards like whole-series matching — stride > 1 and
+ragged T included), and ``verify="device"`` to verify candidate windows
+device-side: source rows stay sharded in device memory, each shard
+slices + z-normalizes its own windows and distances them through the
+multi-query euclid kernel — bit-identical to the host ``verify="host"``
+fallback (same kernel math through ``WindowView.fetch``), with zero
+rows moved to the host.
 """
 
 from __future__ import annotations
@@ -41,9 +56,52 @@ from typing import Optional
 import numpy as np
 
 from repro.core.engine import (
-    DeviceRepCache, make_verifier, merge_topk_device, merge_topk_numpy,
-    topk_verify)
+    DeviceRepCache, kernel_verifier, make_verifier, merge_topk_device,
+    merge_topk_numpy, topk_verify)
 from repro.subseq.windows import WindowView, znorm_windows
+
+
+class _VerifiedSet:
+    """Per-query accumulator of every (window id, true distance) pair
+    verified across exclusion-widening rounds — the source of the next
+    round's seeded frontier, and the structure that makes 'no window id
+    is ever verified twice' hold across rounds: the best ``k`` verified
+    pairs are seeded, ALL verified ids are excluded from the next
+    round's candidates, and an excluded-but-unseeded id is dominated by
+    >= k verified better ids so it can never re-enter the top-k."""
+
+    def __init__(self, q_n: int):
+        self._maps = [dict() for _ in range(q_n)]     # id -> distance
+
+    def add(self, qi: int, ids, dists):
+        m = self._maps[qi]
+        for i, d in zip(ids.tolist(), dists.tolist()):
+            m[int(i)] = float(d)
+
+    def ids(self, qi: int) -> np.ndarray:
+        m = self._maps[qi]
+        return np.fromiter(m.keys(), np.int64, len(m))
+
+    def empty(self) -> bool:
+        return all(not m for m in self._maps)
+
+    def frontier(self, k: int):
+        """Best min(k, verified) pairs per query in (distance, id)
+        order — the ``init_d`` / ``init_i`` seed of the next round."""
+        if self.empty():
+            return None, None
+        q_n = len(self._maps)
+        out_d = np.full((q_n, k), np.inf, np.float64)
+        out_i = np.full((q_n, k), -1, np.int64)
+        for qi, m in enumerate(self._maps):
+            if not m:
+                continue
+            ids = np.fromiter(m.keys(), np.int64, len(m))
+            ds = np.fromiter(m.values(), np.float64, len(m))
+            sel = np.lexsort((ids, ds))[:k]
+            out_d[qi, :len(sel)] = ds[sel]
+            out_i[qi, :len(sel)] = ids[sel]
+        return out_d, out_i
 
 
 @dataclass
@@ -70,17 +128,39 @@ class SubseqEngine:
     view:        :class:`repro.subseq.WindowView` (encoder + corpus).
     batch_size:  verification batch per query per round.
     verify:      "auto" | "kernel" | "numpy" (see ``core.engine``);
-                 "numpy" is the bit-identical-to-brute-force host path.
+                 "numpy" is the bit-identical-to-brute-force host path;
+                 "host" fetches through the view but distances with the
+                 same kernel math as "device" (bit-identical pair);
+                 "device" verifies windows device-side (requires
+                 ``mesh``), zero rows moved to the host.
     device_merge: merge frontiers on device (lexsort contract).
+    mesh:        optional jax mesh — shards the (Q, n_windows)
+                 representation sweep (``ShardedWindowSweep``) like
+                 whole-series matching; required for verify="device".
     """
 
     def __init__(self, view: WindowView, *, batch_size: int = 64,
-                 verify: str = "numpy", device_merge: bool = False):
+                 verify: str = "numpy", device_merge: bool = False,
+                 mesh=None):
         self.view = view
         self.encoder = view.encoder
         self.batch_size = batch_size
-        self.verifier = make_verifier(verify)
-        self.merge = merge_topk_device if device_merge else merge_topk_numpy
+        self.mesh = mesh
+        self._device = verify == "device"
+        if self._device and mesh is None:
+            raise ValueError('verify="device" needs a mesh (the sharded '
+                             "window sweep owns the device raw mirror)")
+        self._sweep = None
+        if mesh is not None:
+            from repro.core.distributed import ShardedWindowSweep
+            self._sweep = ShardedWindowSweep(view, mesh,
+                                             mirror_raw=self._device)
+        # the device path's host twin is the kernel verifier (same f32
+        # distance definition -> bit-identical results)
+        self.verifier = (kernel_verifier if self._device
+                         else make_verifier(verify))
+        self.merge = (merge_topk_device
+                      if device_merge or self._device else merge_topk_numpy)
         self._rep_cache = DeviceRepCache(view)
 
     # -- representation sweep --------------------------------------------
@@ -102,7 +182,10 @@ class SubseqEngine:
 
     def repr_distances(self, queries_z) -> np.ndarray:
         """(Q, n_windows) lower-bounding representation distances for
-        already-normalized queries."""
+        already-normalized queries — sharded over the mesh when one was
+        given, single-device otherwise."""
+        if self._sweep is not None:
+            return np.asarray(self._sweep.repr_distances(queries_z))
         import jax.numpy as jnp
         q_rep = self.encoder.encode(jnp.asarray(queries_z, jnp.float32))
         return np.asarray(self.encoder.pairwise_distance(q_rep, self.rep))
@@ -130,29 +213,34 @@ class SubseqEngine:
             raise ValueError("use_index=True but the view has no index; "
                              "call view.build_index() first")
         acc = {"rows": 0, "fetches": 0, "io": 0.0}
+        dfn = self._sweep.make_dist_fn(zq) if self._device else None
         if idx is not None:
-            return self._topk_indexed(zq, idx, k, exclusion, bs, acc)
+            return self._topk_indexed(zq, idx, k, exclusion, bs, acc, dfn)
         rd = self.repr_distances(zq)
         nw = rd.shape[1]
         if exclusion <= 0:
             res = topk_verify(zq, rd, self.view, k=k, batch_size=bs,
-                              verifier=self.verifier, merge=self.merge)
+                              verifier=self.verifier, merge=self.merge,
+                              dist_fn=dfn)
             return self._wrap(res.indices, res.distances, res, nw, acc)
 
         # widen the verified frontier until k non-overlapping survivors
         # exist per query (or every window has been considered): greedy
         # selection over the verified order is exact as long as the
-        # frontier was not cut before the k-th survivor.  Each widening
-        # round seeds the previous round's verified frontier (init_d /
-        # init_i, with those columns masked to +inf in the bound matrix)
-        # so surviving members are never fetched or verified twice.
+        # frontier was not cut before the k-th survivor.  Every (id,
+        # distance) pair ever verified is accumulated; each widening
+        # round seeds the best of them (init_d / init_i) and masks ALL
+        # of them to +inf in the bound matrix, so no window id is ever
+        # fetched or verified twice across rounds.
+        ver = _VerifiedSet(zq.shape[0])
         k_fetch = min(nw, max(4 * k, k + 8))
         rd = np.array(rd)                  # writeable: columns get masked
-        init_d = init_i = None
         while True:
+            init_d, init_i = ver.frontier(k_fetch)
             res = topk_verify(zq, rd, self.view, k=k_fetch, batch_size=bs,
                               verifier=self.verifier, merge=self.merge,
-                              init_d=init_d, init_i=init_i)
+                              init_d=init_d, init_i=init_i,
+                              dist_fn=dfn, on_verified=ver.add)
             acc["rows"] += res.store_accesses
             acc["fetches"] += res.store_fetches
             acc["io"] += res.io_seconds
@@ -160,33 +248,39 @@ class SubseqEngine:
             if full or k_fetch >= nw:
                 return self._wrap(ids, dists, res, nw, acc,
                                   accumulated=True)
-            init_d, init_i = res.distances, res.indices
-            for qi in range(res.indices.shape[0]):
-                seen = res.indices[qi][res.indices[qi] >= 0]
-                rd[qi, seen] = np.inf
+            for qi in range(zq.shape[0]):
+                rd[qi, ver.ids(qi)] = np.inf
             k_fetch = min(nw, 2 * k_fetch)
 
     def _topk_indexed(self, zq, idx, k: int, exclusion: int, bs: int,
-                      acc: dict) -> SubseqResult:
+                      acc: dict, dfn) -> SubseqResult:
         """Indexed candidate generation: route the tree's compact
         candidate set through the same verification scan
         (``repro.index.candidates.topk_from_source``) — bit-identical to
-        the linear sweep.  With suppression, re-query at doubled k until
-        k non-overlapping survivors exist (each round is a self-contained
-        exact top-k_fetch, so greedy selection stays exact)."""
+        the linear sweep.  With suppression, widen at doubled k_fetch,
+        handing ``TreeCandidates`` the accumulated verified frontier and
+        seen-id set — each round only verifies never-seen windows (same
+        contract as the linear path; each round remains an exact
+        top-k_fetch, so greedy selection stays exact)."""
         if idx.n != self.view.n:
             raise ValueError(f"window index covers {idx.n} of "
                              f"{self.view.n} windows; call view.sync()")
         nw_total = self.view.n
+        common = dict(batch_size=bs, verifier=self.verifier,
+                      merge=self.merge, dist_fn=dfn)
         if exclusion <= 0:
-            res = idx.topk(zq, self.view, k=k, batch_size=bs,
-                           verifier=self.verifier, merge=self.merge)
+            res = idx.topk(zq, self.view, k=k, **common)
             return self._wrap(res.indices, res.distances, res, nw_total,
                               acc)
+        ver = _VerifiedSet(zq.shape[0])
         k_fetch = min(nw_total, max(4 * k, k + 8))
         while True:
-            res = idx.topk(zq, self.view, k=k_fetch, batch_size=bs,
-                           verifier=self.verifier, merge=self.merge)
+            init_d, init_i = ver.frontier(k_fetch)
+            seen = ([ver.ids(qi) for qi in range(zq.shape[0])]
+                    if init_d is not None else None)
+            res = idx.topk(zq, self.view, k=k_fetch, on_verified=ver.add,
+                           prior_d=init_d, prior_i=init_i, seen=seen,
+                           **common)
             acc["rows"] += res.store_accesses
             acc["fetches"] += res.store_fetches
             acc["io"] += res.io_seconds

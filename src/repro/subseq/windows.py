@@ -222,6 +222,13 @@ class WindowView:
         """Live window representation (encoder structure, zero-copy)."""
         return self._rep.rep_view()
 
+    @property
+    def rep_store(self):
+        """The representation-only ``SymbolicStore`` backing this view —
+        what ``core.distributed.ShardedWindowSweep`` mirrors on device
+        for the sharded window sweep."""
+        return self._rep
+
     # -- RawStore verification protocol over WINDOW ids -------------------
     def fetch(self, window_ids) -> np.ndarray:
         """Z-normalized windows for ``window_ids`` (any order, duplicates

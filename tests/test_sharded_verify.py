@@ -1,0 +1,174 @@
+"""Device-resident sharded verification (core.distributed): the device
+path (``verify="device"``) must be bit-identical to the host fallback
+(``verify="host"`` — store fetch + the same kernel distance math) for
+every encoder at 1, 2 and 4 mocked hosts, whole-series and windowed,
+while moving ZERO raw rows to the host; ingest must keep the raw and
+representation mirrors in sync without re-encoding; the device shard
+unit must equal the snapshot raw manifest's row ranges.
+
+Runs in a subprocess with 4 placeholder host devices (XLA device count
+is process-global) — meshes over 1, 2 and 4 of them mock 1/2/4 hosts.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_PRELUDE = """
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import make_technique
+    from repro.data.synthetic import season_dataset
+    from repro.launch.mesh import make_mesh_compat
+
+    def encoders(T):
+        w = T // 20
+        return {
+            "sax": make_technique("sax", T=T, W=w, L=10),
+            "ssax": make_technique("ssax", T=T, W=w, L=10, r2_season=0.7),
+            "tsax": make_technique("tsax", T=T, W=w, L=10, r2_trend=0.3),
+            "stsax": make_technique("stsax", T=T, W=w, L=10,
+                                    r2_season=0.5),
+        }
+"""
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    src = textwrap.dedent(_PRELUDE) + textwrap.dedent(code)
+    r = subprocess.run([sys.executable, "-c", src],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_device_verification_bitwise_equals_host_all_encoders_shards():
+    """Whole-series: every encoder x 1/2/4 shards, ragged tail included;
+    the device path returns bit-identical (indices AND distances) top-k
+    while touching zero host rows, and the device shard unit matches the
+    snapshot raw manifest."""
+    out = _run("""
+        from repro.core import MatchEngine
+        from repro.core.distributed import make_engine_service
+        from repro.store import SymbolicStore
+        from repro.store.snapshot import _shard_ranges
+
+        X = season_dataset(n=53, T=120, L=10, strength=0.7, seed=11)
+        Q, D = X[:2], X[2:]                    # 51 rows: ragged at 2 and 4
+        for name, enc in encoders(120).items():
+            # encode once per encoder (the ingest test covers the
+            # sharded-encode path); the host comparison target is the
+            # plain SymbolicStore engine (store fetch + same kernel math)
+            store = SymbolicStore.from_rows(enc, D)
+            host = MatchEngine(enc, store, verify="host", batch_size=64)
+            r_h = host.topk(Q, k=5)
+            assert r_h.store_accesses > 0
+            for shards in (1, 2, 4):
+                mesh = make_mesh_compat((shards,), ("data",))
+                dev = make_engine_service(enc, None, mesh, store=store,
+                                          verify="device", batch_size=64)
+                r_d = dev.topk(Q, k=5)
+                np.testing.assert_array_equal(r_d.indices, r_h.indices)
+                np.testing.assert_array_equal(r_d.distances,
+                                              r_h.distances)
+                assert r_d.store_accesses == 0, (shards, name)
+                assert r_d.store_fetches == 0 and r_d.io_seconds == 0.0
+                head = dev.sweep._head
+                assert head == (51 // shards) * shards
+                assert dev.sweep.shard_ranges() == \\
+                    _shard_ranges(head, shards), (shards, name)
+        print("whole-series device==host OK")
+    """)
+    assert "whole-series device==host OK" in out
+
+
+def test_device_verification_ingest_and_approx():
+    """Ingest keeps BOTH device mirrors (raw + representation) fresh
+    without re-encoding: after a ragged append the device path still
+    matches the host path bitwise, exact and approximate."""
+    out = _run("""
+        from repro.core import MatchEngine
+        from repro.core.distributed import make_engine_service
+
+        X = season_dataset(n=60, T=240, L=10, strength=0.7, seed=13)
+        Q, D, extra = X[:2], X[2:41], X[41:]   # append 19 rows (ragged)
+        mesh = make_mesh_compat((4,), ("data",))
+        enc = encoders(240)["ssax"]
+        dev = make_engine_service(enc, jnp.asarray(D), mesh,
+                                  verify="device", batch_size=64)
+        host = MatchEngine(enc, dev.store, verify="host", batch_size=64)
+        dev.topk(Q, k=3)                       # warm mirrors pre-ingest
+        dev.ingest(extra)
+        r_d = dev.topk(Q, k=5)
+        r_h = host.topk(Q, k=5)
+        np.testing.assert_array_equal(r_d.indices, r_h.indices)
+        np.testing.assert_array_equal(r_d.distances, r_h.distances)
+        assert r_d.store_accesses == 0
+        r_da = dev.topk(Q, k=5, exact=False)
+        r_ha = host.topk(Q, k=5, exact=False)
+        np.testing.assert_array_equal(r_da.indices, r_ha.indices)
+        np.testing.assert_array_equal(r_da.distances, r_ha.distances)
+        assert r_da.store_accesses == 0
+        # indexed exact path, device-resident
+        dev.store.build_index(leaf_fill=16)
+        r_di = dev.topk(Q, k=5, source="index")
+        np.testing.assert_array_equal(r_di.indices, r_d.indices)
+        np.testing.assert_array_equal(r_di.distances, r_d.distances)
+        assert r_di.store_accesses == 0
+        print("ingest + approx + indexed OK")
+    """)
+    assert "ingest + approx + indexed OK" in out
+
+
+def test_device_window_verification_bitwise_equals_host():
+    """Windowed (--subseq): every encoder x 1/2/4 shards over a ragged
+    (stride-indivisible) corpus — sharded window sweep + device window
+    verification vs the host fetch path, bit-identical, zero rows moved;
+    suppression and the window index ride the same contract."""
+    out = _run("""
+        from repro.subseq import SubseqEngine, WindowView
+
+        X = season_dataset(n=7, T=610, L=10, strength=0.7, seed=7)
+        rng = np.random.default_rng(0)
+        Q = np.stack([X[0, 37:157],
+                      X[3, 250:370]
+                      + 0.1 * rng.normal(size=120).astype(np.float32)])
+        for name, enc in encoders(120).items():
+            view = WindowView(enc, X, stride=7)   # encoded once per enc
+            e_h = SubseqEngine(view, verify="host", batch_size=128)
+            view.reset()
+            r_h = e_h.topk(Q, k=4)
+            assert r_h.store_accesses > 0
+            for shards in (1, 2, 4):
+                mesh = make_mesh_compat((shards,), ("data",))
+                e_d = SubseqEngine(view, verify="device", mesh=mesh,
+                                   batch_size=128)
+                r_d = e_d.topk(Q, k=4)
+                np.testing.assert_array_equal(r_d.window_ids,
+                                              r_h.window_ids)
+                np.testing.assert_array_equal(r_d.distances,
+                                              r_h.distances)
+                assert r_d.store_accesses == 0, (shards, name)
+        # suppression + index at 2 shards (ssax): same contract
+        mesh = make_mesh_compat((2,), ("data",))
+        enc = encoders(120)["ssax"]
+        view = WindowView(enc, X, stride=7)
+        view.build_index(leaf_fill=16)
+        e_h = SubseqEngine(view, verify="host", batch_size=128)
+        e_d = SubseqEngine(view, verify="device", mesh=mesh,
+                           batch_size=128)
+        r_h = e_h.topk(Q, k=3, exclusion=60)
+        r_d = e_d.topk(Q, k=3, exclusion=60)
+        np.testing.assert_array_equal(r_d.window_ids, r_h.window_ids)
+        np.testing.assert_array_equal(r_d.distances, r_h.distances)
+        assert r_d.store_accesses == 0
+        print("windowed device==host OK")
+    """)
+    assert "windowed device==host OK" in out

@@ -233,6 +233,39 @@ def test_subseq_nonoverlap_suppression(corpus):
     np.testing.assert_array_equal(sup.window_ids[0], want)
 
 
+@pytest.mark.parametrize("use_index", [False, True])
+def test_exclusion_widening_never_verifies_window_twice(corpus, use_index):
+    """Regression (ROADMAP "indexed suppression frontier reuse"): with
+    exclusion > 0 the widening rounds must reuse the verified frontier —
+    instrumenting WindowView.fetch shows every window id fetched AT MOST
+    ONCE over the whole search (single query, so fetch-level counts are
+    per-query counts), on the indexed AND the linear path, with results
+    still bit-identical to the un-widened reference."""
+    from collections import Counter
+    X, Q = corpus
+    enc = _encoders()["sax"]
+    view = WindowView(enc, X, stride=1)
+    if use_index:
+        view.build_index(leaf_fill=32)
+    eng = SubseqEngine(view, verify="numpy", batch_size=64)
+    counts = Counter()
+    orig = view.fetch
+    view.fetch = lambda wids: (counts.update(
+        np.asarray(wids, np.int64).tolist()) or orig(wids))
+    # k + tight exclusion forces several widening rounds
+    res = eng.topk(Q[:1], k=6, exclusion=M // 2, use_index=use_index)
+    view.fetch = orig
+    assert counts, "nothing was verified?"
+    dup = {w: c for w, c in counts.items() if c > 1}
+    assert not dup, f"windows fetched more than once: {dup}"
+    # exactness: identical to a fresh linear-path run
+    ref_eng = SubseqEngine(WindowView(enc, X, stride=1), verify="numpy",
+                           batch_size=64)
+    ref = ref_eng.topk(Q[:1], k=6, exclusion=M // 2, use_index=False)
+    np.testing.assert_array_equal(res.window_ids, ref.window_ids)
+    np.testing.assert_array_equal(res.distances, ref.distances)
+
+
 def test_rep_only_store_guards():
     enc = _encoders()["sax"]
     store = SymbolicStore(enc, store_raw=False)

@@ -1,0 +1,88 @@
+"""Property test (hypothesis): exclusion-widening frontier reuse.
+
+For any (k, exclusion, stride) and either candidate path (linear sweep
+or split-tree index), ``SubseqEngine.topk`` with suppression must
+
+* equal the brute-force greedy-suppression oracle bitwise (exactness is
+  not allowed to depend on how many widening rounds ran), and
+* never fetch the same window id twice (the engine's "never verified
+  twice" accounting contract, now shared by both paths).
+
+Guarded by ``pytest.importorskip`` like the other property modules —
+hypothesis runs in CI, not in every container.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import SAX  # noqa: E402
+from repro.data.synthetic import season_dataset  # noqa: E402
+from repro.subseq import SubseqEngine, WindowView  # noqa: E402
+from repro.subseq.windows import znorm_windows  # noqa: E402
+
+M = 120
+_X = season_dataset(n=6, T=360, L=10, strength=0.7, seed=3)
+_Q = _X[0:1, 41:41 + M] + 0.05 * np.random.default_rng(0).normal(
+    size=(1, M)).astype(np.float32)
+_VIEWS: dict = {}
+
+
+def _view(stride, indexed):
+    key = (stride, indexed)
+    if key not in _VIEWS:
+        view = WindowView(SAX(T=M, W=12, A=16), _X, stride=stride)
+        if indexed:
+            view.build_index(leaf_fill=32)
+        _VIEWS[key] = view
+    return _VIEWS[key]
+
+
+def _oracle(stride, zq, k, exclusion):
+    """Greedy suppression over the full verified ordering — the exact
+    semantics ``SubseqEngine._suppress`` promises."""
+    W = np.lib.stride_tricks.sliding_window_view(
+        _X, M, axis=1)[:, ::stride].reshape(-1, M)
+    Wz = znorm_windows(W)
+    nw = W.shape[0] // _X.shape[0]
+    d = np.sqrt(np.sum(np.square(Wz - zq[0][None]), -1))
+    order = np.argsort(d, kind="stable")
+    out_i = np.full(k, -1, np.int64)
+    out_d = np.full(k, np.inf, np.float64)
+    taken = []
+    for wid in order:
+        r, s = wid // nw, (wid % nw) * stride
+        if any(tr == r and abs(ts - s) < exclusion for tr, ts in taken):
+            continue
+        out_i[len(taken)] = wid
+        out_d[len(taken)] = d[wid]
+        taken.append((r, s))
+        if len(taken) == k:
+            break
+    return out_i, out_d
+
+
+@settings(deadline=None, max_examples=15)
+@given(k=st.integers(1, 7), exclusion=st.integers(1, M),
+       stride=st.sampled_from([1, 3, 7]), indexed=st.booleans())
+def test_suppression_widening_exact_and_verifies_once(k, exclusion,
+                                                      stride, indexed):
+    from collections import Counter
+    view = _view(stride, indexed)
+    eng = SubseqEngine(view, verify="numpy", batch_size=32)
+    counts = Counter()
+    orig = view.fetch
+    view.fetch = lambda wids: (counts.update(
+        np.asarray(wids, np.int64).tolist()) or orig(wids))
+    try:
+        res = eng.topk(_Q, k=k, exclusion=exclusion, use_index=indexed)
+    finally:
+        view.fetch = orig
+    dup = {w: c for w, c in counts.items() if c > 1}
+    assert not dup, f"windows fetched more than once: {dup}"
+    zq = eng.normalize_queries(_Q)
+    want_i, want_d = _oracle(stride, zq, k, exclusion)
+    np.testing.assert_array_equal(res.window_ids[0], want_i)
+    np.testing.assert_array_equal(res.distances[0], want_d)
