@@ -10,10 +10,23 @@ Two measurements over a >= 10k-row Season corpus:
 * **Query latency under ingest**: exact top-k latency through a
   ``SymbolicStore``-backed engine immediately after each append (the
   ingest-while-serving path) vs on the static corpus.
+
+**Scale mode** (``--scale`` / ``--dryrun-scale``) runs the sharded
+service on a multi-device mesh and GATES the million-row contracts
+(RuntimeError on violation, so CI exits non-zero):
+
+* per-append device upload is byte-identical at every corpus size —
+  O(chunk) round-robin mirror appends, never an O(corpus) re-layout;
+* the exact top-k orders candidates on device: zero bound-matrix bytes
+  pulled to the host (``host_order_bytes == 0``) and zero raw rows
+  moved (``store_accesses == 0``, device-resident verification);
+* results stay bitwise-identical to the single-host engine and to the
+  f64 numpy oracle at the final corpus.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax.numpy as jnp
@@ -93,5 +106,131 @@ def run():
     return rows
 
 
+SCALE_FULL = dict(n0=10_240, chunk=512, growth=3, T=960, W=48,
+                  queries=4, k=8, batch=256)
+SCALE_DRY = dict(n0=192, chunk=48, growth=3, T=240, W=12,
+                 queries=2, k=4, batch=64)
+
+
+def _oracle_topk(Q, data, k: int) -> np.ndarray:
+    """f64 brute-force top-k indices, (distance, id) tie-break, chunked
+    so the (Q, N, T) broadcast never materializes."""
+    q = np.asarray(Q, np.float64)
+    d = np.asarray(data, np.float64)
+    parts = []
+    for r0 in range(0, d.shape[0], 4096):
+        blk = d[r0:r0 + 4096]
+        parts.append(np.sqrt(((q[:, None] - blk[None]) ** 2).sum(-1)))
+    ed = np.concatenate(parts, axis=1)
+    ids = np.broadcast_to(np.arange(ed.shape[1]), ed.shape)
+    return np.lexsort((ids, ed), axis=1)[:, :k]
+
+
+def run_scale(dryrun: bool = False):
+    """Scale-mode gates: flat O(chunk) per-append upload, zero host
+    hops on the candidate path, bitwise identity to host + oracle."""
+    import jax
+
+    from repro.core import MatchEngine
+    from repro.core.distributed import make_engine_service
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = SCALE_DRY if dryrun else SCALE_FULL
+    n0, chunk, growth = cfg["n0"], cfg["chunk"], cfg["growth"]
+    t_len, k = cfg["T"], cfg["k"]
+    n_dev = len(jax.devices())
+    assert chunk % n_dev == 0 and n0 % n_dev == 0, \
+        f"scale config must be divisible by the {n_dev}-device fleet"
+    total = n0 * growth + chunk + cfg["queries"]
+    X = season_dataset(total, t_len, L, strength=0.7,
+                       per_series_strength=True, seed=23)
+    Q, pool = X[:cfg["queries"]], X[cfg["queries"]:]
+    ss = SSAX(T=t_len, W=cfg["W"], L=L, A_seas=16, A_res=32,
+              r2_season=0.7)
+
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    dev = make_engine_service(ss, jnp.asarray(pool[:n0]), mesh,
+                              verify="device", batch_size=cfg["batch"])
+    dev.topk(Q, k=k)                     # warm mirrors + compile caches
+
+    rows, failures = [], []
+
+    # -- flat per-append cost: one chunk appended at each corpus size —
+    # the mirror upload delta must be byte-identical every time
+    deltas, times = [], []
+    pos = n0
+    for step in range(growth):
+        if step:                         # bulk-grow to the next corpus
+            grow = n0 - chunk            # size and SYNC outside the
+            dev.ingest(pool[pos:pos + grow])      # measured window
+            dev.topk(Q[:1], k=1)
+            pos += grow
+        assert dev.store.n == n0 * (step + 1)
+        before = dev.sweep.h2d_bytes
+        t0 = time.perf_counter()
+        dev.ingest(pool[pos:pos + chunk])
+        dev.topk(Q[:1], k=1)             # sync mirrors + serve new rows
+        times.append(time.perf_counter() - t0)
+        deltas.append(dev.sweep.h2d_bytes - before)
+        pos += chunk
+    flat = int(len(set(deltas)) == 1)
+    if not flat:
+        failures.append("append_not_O(chunk)")
+    for s, (d, t) in enumerate(zip(deltas, times)):
+        rows.append((
+            f"ingest_scale/append@{n0 * (s + 1)}",
+            f"chunk={chunk} h2d_delta_bytes={d} append+query_s={t:.4f}"))
+    rows.append((
+        "ingest_scale/append_flat",
+        f"per-append upload identical across corpus sizes: "
+        f"{'yes' if flat else 'NO ' + str(deltas)}"))
+
+    # -- zero host hops + bitwise identity at the final corpus ----------
+    r_d = dev.topk(Q, k=k)
+    host = MatchEngine(ss, dev.store, verify="host",
+                       batch_size=cfg["batch"])
+    r_h = host.topk(Q, k=k)
+    oracle = _oracle_topk(Q, dev.store.data, k)
+    agree_host = int(np.array_equal(r_d.indices, r_h.indices)
+                     and np.array_equal(r_d.distances, r_h.distances))
+    agree_oracle = int(np.array_equal(r_d.indices, oracle))
+    order_b = dev.sweep.host_order_bytes
+    moved = r_d.store_accesses
+    if not agree_host:
+        failures.append("dev_vs_host")
+    if not agree_oracle:
+        failures.append("dev_vs_oracle")
+    if order_b != 0:
+        failures.append("host_order_bytes")
+    if moved != 0:
+        failures.append("rows_moved_to_host")
+    rows.append((
+        "ingest_scale/exact_topk",
+        f"corpus={dev.store.n} k={k} bitwise_host={agree_host} "
+        f"bitwise_oracle={agree_oracle} order_bytes={order_b} "
+        f"moved_dev={moved} h2d_bytes={dev.sweep.h2d_bytes}"))
+    verdict = "PASS" if not failures else "FAIL " + ",".join(failures)
+    rows.append((
+        "ingest_scale/acceptance",
+        f"devices={n_dev} (target: O(chunk) appends, zero host hops, "
+        f"bitwise to host+oracle) {verdict}"))
+    for name, derived in rows:
+        emit_row(name, derived)
+    if failures:
+        raise RuntimeError("scale-mode ingest broke its contract: "
+                           + ", ".join(failures))
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", action="store_true",
+                    help="sharded scale-mode gates (O(chunk) appends, "
+                         "zero host hops, bitwise identity)")
+    ap.add_argument("--dryrun-scale", action="store_true",
+                    help="tiny scale mode for CI (forced device fleet)")
+    args = ap.parse_args()
+    if args.scale or args.dryrun_scale:
+        run_scale(dryrun=args.dryrun_scale)
+    else:
+        run()

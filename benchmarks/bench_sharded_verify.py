@@ -78,12 +78,16 @@ def _whole(cfg, mesh, rows, failures):
         t_host = time.perf_counter() - t0
         agree = int(np.array_equal(r_d.indices, r_h.indices)
                     and np.array_equal(r_d.distances, r_h.distances))
-        if not agree or r_d.store_accesses != 0:
+        # the exact path must order candidates on device: zero bound
+        # bytes pulled to host (the legacy (Q, N) matrix hop)
+        order_b = dev.sweep.host_order_bytes
+        if not agree or r_d.store_accesses != 0 or order_b != 0:
             failures.append(f"whole/{tech}")
         rows.append((
             f"sharded_verify/whole/{tech}",
             f"n={n} k={k} moved_dev={r_d.store_accesses} "
-            f"moved_host={r_h.store_accesses} bitwise={agree} "
+            f"moved_host={r_h.store_accesses} order_bytes={order_b} "
+            f"h2d_bytes={dev.sweep.h2d_bytes} bitwise={agree} "
             f"io_host_s={r_h.io_seconds:.5f} wall_dev_s={t_dev:.2f} "
             f"wall_host_s={t_host:.2f}"))
 
@@ -113,12 +117,14 @@ def _windowed(cfg, mesh, rows, failures):
         t_host = time.perf_counter() - t0
         agree = int(np.array_equal(r_d.window_ids, r_h.window_ids)
                     and np.array_equal(r_d.distances, r_h.distances))
-        if not agree or r_d.store_accesses != 0:
+        order_b = e_dev._sweep.host_order_bytes
+        if not agree or r_d.store_accesses != 0 or order_b != 0:
             failures.append(f"windowed/{tech}")
         rows.append((
             f"sharded_verify/windowed/{tech}",
             f"windows={view.n} k={k} moved_dev={r_d.store_accesses} "
-            f"moved_host={r_h.store_accesses} bitwise={agree} "
+            f"moved_host={r_h.store_accesses} order_bytes={order_b} "
+            f"bitwise={agree} "
             f"io_host_s={r_h.io_seconds:.5f} wall_dev_s={t_dev:.2f} "
             f"wall_host_s={t_host:.2f}"))
 

@@ -1,5 +1,9 @@
 """Benchmark runner — one module per paper table/figure plus the roofline
-report.  Prints ``name,us_per_call,derived`` CSV rows.
+report.  Prints ``name,us_per_call,derived`` CSV rows and writes one
+machine-readable ``results/BENCH_<suite>.json`` per suite (wall-clock,
+the suite's result rows — candidates examined, bytes moved, bitwise
+verdicts — and any error), so the perf trajectory is diffable across
+PRs instead of living in log text.
 
     PYTHONPATH=src python -m benchmarks.run [--only entropy,tlb,...]
 
@@ -17,11 +21,34 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
           "extensions", "ingest", "subseq", "index", "sharded_verify",
           "roofline", "perf"]
+
+RESULTS_DIR = "results"
+
+
+def _rows_payload(rows) -> list:
+    """Normalize a suite's ``run()`` return into [{"name", "derived"}]
+    — suites return a list of (name, derived) pairs, None, or their own
+    shapes; anything unrecognized is dropped, never fatal."""
+    out = []
+    if isinstance(rows, (list, tuple)):
+        for r in rows:
+            if (isinstance(r, (list, tuple)) and len(r) == 2
+                    and isinstance(r[0], str)):
+                out.append({"name": r[0], "derived": str(r[1])})
+    return out
+
+
+def _write_json(suite: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
 
 
 def main() -> None:
@@ -41,10 +68,16 @@ def main() -> None:
                        suite, f"benchmarks.bench_{suite}")
         try:
             mod = importlib.import_module(modname)
-            mod.run()
-            print(f"suite/{suite},{(time.time() - t0) * 1e6:.0f},ok",
-                  flush=True)
+            rows = mod.run()
+            seconds = time.time() - t0
+            _write_json(suite, {"suite": suite, "ok": True,
+                                "seconds": seconds,
+                                "rows": _rows_payload(rows)})
+            print(f"suite/{suite},{seconds * 1e6:.0f},ok", flush=True)
         except Exception as e:   # noqa: BLE001 — report, keep going
+            _write_json(suite, {"suite": suite, "ok": False,
+                                "seconds": time.time() - t0,
+                                "error": f"{type(e).__name__}: {e}"})
             print(f"suite/{suite},,ERROR {type(e).__name__}: {e}",
                   flush=True)
 

@@ -13,28 +13,55 @@ are replicated.  One ``shard_map`` pass per stage:
   3. Raw verification of the surviving candidates against the cold store
      via the batched k-NN engine (``core.engine.MatchEngine``):
      ``repr_topk_sharded`` produces the candidate frontier for
-     approximate top-k, ``repr_distances_sharded`` the full lower-bound
-     matrix for exact top-k — ``make_engine_service`` wires both into an
-     engine whose raw verification is one batched fetch per round
-     (host path) or never leaves the devices (``verify="device"``).
+     approximate top-k, the sharded bound sweep the exact frontier —
+     ``make_engine_service`` wires both into an engine whose raw
+     verification is one batched fetch per round (host path) or never
+     leaves the devices (``verify="device"``).
 
-Device-resident verification (``verify="device"``): the raw rows are
-mirrored on device alongside the representation, sharded by the SAME
-contiguous row ranges the ``SymbolicStore`` snapshot raw manifest uses
-(``store.snapshot._shard_ranges`` — shard h of the device mirror holds
-exactly the rows ``shard_hNNN.npz`` would, so a per-host snapshot
-restore feeds each device shard without resharding).  A verification
+Shard layout contract (device mirrors)
+--------------------------------------
+Every device mirror (``RoundRobinMirror``) is laid out ROUND-ROBIN:
+global row ``i`` lives on shard ``i % n_shards`` at local slot
+``i // n_shards``, in a ``(n_shards, capacity, *rest)`` buffer whose
+leading axis is sharded over the data axes.  A head-aligned append of
+``d * n_shards`` rows therefore lands in slots
+``[per_live, per_live + d)`` of EVERY shard — host->device traffic is
+O(chunk) and the resident corpus is never re-laid-out, unlike a
+contiguous-range layout where each append shifts every shard boundary
+(O(corpus) collective re-layout).  Capacity doubles device-side
+(``jnp.pad``, no host traffic), so amortized append cost stays O(chunk).
+The largest shard-divisible prefix (the "head", always a multiple of
+``n_shards``) lives in the mirrors; the < n_shards remainder (the
+"tail") is swept host-side through the same kernel math and min-merged.
+
+The ON-DISK layout is deliberately NOT the mirror layout: snapshots
+(``store.snapshot``) keep contiguous per-host row ranges
+(``_shard_ranges``) as their manifest unit — ``ShardedRepSweep.
+shard_ranges()`` still reports those manifest ranges, while
+``owned_rows()`` / ``mirror_layout`` describe the device placement.
+Matching results are layout-independent (bit-identical either way)
+because every per-(query, row) quantity is computed element-wise.
+
+Device-resident candidate ORDER: the bound matrix never materializes on
+the host for the exact path.  ``candidate_stream`` sorts the blocked
+round-robin bound matrix (plus the tail) by ``(bound, id)`` once, on
+device, and hands ``core.engine.topk_verify`` a
+:class:`DeviceOrderedStream` — ``peek``/``take`` move only O(Q) /
+O(Q·batch) scalars and ids per round, never the (Q, N) matrix
+(``host_order_bytes`` stays 0; the legacy ``repr_distances`` matrix
+path counts every byte it assembles there).
+
+Device-resident verification (``verify="device"``): a verification
 round hands the candidate id batch to every shard; each shard distances
-its own candidates through the multi-query Pallas euclid kernel
-(``kernels.euclid``) and a device-side min-merge combines shards (each
-candidate is owned by exactly one).  The distance definition is the
-kernel's f32 reduction — identical math to the host ``verify="host"``
-fallback (store fetch + the same kernel), so the two paths are
-bit-identical; the host ``verify="numpy"`` path stays the brute-force
-oracle with modeled I/O.  The non-shard-divisible remainder
-(< n_shards rows) is distanced host-side through the same kernel —
-those rows are already host-resident, so the device path still moves
-zero raw rows device->host.
+its OWN candidates (ownership is ``id % n_shards``) through the
+multi-query Pallas euclid kernel (``kernels.euclid``) and a device-side
+min-merge combines shards.  The distance definition is the kernel's f32
+reduction — identical math to the host ``verify="host"`` fallback
+(store fetch + the same kernel), so the two paths are bit-identical;
+the host ``verify="numpy"`` path stays the brute-force oracle with
+modeled I/O.  Tail rows are distanced host-side through the same
+kernel — they are already host-resident, so the device path still
+moves zero raw rows device->host.
 
 The helpers take any encoder with ``encode`` + ``pairwise_distance`` —
 SAX, sSAX, tSAX and 1d-SAX all plug in.
@@ -85,6 +112,38 @@ def encode_sharded(encoder, dataset, mesh: Mesh):
     fn = _encode_fn(mesh, encoder, out_def,
                     tuple(len(l.shape) for l in leaves))
     return fn(dataset)
+
+
+def rowwise_sharded(obj, method: str, rows, mesh: Mesh):
+    """Run ``getattr(obj, method)`` — any pure row-wise device map with a
+    (N, T) input — over ``rows`` sharded on the mesh data axes (pad to a
+    shard multiple, trim) and return the same pytree of host arrays.
+
+    The map runs EAGERLY on the sharded array (the row sharding
+    propagates through every row-parallel op), deliberately NOT under
+    ``jit(shard_map(...))``: eager dispatch executes the exact op-by-op
+    kernels the host path runs, so the float output is bitwise identical
+    to the unsharded call.  A jitted variant fuses differently and
+    drifts by ulps — harmless for the QUANTIZED symbols
+    :func:`encode_sharded` produces, fatal for the float features the
+    split tree stores and compares (``index.features``)."""
+    rows = np.asarray(rows, np.float32)
+    if rows.ndim == 1:
+        rows = rows[None]
+    m = rows.shape[0]
+    fn = getattr(obj, method)
+    if m == 0:
+        return jax.tree.map(np.asarray, fn(jnp.asarray(rows)))
+    axes = _data_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    pad = (-m) % n_shards
+    if pad:
+        rows = np.concatenate([rows, rows[-1:].repeat(pad, axis=0)])
+    sharded = jax.device_put(jnp.asarray(rows, jnp.float32),
+                             NamedSharding(mesh, P(axes, None)))
+    return jax.tree.map(lambda l: np.asarray(l)[:m], fn(sharded))
 
 
 def _rep_specs(rep_query, rep_data):
@@ -147,7 +206,8 @@ def repr_topk_sharded(encoder, rep_query, rep_data, mesh: Mesh, *,
 
     Local shard computes distances + local top-k; k*shards candidates are
     all-gathered and reduced — collective volume O(Q*k*shards), never O(N).
-    Returns (dists (Q, k), global indices (Q, k)).
+    Returns (dists (Q, k), global indices (Q, k)).  Data is contiguously
+    sharded on its leading axis (the :func:`encode_sharded` layout).
     """
     pw = pairwise or encoder.pairwise_distance
     fn = _repr_topk_fn(mesh, pw, int(k),
@@ -156,7 +216,7 @@ def repr_topk_sharded(encoder, rep_query, rep_data, mesh: Mesh, *,
 
 
 # ---------------------------------------------------------------------------
-# Device-resident candidate verification
+# Round-robin device mirror
 # ---------------------------------------------------------------------------
 
 def _shard_index(axes):
@@ -167,24 +227,162 @@ def _shard_index(axes):
     return sid
 
 
-def _mirror_rows(mesh: Mesh, axes, current, data, old_head: int,
-                 head: int):
-    """Incrementally maintain a device mirror of (N, T) host rows,
-    sharded over the data axes by contiguous row ranges: upload only the
-    [old_head, head) delta and concatenate with the resident mirror on
-    device (host->device traffic O(delta); the re-layout is
-    device-to-device), or upload from scratch on first sync."""
-    sh = NamedSharding(mesh, P(axes, None))
-    if current is not None and 0 < old_head < head:
-        return jax.device_put(
-            jnp.concatenate([current, jnp.asarray(data[old_head:head])],
-                            axis=0), sh)
-    if head:
-        # device_put on the numpy slice splits host-side per shard — no
-        # transient full-corpus copy on one device (matching the
-        # rep-leaf mirror path)
-        return jax.device_put(data[:head], sh)
-    return None
+@lru_cache(maxsize=64)
+def _rr_place_fn(mesh: Mesh, ndim: int):
+    """Jitted in-place slot write: ``buf[:, start:start+d] = delta``,
+    donating the old buffer — the per-append device work is O(chunk)
+    window writes, never a corpus-wide concatenate."""
+    axes = _data_axes(mesh)
+    sh = NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))
+
+    @partial(jax.jit, out_shardings=sh, donate_argnums=0)
+    def place(buf, delta, start):
+        zeros = (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, delta, (0, start) + zeros)
+
+    return place
+
+
+@lru_cache(maxsize=64)
+def _rr_grow_fn(mesh: Mesh, ndim: int):
+    """Jitted capacity growth (device-side zero-pad of the slot axis)."""
+    axes = _data_axes(mesh)
+    sh = NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))
+
+    @partial(jax.jit, static_argnums=1, out_shardings=sh, donate_argnums=0)
+    def grow(buf, new_cap):
+        pad = [(0, 0)] * buf.ndim
+        pad[1] = (0, new_cap - buf.shape[1])
+        return jnp.pad(buf, pad)
+
+    return grow
+
+
+class RoundRobinMirror:
+    """Append-local device mirror of host rows, sharded round-robin.
+
+    Global row ``i`` lives on shard ``i % n_shards`` at local slot
+    ``i // n_shards``; the device buffer is ``(n_shards, capacity,
+    *rest)`` with the leading axis sharded over the mesh data axes.  An
+    append of ``d * n_shards`` rows uploads exactly those rows
+    (O(chunk) host->device, counted in ``h2d_bytes``) into slots
+    ``[per_live, per_live + d)`` of every shard — the resident corpus
+    is never re-uploaded or re-laid-out, unlike a contiguous-range
+    layout where every append shifts every shard boundary.  Capacity
+    doubles device-side when exhausted (``jnp.pad``, no host traffic),
+    so amortized append cost stays O(chunk).  Slots ``>= per_live`` are
+    dead padding; every consumer masks them via the ``per_live``
+    scalar."""
+
+    def __init__(self, mesh: Mesh, n_shards: int):
+        self.mesh = mesh
+        self.n_shards = int(n_shards)
+        self.buf = None                  # (S, cap, *rest) device array
+        self.per_live = 0                # live slots per shard
+        self.h2d_bytes = 0               # host->device upload accounting
+
+    @property
+    def cap(self) -> int:
+        return 0 if self.buf is None else self.buf.shape[1]
+
+    @property
+    def live(self) -> int:
+        return self.per_live * self.n_shards
+
+    def append(self, rows) -> None:
+        """Upload ``rows`` (a head-aligned multiple of n_shards, in
+        global row order) into the next free slot of every shard."""
+        rows = np.asarray(rows)
+        S = self.n_shards
+        if rows.shape[0] % S:
+            raise ValueError(f"append of {rows.shape[0]} rows is not a "
+                             f"multiple of n_shards={S}")
+        d = rows.shape[0] // S
+        if d == 0:
+            return
+        rest = rows.shape[1:]
+        # (d*S, ...) -> (S, d, ...): appended row j*S + s -> shard s,
+        # slot per_live + j
+        blk = np.ascontiguousarray(
+            rows.reshape((d, S) + rest).swapaxes(0, 1))
+        sh = NamedSharding(self.mesh, P(_data_axes(self.mesh),
+                                        *([None] * len(rest))))
+        dev = jax.device_put(blk, sh)
+        self.h2d_bytes += blk.nbytes
+        if self.buf is None:
+            self.buf = dev
+        else:
+            if self.per_live + d > self.cap:
+                new_cap = max(2 * self.cap, self.per_live + d)
+                self.buf = _rr_grow_fn(self.mesh, self.buf.ndim)(
+                    self.buf, new_cap)
+            self.buf = _rr_place_fn(self.mesh, self.buf.ndim)(
+                self.buf, dev, jnp.int32(self.per_live))
+        self.per_live += d
+
+
+# ---------------------------------------------------------------------------
+# Round-robin sweeps (bounds, top-k, verification)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=64)
+def _rr_bounds_fn(mesh: Mesh, pw, q_def, x_def, q_ndims, x_ndims):
+    """(Q, S*cap) blocked bound matrix over round-robin mirrors: the
+    block column ``s*cap + j`` holds global row ``j*S + s``; dead slots
+    are +inf.  Output stays column-sharded on device — the host
+    unpermute (``ShardedRepSweep.repr_distances``) is the legacy matrix
+    path only."""
+    axes = _data_axes(mesh)
+    in_q = jax.tree.unflatten(q_def, [P(*([None] * nd)) for nd in q_ndims])
+    in_x = jax.tree.unflatten(
+        x_def, [P(axes, *([None] * (nd - 1))) for nd in x_ndims])
+
+    def local(rq, rx, per):
+        rx = jax.tree.map(lambda l: l[0], rx)          # strip shard axis
+        d = pw(rq, rx)                                 # (Q, cap)
+        dead = jnp.arange(d.shape[1])[None, :] >= per
+        return jnp.where(dead, jnp.inf, d)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(in_q, in_x, P()),
+        out_specs=P(None, axes), check_rep=False))
+
+
+@lru_cache(maxsize=64)
+def _rr_topk_fn(mesh: Mesh, pw, k: int, n_shards: int,
+                q_def, x_def, q_ndims, x_ndims):
+    """Global top-k (distance, GLOBAL id) over round-robin mirrors.
+    Local top-k ids ``slot*S + shard`` are all-gathered and merged with
+    the same (distance, smallest-id) lexicographic tie-break the host
+    ``merge_topk_numpy`` applies — a plain ``top_k`` over the gathered
+    pool would break that on ties because round-robin global ids are
+    not monotone in gather position."""
+    axes = _data_axes(mesh)
+    in_q = jax.tree.unflatten(q_def, [P(*([None] * nd)) for nd in q_ndims])
+    in_x = jax.tree.unflatten(
+        x_def, [P(axes, *([None] * (nd - 1))) for nd in x_ndims])
+
+    def local(rq, rx, per):
+        rx = jax.tree.map(lambda l: l[0], rx)
+        d = pw(rq, rx)                                 # (Q, cap)
+        cap = d.shape[1]
+        d = jnp.where(jnp.arange(cap)[None, :] >= per, jnp.inf, d)
+        kk = min(k, cap)
+        neg, idx = jax.lax.top_k(-d, kk)
+        cd = -neg
+        gidx = idx * n_shards + _shard_index(axes)
+        gidx = jnp.where(jnp.isfinite(cd), gidx, -1)
+        cand_d = jax.lax.all_gather(cd, axes, axis=1, tiled=True)
+        cand_i = jax.lax.all_gather(gidx, axes, axis=1, tiled=True)
+        tie = jnp.where(cand_i < 0, jnp.iinfo(jnp.int32).max, cand_i)
+        best = jnp.lexsort((tie, cand_d), axis=-1)[:, :min(k,
+                                                           cand_d.shape[1])]
+        return (jnp.take_along_axis(cand_d, best, axis=1),
+                jnp.take_along_axis(cand_i, best, axis=1))
+
+    return jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(in_q, in_x, P()),
+        out_specs=(P(None, None), P(None, None)), check_rep=False))
 
 
 def _kernel_cand_d2(rows, qs):
@@ -200,68 +398,78 @@ def _kernel_cand_d2(rows, qs):
 
 
 @lru_cache(maxsize=64)
-def _rows_verify_fn(mesh: Mesh):
-    """Jitted sharded row-verification callable, cached per mesh (the
-    jit cache then folds repeated (Qa, B, T) round shapes)."""
+def _rr_rows_verify_fn(mesh: Mesh, n_shards: int):
+    """Jitted sharded row-verification over a round-robin raw mirror
+    (ownership: ``id % n_shards``), cached per mesh (the jit cache then
+    folds repeated (Qa, B, T) round shapes)."""
     axes = _data_axes(mesh)
 
-    def local(x, q, c):
-        n_local = x.shape[0]
-        loc = c - _shard_index(axes) * n_local
-        valid = (c >= 0) & (loc >= 0) & (loc < n_local)
-        rows = x[jnp.clip(loc, 0, n_local - 1)]        # (Qa, B, T)
+    def local(x, q, c, per):
+        x = x[0]                                      # (cap, T) local
+        cap = x.shape[0]
+        slot = c // n_shards
+        valid = ((c >= 0) & (c % n_shards == _shard_index(axes))
+                 & (slot < per))
+        rows = x[jnp.clip(slot, 0, cap - 1)]          # (Qa, B, T)
         d2 = _kernel_cand_d2(rows, q)
         # each candidate is owned by exactly one shard: min-merge
         return jax.lax.pmin(jnp.where(valid, d2, jnp.inf), axes)
 
     return jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None), P(None, None)),
+        in_specs=(P(axes, None, None), P(None, None), P(None, None), P()),
         out_specs=P(None, None), check_rep=False))
 
 
-def cand_dists_rows_sharded(raw_head, q_dev, cand, mesh: Mesh) -> np.ndarray:
-    """True d_ED of candidate ROW ids against the sharded raw head.
+def cand_dists_rows_rr(raw_buf, q_dev, cand, mesh: Mesh, n_shards: int,
+                       per_live: int) -> np.ndarray:
+    """True d_ED of candidate ROW ids against a round-robin raw mirror.
 
-    raw_head: (head, T) device array sharded over the data axes
-    (contiguous row ranges — the snapshot raw-manifest shard unit).
-    q_dev: (Qa, T) replicated queries.  cand: (Qa, B) int ids, -1
-    padding.  Ids outside [0, head) return +inf (the caller min-merges
-    the host-side tail).  Raw rows never leave the devices."""
-    d2 = _rows_verify_fn(mesh)(raw_head, q_dev, jnp.asarray(cand))
+    raw_buf: the mirror's (S, cap, T) device buffer.  q_dev: (Qa, T)
+    replicated queries.  cand: (Qa, B) int ids, -1 padding.  Ids outside
+    the mirrored head return +inf (the caller min-merges the host-side
+    tail).  Raw rows never leave the devices."""
+    d2 = _rr_rows_verify_fn(mesh, int(n_shards))(
+        raw_buf, q_dev, jnp.asarray(cand), jnp.int32(per_live))
     return np.asarray(jnp.sqrt(jnp.maximum(d2, 0.0)))
 
 
 @lru_cache(maxsize=64)
-def _windows_gather_fn(mesh: Mesh, nw: int, stride: int, m: int):
-    """Jitted sharded window-extraction callable, cached per
-    (mesh, window geometry): each shard slices its own rows' windows
-    (pure gather — bit-exact), off-shard entries contribute zeros and a
-    psum re-assembles the full batch (x + 0 is exact in f32)."""
+def _rr_windows_gather_fn(mesh: Mesh, n_shards: int, nw: int, stride: int,
+                          m: int):
+    """Jitted sharded window extraction over a round-robin SOURCE-row
+    mirror: each shard slices windows of its own rows (pure gather —
+    bit-exact), off-shard entries contribute zeros and a psum
+    re-assembles the full batch (x + 0 is exact in f32)."""
     axes = _data_axes(mesh)
 
-    def local(x, c):
-        n_local = x.shape[0]
+    def local(x, c, per):
+        x = x[0]                                      # (cap, T_src)
+        cap = x.shape[0]
         row = jnp.where(c >= 0, c // nw, -1)
         start = (c % nw) * stride          # in-bounds even for c == -1
-        loc = row - _shard_index(axes) * n_local
-        valid = (c >= 0) & (loc >= 0) & (loc < n_local)
-        slab = x[jnp.clip(loc, 0, n_local - 1)]        # (Qa, B, T)
+        slot = row // n_shards
+        valid = ((c >= 0) & (row % n_shards == _shard_index(axes))
+                 & (slot < per))
+        slab = x[jnp.clip(slot, 0, cap - 1)]          # (Qa, B, T_src)
         gat = start[..., None] + jnp.arange(m)[None, None, :]
-        w = jnp.take_along_axis(slab, gat, axis=2)     # (Qa, B, m)
+        w = jnp.take_along_axis(slab, gat, axis=2)    # (Qa, B, m)
         return jax.lax.psum(jnp.where(valid[..., None], w, 0.0), axes)
 
     return jax.jit(shard_map(
-        local, mesh=mesh, in_specs=(P(axes, None), P(None, None)),
+        local, mesh=mesh,
+        in_specs=(P(axes, None, None), P(None, None), P()),
         out_specs=P(None, None, None), check_rep=False))
 
 
-def cand_dists_windows_sharded(raw_rows_head, q_dev, cand, mesh: Mesh, *,
-                               nw: int, stride: int, m: int,
-                               head_rows: int) -> np.ndarray:
+def cand_dists_windows_rr(raw_buf, q_dev, cand, mesh: Mesh, *,
+                          n_shards: int, per_live: int, nw: int,
+                          stride: int, m: int,
+                          head_rows: int) -> np.ndarray:
     """True z-normalized d_ED of candidate WINDOW ids against windows of
-    the sharded SOURCE rows (``repro.subseq.WindowView`` geometry:
-    ``wid = row * nw + j`` covers ``source[row, j*stride : j*stride+m]``).
+    round-robin-mirrored SOURCE rows (``repro.subseq.WindowView``
+    geometry: ``wid = row * nw + j`` covers
+    ``source[row, j*stride : j*stride+m]``).
 
     Each shard extracts its own rows' windows on device (sharded
     gather); the assembled device batch is then z-normalized and
@@ -270,12 +478,13 @@ def cand_dists_windows_sharded(raw_rows_head, q_dev, cand, mesh: Mesh, *,
     kernel-verifier path runs — z-normalization must not be fused into
     a larger jit graph, or XLA re-associates its reductions and the
     device path drifts from the host path by an ulp.  Window ids whose
-    source row falls outside the sharded head return +inf (the caller
+    source row falls outside the mirrored head return +inf (the caller
     min-merges the host-side tail); window values never reach the
     host."""
     from repro.core.normalize import znormalize
-    fn = _windows_gather_fn(mesh, int(nw), int(stride), int(m))
-    w = fn(raw_rows_head, jnp.asarray(cand))           # (Qa, B, m) device
+    fn = _rr_windows_gather_fn(mesh, int(n_shards), int(nw), int(stride),
+                               int(m))
+    w = fn(raw_buf, jnp.asarray(cand), jnp.int32(per_live))
     wz = znormalize(w)                   # eager: host-identical dispatch
     d2 = np.asarray(_kernel_cand_d2(wz, q_dev))  # one host transfer
     out = np.sqrt(np.maximum(d2, 0.0))
@@ -285,7 +494,7 @@ def cand_dists_windows_sharded(raw_rows_head, q_dev, cand, mesh: Mesh, *,
 
 
 def _host_cand_dists_rows(tail_rows, lo, qs, cand) -> np.ndarray:
-    """Host twin of :func:`cand_dists_rows_sharded` for the
+    """Host twin of :func:`cand_dists_rows_rr` for the
     non-shard-divisible tail remainder — same kernel distance math; the
     tail rows are already host-resident, so nothing moves off device."""
     loc = cand - lo
@@ -299,7 +508,7 @@ def _host_cand_dists_rows(tail_rows, lo, qs, cand) -> np.ndarray:
 
 def _host_cand_dists_windows(tail_rows, row_lo, qs, cand, *, nw: int,
                              stride: int, m: int) -> np.ndarray:
-    """Host twin of :func:`cand_dists_windows_sharded` for windows whose
+    """Host twin of :func:`cand_dists_windows_rr` for windows whose
     source row lives in the tail remainder."""
     from repro.subseq.windows import znorm_windows
     row = np.where(cand >= 0, cand // nw, -1)
@@ -313,6 +522,92 @@ def _host_cand_dists_windows(tail_rows, row_lo, qs, cand, *, nw: int,
                                     jnp.asarray(qs, jnp.float32)))
     return np.where(valid, np.sqrt(np.maximum(d2, 0.0)),
                     np.float32(np.inf)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Device-ordered candidate stream
+# ---------------------------------------------------------------------------
+
+class DeviceOrderedStream:
+    """Candidate frontier sorted by (bound, id) ONCE on device; the full
+    (Q, N) bound matrix never reaches the host.
+
+    ``core.engine.topk_verify`` drives it through two calls per round:
+    ``peek()`` returns the next unverified bound per query ((Q,) f32 —
+    the only per-round host transfer besides the ids themselves) and
+    ``take(aq, batch)`` pops the next ``batch`` GLOBAL ids for the
+    active queries, -1-padded past each query's finite frontier.  The
+    (bound, id) sort equals the host matrix path's stable argsort
+    (ties break toward the smaller id), so the verification schedule is
+    identical — and the verified top-k is exact for ANY valid-bound
+    order regardless."""
+
+    def __init__(self, sorted_bounds, sorted_ids, n_fin, width: int):
+        self._b = sorted_bounds          # (Q, C) device, ascending
+        self._i = sorted_ids             # (Q, C) device int32 global ids
+        self._n_fin = np.asarray(n_fin, np.int64)
+        self._pos = np.zeros(self._n_fin.shape[0], np.int64)
+        self._C = 0 if sorted_bounds is None else int(sorted_bounds.shape[1])
+        self.width = int(width)
+
+    @classmethod
+    def empty(cls, q_n: int) -> "DeviceOrderedStream":
+        return cls(None, None, np.zeros(q_n, np.int64), 0)
+
+    def peek(self) -> np.ndarray:
+        """(Q,) next unverified bound per query; +inf when exhausted."""
+        if self._C == 0:
+            return np.full(self._pos.shape[0], np.inf)
+        idx = jnp.asarray(np.minimum(self._pos, self._C - 1)[:, None])
+        nxt = np.asarray(jnp.take_along_axis(self._b, idx, axis=1),
+                         np.float64)[:, 0]
+        # a fully-finite row clipped at pos == C would leak a finite
+        # bound: the exhaustion guard is load-bearing
+        return np.where(self._pos < self._n_fin, nxt, np.inf)
+
+    def take(self, aq, batch: int) -> np.ndarray:
+        """Pop the next ``batch`` global ids for the active queries
+        ``aq`` ((len(aq), batch) int64, -1-padded); advances the
+        cursors by the number of real ids returned."""
+        aq = np.asarray(aq, np.int64)
+        if self._C == 0 or len(aq) == 0:
+            return np.full((len(aq), batch), -1, np.int64)
+        cols = (self._pos[aq][:, None]
+                + np.arange(batch, dtype=np.int64)[None, :])
+        valid = cols < self._n_fin[aq][:, None]
+        gat = jnp.asarray(np.minimum(cols, self._C - 1))
+        ids = np.asarray(jnp.take_along_axis(self._i[jnp.asarray(aq)],
+                                             gat, axis=1), np.int64)
+        self._pos[aq] += valid.sum(axis=1)
+        return np.where(valid, ids, -1)
+
+
+def _order_stream(bounds_dev, ids, width: int) -> DeviceOrderedStream:
+    """One device lexsort of (bounds, broadcast ids) -> stream."""
+    b = jnp.asarray(bounds_dev, jnp.float32)
+    ib = jnp.broadcast_to(
+        jnp.asarray(np.asarray(ids, np.int32))[None, :], b.shape)
+    order = jnp.lexsort((ib, b), axis=-1)
+    sb = jnp.take_along_axis(b, order, axis=1)
+    si = jnp.take_along_axis(ib, order, axis=1)
+    n_fin = np.asarray(jnp.sum(jnp.isfinite(b), axis=1))
+    return DeviceOrderedStream(sb, si, n_fin, width)
+
+
+def host_order_stream(bounds, ids) -> DeviceOrderedStream:
+    """Order a host bound matrix on device (the ``TreeCandidates``
+    device-ordering path: columns are the union candidate ids).  f64
+    bounds are rounded DOWNWARD to f32 so every sorted bound is still a
+    valid d_ED lower bound — the engine's exactness argument needs
+    nothing more from the order."""
+    b = np.asarray(bounds)
+    if b.dtype != np.float32:
+        b32 = b.astype(np.float32)
+        over = np.isfinite(b32) & (b32.astype(np.float64) > b)
+        b32[over] = np.nextafter(b32[over], np.float32(-np.inf))
+        b = b32
+    return _order_stream(jnp.asarray(b), np.asarray(ids, np.int64),
+                         width=b.shape[1])
 
 
 def make_matching_service(encoder, dataset, mesh: Mesh, *, k: int = 64,
@@ -333,28 +628,38 @@ class ShardedRepSweep:
     """Device-resident sharded representation sweep over a
     ``repro.store.SymbolicStore`` that supports streaming ingestion.
 
-    The store owns raw rows + host representation; this class maintains a
-    device mirror of the representation sharded over the mesh data axes
-    and keeps it fresh under ``ingest``:
+    The store owns raw rows + host representation; this class maintains
+    round-robin device mirrors (:class:`RoundRobinMirror` — global row
+    ``i`` on shard ``i % n_shards``) and keeps them fresh under
+    ``ingest``:
 
     * ``ingest(rows)`` encodes ONLY the new chunk — one sharded
       ``encode_sharded`` pass (padded up to a shard multiple, then
       trimmed) — and appends rows + representation to the store.  Nothing
       already ingested is re-encoded, ever.
-    * On the next query the device mirror is refreshed incrementally:
-      only the newly appended rows are uploaded and concatenated with the
-      resident head on device, then re-sharded in place — host->device
-      traffic per ingest is O(chunk), not O(corpus).  The largest
-      shard-divisible prefix lives sharded on the mesh; the small
-      remainder (< n_shards rows) is swept host-side and merged — so any
-      corpus size serves exact answers between ingests.
-    * With ``mirror_raw=True`` the RAW rows are mirrored on device next
-      to the representation, sharded by the same contiguous row ranges
-      (the snapshot raw-manifest shard unit), and kept in sync by the
-      same incremental device-append — ``make_dist_fn`` then verifies
-      candidate rows entirely on device (``verify="device"``); old rows
-      are never re-encoded and never re-uploaded.
+    * On the next query the mirrors are refreshed incrementally: only
+      the newly appended head-aligned rows are uploaded, landing in the
+      next free slot of every shard — host->device traffic AND device
+      work per ingest are O(chunk), not O(corpus) (the contiguous-range
+      layout this replaced re-laid-out the entire resident corpus on
+      every shard-boundary shift).  The largest shard-divisible prefix
+      lives in the mirrors; the small remainder (< n_shards rows) is
+      swept host-side (``_tail_bounds`` — one shared helper for the
+      matrix, frontier and stream sweeps) and merged, so any corpus
+      size serves exact answers between ingests.
+    * ``candidate_stream`` orders the device-resident bounds by
+      (bound, id) on device and hands ``topk_verify`` a
+      :class:`DeviceOrderedStream` — the exact path never materializes
+      the (Q, N) matrix on the host (``host_order_bytes`` stays 0; the
+      legacy ``repr_distances`` matrix path counts what it moves).
+    * With ``mirror_raw=True`` the RAW rows are mirrored round-robin
+      next to the representation and kept in sync by the same O(chunk)
+      append — ``make_dist_fn`` then verifies candidate rows entirely
+      on device (``verify="device"``); old rows are never re-encoded
+      and never re-uploaded.
     """
+
+    mirror_layout = "round_robin"
 
     def __init__(self, encoder, mesh: Mesh, store, *,
                  pairwise: Callable | None = None,
@@ -373,9 +678,10 @@ class ShardedRepSweep:
                              "in the store (store_raw=True)")
         self._synced_version = -1
         self._head = 0
-        self._head_leaves = None         # device leaves, sharded
+        self._mirrors = None             # per-rep-leaf RoundRobinMirror
         self._tail_rep = None            # host, < n_shards rows
-        self._raw_head = None            # device raw mirror, sharded
+        self._raw_mirror = None          # RoundRobinMirror of raw rows
+        self.host_order_bytes = 0        # bytes of host bound matrices
 
     # -- ingest -----------------------------------------------------------
     def _encode_chunk(self, rows: np.ndarray):
@@ -402,12 +708,6 @@ class ShardedRepSweep:
         single = not isinstance(self.store.rep_view(), tuple)
         return leaves[0] if single else tuple(leaves)
 
-    @property
-    def _head_rep(self):
-        if self._head_leaves is None:
-            return None
-        return self._restructure(self._head_leaves)
-
     def _sync(self):
         if self._synced_version == self.store.version:
             return
@@ -416,72 +716,101 @@ class ShardedRepSweep:
         head = (n // self.n_shards) * self.n_shards
         leaves = rep_leaves(self.store.rep_view())
         if head != self._head:
-            shardings = [NamedSharding(
-                self.mesh, P(self.axes, *([None] * (l.ndim - 1))))
-                for l in leaves]
-            if self._head_leaves is not None and 0 < self._head < head:
-                # device-append: upload only the delta rows, concatenate
-                # with the resident head on device, re-shard in place —
-                # host->device traffic is O(appended), never O(corpus)
-                self._head_leaves = tuple(
-                    jax.device_put(
-                        jnp.concatenate(
-                            [old, jnp.asarray(l[self._head:head])], axis=0),
-                        sh)
-                    for old, l, sh in zip(self._head_leaves, leaves,
-                                          shardings))
-            elif head:
-                self._head_leaves = tuple(
-                    jax.device_put(l[:head], sh)
-                    for l, sh in zip(leaves, shardings))
-            else:
-                self._head_leaves = None
-            if self.mirror_raw:          # raw mirror: same shard unit,
-                self._raw_head = _mirror_rows(   # same incremental append
-                    self.mesh, self.axes, self._raw_head,
-                    self.store.data, self._head, head)
+            if self._mirrors is None:
+                self._mirrors = tuple(
+                    RoundRobinMirror(self.mesh, self.n_shards)
+                    for _ in leaves)
+            # O(chunk): only the head-aligned delta rows are uploaded
+            for mir, l in zip(self._mirrors, leaves):
+                mir.append(l[self._head:head])
+            if self.mirror_raw:
+                if self._raw_mirror is None:
+                    self._raw_mirror = RoundRobinMirror(self.mesh,
+                                                        self.n_shards)
+                self._raw_mirror.append(self.store.data[self._head:head])
         self._tail_rep = (self._restructure(
             tuple(jnp.asarray(l[head:]) for l in leaves))
             if head < n else None)
         self._head = head
         self._synced_version = self.store.version
 
+    @property
+    def h2d_bytes(self) -> int:
+        """Total host->device mirror upload traffic (bytes)."""
+        total = sum(m.h2d_bytes for m in (self._mirrors or ()))
+        if self._raw_mirror is not None:
+            total += self._raw_mirror.h2d_bytes
+        return total
+
+    def _mirror_tree(self):
+        return self._restructure(tuple(m.buf for m in self._mirrors))
+
+    def _rr_bounds(self, rep_q):
+        """(Q, S*cap) blocked device bound matrix over the mirrors."""
+        mt = self._mirror_tree()
+        fn = _rr_bounds_fn(self.mesh, self._pw, *_rep_specs(rep_q, mt))
+        return fn(rep_q, mt, jnp.int32(self._mirrors[0].per_live))
+
+    def _tail_bounds(self, rep_q):
+        """Shared tail-remainder sweep: (device (Q, tn) bounds, int64
+        global ids) of the < n_shards host-resident rows, or (None,
+        None).  The one helper behind the matrix (``repr_distances``),
+        frontier (``candidates``) and stream (``candidate_stream``)
+        paths — previously duplicated near-identically per caller."""
+        if self._tail_rep is None:
+            return None, None
+        d = self._pw(rep_q, self._tail_rep)
+        ids = np.arange(self._head, self.store.n, dtype=np.int64)
+        return d, ids
+
     # -- sweeps -----------------------------------------------------------
     def repr_distances(self, queries_raw) -> np.ndarray:
-        """(Q, N) lower-bound matrix: sharded sweep over the head, host
-        sweep over the tail remainder."""
+        """(Q, N) lower-bound matrix on the HOST (legacy matrix path:
+        the blocked device matrix is pulled over and unpermuted to
+        natural row order; the traffic is counted in
+        ``host_order_bytes``).  The exact top-k path uses
+        ``candidate_stream`` instead and never pays this."""
         self._sync()
         rep_q = self.encoder.encode(jnp.asarray(queries_raw, jnp.float32))
         parts = []
-        if self._head_rep is not None:
-            parts.append(np.asarray(repr_distances_sharded(
-                self.encoder, rep_q, self._head_rep, self.mesh,
-                pairwise=self._pw)))
-        if self._tail_rep is not None:
-            parts.append(np.asarray(self._pw(rep_q, self._tail_rep)))
+        if self._mirrors is not None:
+            blk = np.asarray(self._rr_bounds(rep_q))   # (Q, S*cap)
+            S, cap = self.n_shards, self._mirrors[0].cap
+            # block column s*cap + j  ->  global row j*S + s; dead slots
+            # land at ids >= head and are trimmed
+            arr = np.ascontiguousarray(
+                blk.reshape(-1, S, cap).transpose(0, 2, 1)
+                .reshape(-1, S * cap)[:, :self._head])
+            self.host_order_bytes += arr.nbytes
+            parts.append(arr)
+        d_tail, _ = self._tail_bounds(rep_q)
+        if d_tail is not None:
+            parts.append(np.asarray(d_tail))
         if not parts:
             q_n = np.asarray(queries_raw).shape[0]
             return np.empty((q_n, 0), np.float32)
-        return np.concatenate(parts, axis=1)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts,
+                                                               axis=1)
 
     def candidates(self, queries_raw, k: int) -> np.ndarray:
         """(Q, k) global candidate frontier: sharded local top-k + gather
-        over the head, host top-k over the tail, host merge."""
+        over the mirrors, host top-k over the tail, host merge."""
         from repro.core.engine import merge_topk_numpy
         self._sync()
         rep_q = self.encoder.encode(jnp.asarray(queries_raw, jnp.float32))
         ds, idxs = [], []
-        if self._head_rep is not None:
-            d, i = repr_topk_sharded(self.encoder, rep_q, self._head_rep,
-                                     self.mesh, k=k, pairwise=self._pw)
+        if self._mirrors is not None:
+            mt = self._mirror_tree()
+            fn = _rr_topk_fn(self.mesh, self._pw, int(k), self.n_shards,
+                             *_rep_specs(rep_q, mt))
+            d, i = fn(rep_q, mt, jnp.int32(self._mirrors[0].per_live))
             ds.append(np.asarray(d))
             idxs.append(np.asarray(i, np.int64))
-        if self._tail_rep is not None:
-            d_tail = np.asarray(self._pw(rep_q, self._tail_rep))
+        d_tail, tail_ids = self._tail_bounds(rep_q)
+        if d_tail is not None:
+            d_tail = np.asarray(d_tail)
             ds.append(d_tail)
-            idxs.append(np.broadcast_to(
-                np.arange(self._head, self.store.n, dtype=np.int64),
-                d_tail.shape).copy())
+            idxs.append(np.broadcast_to(tail_ids, d_tail.shape).copy())
         if not ds:                       # empty corpus: no candidates yet
             q_n = np.asarray(queries_raw).shape[0]
             return np.empty((q_n, 0), np.int64)
@@ -490,20 +819,61 @@ class ShardedRepSweep:
         _, out_i = merge_topk_numpy(d_all, i_all, min(k, d_all.shape[1]))
         return out_i
 
+    def candidate_stream(self, queries_raw) -> DeviceOrderedStream:
+        """Device-ordered exact candidate frontier: the blocked mirror
+        bounds and the tail bounds are concatenated and lexsorted by
+        (bound, global id) ON DEVICE — no (Q, N) host matrix, no host
+        argsort.  The stream yields global ids directly."""
+        self._sync()
+        qs = np.asarray(queries_raw, np.float32)
+        if qs.ndim == 1:
+            qs = qs[None]
+        rep_q = self.encoder.encode(jnp.asarray(qs))
+        bparts, iparts = [], []
+        if self._mirrors is not None:
+            bparts.append(self._rr_bounds(rep_q))
+            cap = self._mirrors[0].cap
+            S = self.n_shards
+            # block column s*cap + j holds global row j*S + s (dead
+            # slots get ids >= head but their bounds are +inf, so the
+            # finite-frontier cursor never reaches them)
+            iparts.append((np.arange(cap, dtype=np.int64)[None, :] * S
+                           + np.arange(S, dtype=np.int64)[:, None])
+                          .reshape(-1))
+        d_tail, tail_ids = self._tail_bounds(rep_q)
+        if d_tail is not None:
+            bparts.append(d_tail)
+            iparts.append(tail_ids)
+        if not bparts:
+            return DeviceOrderedStream.empty(qs.shape[0])
+        b = (bparts[0] if len(bparts) == 1
+             else jnp.concatenate([jnp.asarray(p, jnp.float32)
+                                   for p in bparts], axis=1))
+        return _order_stream(b, np.concatenate(iparts), width=self.store.n)
+
     # -- device-resident verification -------------------------------------
     def shard_ranges(self):
-        """Contiguous row ranges of the device head — identical to the
-        snapshot raw manifest's per-host ranges for the same shard count
-        (``store.snapshot._shard_ranges``)."""
+        """Contiguous row ranges of the device head — the SNAPSHOT raw
+        manifest's per-host unit (``store.snapshot._shard_ranges``).
+        This is deliberately NOT the device mirror layout (see
+        ``mirror_layout`` / ``owned_rows``): on-disk shards stay
+        contiguous, device placement is round-robin, and results are
+        identical either way."""
         from repro.store.snapshot import _shard_ranges
         return _shard_ranges(self._head, self.n_shards)
+
+    def owned_rows(self, shard: int) -> np.ndarray:
+        """Global row ids resident on ``shard`` under the round-robin
+        mirror layout (row ``i`` -> shard ``i % n_shards``)."""
+        return np.arange(shard, self._head, self.n_shards, dtype=np.int64)
 
     def make_dist_fn(self, queries_raw):
         """Device-resident verification closure for one query batch:
         ``dist(q_idx, cand) -> (Qa, B)`` true d_ED of candidate row ids,
         computed per shard through the multi-query euclid kernel over
-        the raw device mirror — raw rows never move device->host.  The
-        contract matches ``core.engine.topk_verify``'s ``dist_fn``."""
+        the round-robin raw mirror — raw rows never move device->host.
+        The contract matches ``core.engine.topk_verify``'s
+        ``dist_fn``."""
         if not self.mirror_raw:
             raise ValueError("ShardedRepSweep was built without "
                              "mirror_raw=True; no raw device mirror to "
@@ -525,10 +895,11 @@ class ShardedRepSweep:
             full = np.full((q_n, cand.shape[1]), -1, np.int64)
             full[aq] = cand
             out = np.full(full.shape, np.inf, np.float32)
-            if self._raw_head is not None and \
+            if self._raw_mirror is not None and \
                     ((full >= 0) & (full < head)).any():
-                out = np.minimum(out, cand_dists_rows_sharded(
-                    self._raw_head, q_dev, full, self.mesh))
+                out = np.minimum(out, cand_dists_rows_rr(
+                    self._raw_mirror.buf, q_dev, full, self.mesh,
+                    self.n_shards, self._raw_mirror.per_live))
             if self.store.n > head and (full >= head).any():
                 out = np.minimum(out, _host_cand_dists_rows(
                     self.store.data[head:], head, qs, full))
@@ -545,16 +916,19 @@ def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
 
     Builds (or adopts) a ``repro.store.SymbolicStore``, runs one sharded
     encode pass over ``dataset``, and returns a ``core.engine.MatchEngine``
-    whose representation distances come from the sharded sweep
-    (``repr_distances_sharded`` for exact top-k, ``repr_topk_sharded``
-    candidates — collective volume O(Q*k*shards) — for approximate) before
-    raw verification against the store.
+    whose exact top-k orders candidates ON DEVICE
+    (``ShardedRepSweep.candidate_stream`` — the (Q, N) bound matrix
+    never reaches the host) and whose approximate top-k uses the sharded
+    candidate frontier (collective volume O(Q*k*shards)) before raw
+    verification against the store.
 
     The engine supports ingest-while-serving: ``engine.ingest(rows)``
-    encodes only the new chunk (sharded) and re-shards the device mirror
-    without re-encoding old rows; the next query serves the new rows.
-    With ``verify="device"`` the raw mirror is kept in sync by the same
-    incremental device-append, so ingest never re-uploads old rows.
+    encodes only the new chunk (sharded) and appends it to the
+    round-robin device mirrors without touching resident rows —
+    per-append cost is O(chunk) regardless of corpus size; the next
+    query serves the new rows.  With ``verify="device"`` the raw mirror
+    is kept in sync by the same O(chunk) append, so ingest never
+    re-uploads old rows.
 
     ``store``: a ``SymbolicStore`` (adopted as-is; ``dataset`` may be None
     to serve its existing rows), a legacy ``RawStore`` (its cost model AND
@@ -595,6 +969,7 @@ def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
                          verify=verify, pairwise=pairwise,
                          repr_fn=sweep.repr_distances,
                          cand_fn=sweep.candidates,
+                         stream_factory=sweep.candidate_stream,
                          dist_factory=(sweep.make_dist_fn
                                        if device_verify else None))
     engine.sweep = sweep
@@ -612,17 +987,21 @@ class ShardedWindowSweep:
       store, so stride > 1 and ragged T (already folded into the window
       geometry by ``WindowView``) and any non-shard-divisible window
       count are handled by the same head/tail split, and window appends
-      refresh the mirror incrementally.
+      refresh the round-robin mirrors in O(chunk).
+    * ``candidate_stream`` is the inner sweep's device-ordered stream:
+      window-representation rows ARE window ids, so the exact subsequence
+      path feeds ``topk_verify`` without a host (Q, n_windows) matrix.
     * ``make_dist_fn`` verifies candidate WINDOWS device-side: the
-      SOURCE long rows are mirrored on device, sharded by the same
-      contiguous row ranges the snapshot raw manifest uses; each shard
-      slices and z-normalizes its own rows' windows (the same
-      ``core.normalize.znormalize`` the host fetch path applies) and
-      distances them through the multi-query euclid kernel
-      (:func:`cand_dists_windows_sharded`).  Window values never
-      materialize on the host; rows of the tail remainder are distanced
-      host-side through the same kernel.
+      SOURCE long rows are mirrored round-robin on device (row ``i`` on
+      shard ``i % n_shards``); each shard slices and z-normalizes its
+      own rows' windows (the same ``core.normalize.znormalize`` the host
+      fetch path applies) and distances them through the multi-query
+      euclid kernel (:func:`cand_dists_windows_rr`).  Window values
+      never materialize on the host; rows of the tail remainder are
+      distanced host-side through the same kernel.
     """
+
+    mirror_layout = "round_robin"
 
     def __init__(self, view, mesh: Mesh, *, mirror_raw: bool = True):
         self.view = view
@@ -631,27 +1010,46 @@ class ShardedWindowSweep:
         self.axes = self.rep_sweep.axes
         self.n_shards = self.rep_sweep.n_shards
         self.mirror_raw = bool(mirror_raw)
-        self._raw_head = None            # device mirror of SOURCE rows
+        self._raw_mirror = None          # RoundRobinMirror of SOURCE rows
         self._head_rows = 0
         self._rows_synced = -1
 
     def repr_distances(self, queries_z) -> np.ndarray:
         """(Q, n_windows) lower-bound matrix for already z-normalized
-        queries — sharded sweep over the window-representation head,
-        host sweep over the remainder."""
+        queries — host matrix path (exclusion re-sweeps mutate it); the
+        exact non-exclusion path uses ``candidate_stream``."""
         return self.rep_sweep.repr_distances(queries_z)
 
+    def candidate_stream(self, queries_z) -> DeviceOrderedStream:
+        """Device-ordered window candidate stream (global window ids)."""
+        return self.rep_sweep.candidate_stream(queries_z)
+
+    @property
+    def h2d_bytes(self) -> int:
+        total = self.rep_sweep.h2d_bytes
+        if self._raw_mirror is not None:
+            total += self._raw_mirror.h2d_bytes
+        return total
+
+    @property
+    def host_order_bytes(self) -> int:
+        return self.rep_sweep.host_order_bytes
+
     def _sync_raw(self):
-        """Incremental device mirror of the source rows (append-only
-        corpus: a row-count check is a complete freshness test)."""
+        """Incremental round-robin mirror of the source rows
+        (append-only corpus: a row-count check is a complete freshness
+        test)."""
         n_rows = self.view.n_rows
         if n_rows == self._rows_synced:
             return
         head = (n_rows // self.n_shards) * self.n_shards
         if head != self._head_rows:
-            self._raw_head = _mirror_rows(
-                self.mesh, self.axes, self._raw_head,
-                self.view.source.data, self._head_rows, head)
+            if self._raw_mirror is None:
+                self._raw_mirror = RoundRobinMirror(self.mesh,
+                                                    self.n_shards)
+            self._raw_mirror.append(
+                np.asarray(self.view.source.data[self._head_rows:head],
+                           np.float32))
             self._head_rows = head
         self._rows_synced = n_rows
 
@@ -680,10 +1078,12 @@ class ShardedWindowSweep:
             full = np.full((q_n, cand.shape[1]), -1, np.int64)
             full[aq] = cand
             out = np.full(full.shape, np.inf, np.float32)
-            if self._raw_head is not None and \
+            if self._raw_mirror is not None and \
                     ((full >= 0) & (full < head_wid)).any():
-                out = np.minimum(out, cand_dists_windows_sharded(
-                    self._raw_head, q_dev, full, self.mesh,
+                out = np.minimum(out, cand_dists_windows_rr(
+                    self._raw_mirror.buf, q_dev, full, self.mesh,
+                    n_shards=self.n_shards,
+                    per_live=self._raw_mirror.per_live,
                     nw=nw, stride=stride, m=m, head_rows=head_rows))
             if view.n_rows > head_rows and (full >= head_wid).any():
                 out = np.minimum(out, _host_cand_dists_windows(

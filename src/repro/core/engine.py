@@ -182,7 +182,8 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
                 merge: Callable = merge_topk_numpy,
                 init_d=None, init_i=None, col_ids=None,
                 dist_fn: Optional[Callable] = None,
-                on_verified: Optional[Callable] = None) -> TopKResult:
+                on_verified: Optional[Callable] = None,
+                stream=None) -> TopKResult:
     """Exact top-k under d_ED for a query batch given lower-bounding
     representation distances (Q, N).  See the module docstring for the
     correctness argument.
@@ -212,17 +213,34 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     fired once per verification round per active query with exactly the
     (dataset/window ids, true distances) that round verified — the hook
     exclusion widening uses to accumulate the every-id-verified-once
-    frontier (``repro.subseq.SubseqEngine``)."""
+    frontier (``repro.subseq.SubseqEngine``).
+
+    ``stream``: optional device-ordered candidate stream
+    (``core.distributed.DeviceOrderedStream`` duck type: ``peek() ->
+    (Q,) next unverified bound``, ``take(aq, batch) -> (len(aq), batch)
+    GLOBAL ids, -1-padded, self-advancing``, ``width``) replacing
+    ``repr_dists`` entirely — the (Q, N) bound matrix then never
+    materializes on the host.  The stream already yields dataset ids,
+    so it is mutually exclusive with ``col_ids``; the verification
+    schedule is identical to the matrix path when the stream's order is
+    (bound, id)-sorted, and the result is exact for ANY valid-bound
+    order."""
     qs = np.asarray(queries_raw)        # native dtype: the host verifier
     if qs.ndim == 1:                    # stays bit-identical to brute force
         qs = qs[None]
-    rd = np.asarray(repr_dists)
-    if rd.ndim == 1:
-        rd = rd[None]
-    q_n, n = rd.shape
-    if col_ids is not None:
-        col_ids = np.asarray(col_ids, np.int64)
-        assert col_ids.shape == (n,), (col_ids.shape, n)
+    if stream is not None:
+        assert repr_dists is None and col_ids is None, \
+            "stream replaces the bound matrix and yields global ids"
+        rd = None
+        q_n, n = qs.shape[0], int(stream.width)
+    else:
+        rd = np.asarray(repr_dists)
+        if rd.ndim == 1:
+            rd = rd[None]
+        q_n, n = rd.shape
+        if col_ids is not None:
+            col_ids = np.asarray(col_ids, np.int64)
+            assert col_ids.shape == (n,), (col_ids.shape, n)
 
     init_w = 0
     if init_d is not None:
@@ -243,34 +261,44 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
                           raw_accesses=np.zeros(q_n, np.int64),
                           pruned_fraction=np.ones(q_n),
                           store_accesses=0, store_fetches=0, io_seconds=0.0)
-    order = np.argsort(rd, axis=1, kind="stable")
-    sorted_d = np.take_along_axis(rd, order, axis=1)
-    # +inf bounds mark non-candidates (e.g. another query's rows in a
-    # sparse sweep, or already-seeded members): they must never enter a
-    # verification batch, even as over-fetch — a seeded member verified
-    # again would enter the merge twice
-    n_fin = np.isfinite(rd).sum(axis=1)
+    if stream is None:
+        order = np.argsort(rd, axis=1, kind="stable")
+        sorted_d = np.take_along_axis(rd, order, axis=1)
+        # +inf bounds mark non-candidates (e.g. another query's rows in a
+        # sparse sweep, or already-seeded members): they must never enter a
+        # verification batch, even as over-fetch — a seeded member verified
+        # again would enter the merge twice
+        n_fin = np.isfinite(rd).sum(axis=1)
     pos = np.zeros(q_n, np.int64)
     acc = np.zeros(q_n, np.int64)
     start_acc, start_fetch = store.accesses, store.fetches
 
     while True:
-        nxt = sorted_d[np.arange(q_n), np.minimum(pos, n - 1)]
         # >= (not >): a candidate whose bound ties the k-th best verified
         # distance may tie it in true distance too and then win on the
         # smaller dataset index — it must be verified, not pruned.  The
         # finite guard keeps +inf-bound candidates (e.g. the masked rows
-        # of a seeded index sweep) out of the scan entirely.
-        active = (pos < n) & np.isfinite(nxt) & (front_d[:, -1] >= nxt)
+        # of a seeded index sweep) out of the scan entirely; a stream
+        # peeks +inf past its finite frontier, so the guard doubles as
+        # its exhaustion check.
+        if stream is None:
+            nxt = sorted_d[np.arange(q_n), np.minimum(pos, n - 1)]
+            active = (pos < n) & np.isfinite(nxt) & (front_d[:, -1] >= nxt)
+        else:
+            nxt = stream.peek()
+            active = np.isfinite(nxt) & (front_d[:, -1] >= nxt)
         if not active.any():
             break
         aq = np.nonzero(active)[0]
-        cand = np.full((len(aq), batch_size), -1, np.int64)
-        for r, qi in enumerate(aq):
-            c = order[qi, pos[qi]:min(pos[qi] + batch_size, n_fin[qi])]
-            cand[r, :len(c)] = c
-        if col_ids is not None:          # column -> dataset row translation
-            cand = np.where(cand >= 0, col_ids[cand], -1)
+        if stream is None:
+            cand = np.full((len(aq), batch_size), -1, np.int64)
+            for r, qi in enumerate(aq):
+                c = order[qi, pos[qi]:min(pos[qi] + batch_size, n_fin[qi])]
+                cand[r, :len(c)] = c
+            if col_ids is not None:      # column -> dataset row translation
+                cand = np.where(cand >= 0, col_ids[cand], -1)
+        else:                            # global ids straight off device
+            cand = np.asarray(stream.take(aq, batch_size), np.int64)
         mask = cand >= 0
         if dist_fn is not None:          # device-resident: no host fetch
             d = np.asarray(dist_fn(aq, cand))
@@ -291,7 +319,8 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
         front_i[aq] = new_i
         n_real = mask.sum(axis=1)
         acc[aq] += n_real
-        pos[aq] += n_real
+        if stream is None:               # a stream advances its own cursor
+            pos[aq] += n_real
 
     total = store.accesses - start_acc
     n_fetch = store.fetches - start_fetch
@@ -414,6 +443,13 @@ class MatchEngine:
                 (queries_raw -> (Q, N)); used by the sharded service.
     cand_fn:    override for approximate candidates
                 (queries_raw, k -> (Q, k) indices).
+    stream_factory: override producing a device-ordered candidate
+                stream for exact top-k (queries_raw ->
+                ``distributed.DeviceOrderedStream``); when set, the
+                linear sweep and the index source feed ``topk_verify``
+                through the stream — the (Q, N) bound matrix never
+                materializes on the host.  Wired by
+                ``core.distributed.make_engine_service``.
 
     Candidate sources: exact ``topk`` consumes candidates from a
     ``repro.index.candidates.CandidateSource``.  The default is the
@@ -428,7 +464,8 @@ class MatchEngine:
                  rep=None, repr_fn: Callable | None = None,
                  cand_fn: Callable | None = None,
                  device_merge: bool = False,
-                 dist_factory: Callable | None = None):
+                 dist_factory: Callable | None = None,
+                 stream_factory: Callable | None = None):
         self.encoder = encoder
         self.store = store
         self.batch_size = batch_size
@@ -449,6 +486,7 @@ class MatchEngine:
         self._pw = pairwise or encoder.pairwise_distance
         self._repr_fn = repr_fn
         self._cand_fn = cand_fn
+        self._stream_factory = stream_factory
         self._sym = store if hasattr(store, "rep_view") else None
         if self._sym is not None and self._sym.encoder != encoder:
             raise ValueError("SymbolicStore was built for a different "
@@ -510,12 +548,14 @@ class MatchEngine:
 
     def index_source(self):
         """The backing store's split-tree index as a candidate source
-        (``store.build_index()`` first)."""
+        (``store.build_index()`` first).  With a ``stream_factory``
+        present the tree's union bounds are device-ordered too
+        (``device_order=True``)."""
         idx = getattr(self.store, "index", None)
         if idx is None:
             raise ValueError("store has no index; call "
                              "store.build_index() first")
-        return idx.source()
+        return idx.source(device_order=self._stream_factory is not None)
 
     # -- matching --------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exact: bool = True,
@@ -539,7 +579,8 @@ class MatchEngine:
         if exact:
             from repro.index.candidates import LinearSweep, topk_from_source
             if source is None:
-                source = LinearSweep(self.repr_distances)
+                source = LinearSweep(self.repr_distances,
+                                     stream_fn=self._stream_factory)
             elif source == "index":
                 source = self.index_source()
             total = getattr(self.store, "n", None)

@@ -40,14 +40,19 @@ from repro.index.tree import SplitTree
 
 @dataclass
 class CandidateSet:
-    """What a source hands the verification scan."""
+    """What a source hands the verification scan.
 
-    bounds: np.ndarray                 # (Q, C) d_ED lower bounds
+    Either ``bounds`` (host matrix; ``col_ids`` maps columns to dataset
+    ids) or ``stream`` (a ``core.distributed.DeviceOrderedStream`` —
+    device-ordered global ids, no host matrix) is set, never both."""
+
+    bounds: Optional[np.ndarray]       # (Q, C) d_ED lower bounds
     col_ids: Optional[np.ndarray]      # (C,) dataset id per column
                                        # (None: column j IS row j)
     init_d: Optional[np.ndarray] = None  # (Q, <=k) pre-verified frontier
     init_i: Optional[np.ndarray] = None
     seed_res: Optional[object] = None  # TopKResult of the seed phase
+    stream: Optional[object] = None    # device-ordered candidate stream
 
 
 @runtime_checkable
@@ -62,13 +67,22 @@ class CandidateSource(Protocol):
 
 
 class LinearSweep:
-    """The full lower-bound sweep as a candidate source."""
+    """The full lower-bound sweep as a candidate source.
 
-    def __init__(self, repr_fn: Callable):
+    ``stream_fn`` (queries_raw -> device-ordered stream) replaces the
+    host (Q, N) matrix with a ``DeviceOrderedStream`` — same candidates
+    in the same (bound, id) order, zero host materialization."""
+
+    def __init__(self, repr_fn: Callable,
+                 stream_fn: Optional[Callable] = None):
         self._repr_fn = repr_fn       # queries_raw -> (Q, N) bounds
+        self._stream_fn = stream_fn
 
     def candidate_bounds(self, queries_raw, k: int,
                          verify: Callable) -> CandidateSet:
+        if self._stream_fn is not None:
+            return CandidateSet(bounds=None, col_ids=None,
+                                stream=self._stream_fn(queries_raw))
         return CandidateSet(bounds=np.asarray(self._repr_fn(queries_raw)),
                             col_ids=None)
 
@@ -90,12 +104,20 @@ class TreeCandidates:
     ``min(k, |verified|)`` of the accumulated verified set: a seen id
     outside that frontier is dominated by >= k verified better ids and
     can never re-enter the top-k.
+
+    ``device_order=True`` sorts the compact union bounds by (bound, id)
+    on device and hands the scan a ``DeviceOrderedStream`` of dataset
+    ids instead of the host (bounds, col_ids) pair — results are
+    identical (exactness holds for any valid-bound order; the f64
+    bounds are rounded downward to f32, staying valid lower bounds).
     """
 
     def __init__(self, tree: SplitTree, query_features: Callable, *,
-                 prior_d=None, prior_i=None, seen=None):
+                 prior_d=None, prior_i=None, seen=None,
+                 device_order: bool = False):
         self.tree = tree
         self._query_features = query_features
+        self._device_order = bool(device_order)
         # prior and seen travel together: seen ids without their verified
         # frontier cannot be excluded exactly (their distances are lost),
         # and a seeded frontier without the seen set would be re-collected
@@ -183,6 +205,12 @@ class TreeCandidates:
         bounds = np.full((q_n, union.size), np.inf, np.float64)
         for r in range(q_n):
             bounds[r, np.searchsorted(union, all_ids[r])] = all_lbs[r]
+        if self._device_order and union.size:
+            from repro.core.distributed import host_order_stream
+            return CandidateSet(bounds=None, col_ids=None,
+                                stream=host_order_stream(bounds, union),
+                                init_d=merged_d, init_i=merged_i,
+                                seed_res=seed_res)
         return CandidateSet(bounds=bounds, col_ids=union,
                             init_d=merged_d,
                             init_i=merged_i, seed_res=seed_res)
@@ -223,10 +251,13 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
     res = topk_verify(qs, cs.bounds, store, k=k, batch_size=batch_size,
                       verifier=verifier, merge=merge, col_ids=cs.col_ids,
                       init_d=cs.init_d, init_i=cs.init_i,
-                      dist_fn=dist_fn, on_verified=on_verified)
-    n = cs.bounds.shape[1] if total is None else int(total)
+                      dist_fn=dist_fn, on_verified=on_verified,
+                      stream=cs.stream)
+    width = (int(cs.stream.width) if cs.stream is not None
+             else cs.bounds.shape[1])
+    n = width if total is None else int(total)
     if cs.seed_res is None:
-        if total is None or n == cs.bounds.shape[1] or n == 0:
+        if total is None or n == width or n == 0:
             return res
         return TopKResult(
             indices=res.indices, distances=res.distances,

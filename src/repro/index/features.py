@@ -116,7 +116,32 @@ class FeatureAdapter:
 
     def features(self, rows) -> np.ndarray:
         """(N, T) raw rows -> (N, D) float32 features (row-wise map, so
-        chunked computation is bit-identical to one-shot)."""
+        chunked computation is bit-identical to one-shot).
+
+        Split into a pure device map (``_device_features``) and host
+        assembly (``_assemble``) so the sharded bulk build
+        (``features_sharded``) runs the exact same per-row computation —
+        the two paths are bit-identical by construction."""
+        return self._assemble(self._device_features(rows))
+
+    def features_sharded(self, rows, mesh) -> np.ndarray:
+        """``features`` with the device map sharded row-wise over the
+        mesh data axes (``core.distributed.rowwise_sharded``).
+        Bit-identical to the host path: the per-row map cannot depend on
+        which shard a row landed in, and assembly stays on host."""
+        from repro.core.distributed import rowwise_sharded
+        return self._assemble(
+            rowwise_sharded(self, "_device_features", rows, mesh))
+
+    def _device_features(self, rows):
+        """Pure row-wise jax map: (N, T) raw rows -> device feature
+        pytree (leaves all lead with the N axis)."""
+        raise NotImplementedError
+
+    def _assemble(self, parts) -> np.ndarray:
+        """Host assembly of ``_device_features`` output into the (N, D)
+        float32 feature matrix (casts / concats / host-f64 transforms
+        that must not move onto the device for bit-identity)."""
         raise NotImplementedError
 
     def member_lb(self, qf: np.ndarray, feats: np.ndarray) -> np.ndarray:
@@ -133,12 +158,14 @@ class SAXFeatures(FeatureAdapter):
         super().__init__(T, [T / W] * W, [sd] * W, [0] * W, encoder)
         self.W = int(W)
 
-    def features(self, rows) -> np.ndarray:
+    def _device_features(self, rows):
         import jax.numpy as jnp
         from repro.core.paa import paa
         self._require_encoder()
-        return np.asarray(paa(jnp.asarray(rows, jnp.float32), self.W),
-                          np.float32)
+        return paa(jnp.asarray(rows, jnp.float32), self.W)
+
+    def _assemble(self, parts) -> np.ndarray:
+        return np.asarray(parts, np.float32)
 
 
 class SSAXFeatures(FeatureAdapter):
@@ -152,10 +179,13 @@ class SSAXFeatures(FeatureAdapter):
                          [0] * L + [1] * W, encoder)
         self.L, self.W = int(L), int(W)
 
-    def features(self, rows) -> np.ndarray:
+    def _device_features(self, rows):
         import jax.numpy as jnp
         enc = self._require_encoder()
-        sigma, resbar = enc.features(jnp.asarray(rows, jnp.float32))
+        return enc.features(jnp.asarray(rows, jnp.float32))
+
+    def _assemble(self, parts) -> np.ndarray:
+        sigma, resbar = parts
         return np.concatenate([np.asarray(sigma, np.float32),
                                np.asarray(resbar, np.float32)], axis=1)
 
@@ -189,10 +219,15 @@ class TSAXFeatures(FeatureAdapter):
         self.W = int(W)
         self.scale = _trend_scale(T)
 
-    def features(self, rows) -> np.ndarray:
+    def _device_features(self, rows):
         import jax.numpy as jnp
         enc = self._require_encoder()
-        phi, resbar = enc.features(jnp.asarray(rows, jnp.float32))
+        return enc.features(jnp.asarray(rows, jnp.float32))
+
+    def _assemble(self, parts) -> np.ndarray:
+        phi, resbar = parts
+        # slope transform stays host-f64: tan in f32 on device would
+        # drift the stored features by ulps vs the incremental path
         u = self.scale * np.tan(np.asarray(phi, np.float64))
         return np.concatenate([u[:, None].astype(np.float32),
                                np.asarray(resbar, np.float32)], axis=1)
@@ -213,10 +248,13 @@ class STSAXFeatures(FeatureAdapter):
         self.L, self.W = int(L), int(W)
         self.scale = _trend_scale(T)
 
-    def features(self, rows) -> np.ndarray:
+    def _device_features(self, rows):
         import jax.numpy as jnp
         enc = self._require_encoder()
-        phi, sigma, resbar = enc.features(jnp.asarray(rows, jnp.float32))
+        return enc.features(jnp.asarray(rows, jnp.float32))
+
+    def _assemble(self, parts) -> np.ndarray:
+        phi, sigma, resbar = parts
         u = self.scale * np.tan(np.asarray(phi, np.float64))
         return np.concatenate([u[:, None].astype(np.float32),
                                np.asarray(sigma, np.float32),

@@ -44,6 +44,49 @@ def split_dim_for(tree: SplitTree, bits: np.ndarray) -> Optional[int]:
     return int(refinable[order[0]])
 
 
+def root_addresses(tree: SplitTree, feats: np.ndarray,
+                   n_groups: int) -> np.ndarray:
+    """Deterministic root-subtree address of each feature row after
+    ``ceil(log2(n_groups))`` top-level splits — the sharded bulk build's
+    partition key (:meth:`SplitTree.insert_grouped`).
+
+    Simulates the split cascade an empty tree would perform at the root:
+    the split dimension at each depth is :func:`split_dim_for` of the
+    accumulated bit state (a function of the bit state ALONE, never of
+    the members), and the branch a row takes is the one new bit its
+    symbol gains when that dimension's cardinality doubles.
+
+    Why the branch extraction is exact: the Gaussian quantile breakpoints
+    at cardinalities 2^b and 2^(b+1) nest BITWISE.  Break j of the
+    2^b-grid is the quantile at j / 2^b, and (2j) / 2^(b+1) == j / 2^b
+    exactly in IEEE arithmetic (division by a power of two only shifts
+    the exponent), so ``ndtri_np`` — a deterministic elementwise map —
+    produces the identical float64, ``gauss_breaks``' scaling by ``sd``
+    is the same multiplication, and ``searchsorted(side="right")``
+    against the finer grid therefore refines every coarse cell by
+    exactly one new (odd-index) breakpoint.  Hence
+
+        symbols(f, dim, b + 1) == 2 * symbols(f, dim, b) + branch,
+
+    with branch in {0, 1} — the subtraction below recovers the branch
+    bit exactly, never approximately.
+    """
+    feats = np.asarray(feats, np.float32)
+    depth = max(int(np.ceil(np.log2(max(n_groups, 1)))), 0)
+    bits = np.zeros(tree.D, np.int64)
+    addr = np.zeros(feats.shape[0], np.int64)
+    for _ in range(depth):
+        dim = split_dim_for(tree, bits)
+        if dim is None:               # alphabet exhausted at the root
+            break
+        b = int(bits[dim])
+        branch = tree.symbols(feats, dim, b + 1) \
+            - 2 * tree.symbols(feats, dim, b)
+        addr = addr * 2 + branch
+        bits[dim] += 1
+    return addr
+
+
 def route(tree: SplitTree, node: TreeNode, ids: np.ndarray):
     """Push member ids into ``node``'s subtree, splitting overfull
     leaves.  ``ids`` must already be present in ``tree.feats``."""

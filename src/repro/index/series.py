@@ -46,14 +46,49 @@ class SeriesIndex:
 
     # -- construction ----------------------------------------------------
     @classmethod
-    def from_store(cls, store, *, leaf_fill: int = 64,
-                   max_bits: int = 8) -> "SeriesIndex":
+    def from_store(cls, store, *, leaf_fill: int = 64, max_bits: int = 8,
+                   mesh=None, n_shards: int = None) -> "SeriesIndex":
         """Index every row of a ``SymbolicStore`` (or any object with
         raw ``.data``) — the bulk build is just ``insert_rows`` over the
-        existing rows, the same code path appends keep using."""
+        existing rows, the same code path appends keep using.
+
+        ``mesh`` shards feature extraction row-wise across its data axes
+        (``FeatureAdapter.features_sharded``); ``n_shards`` (default:
+        the mesh's data-axis device count) additionally partitions the
+        tree routing by root subtree (``SplitTree.insert_grouped``).
+        Both paths are bit-identical to the single-host incremental
+        build — leaf membership, boxes and split history included."""
         idx = cls(store.encoder, leaf_fill=leaf_fill, max_bits=max_bits)
-        idx.insert_rows(store.data)
+        if mesh is None and (n_shards is None or n_shards <= 1):
+            idx.insert_rows(store.data)
+        else:
+            idx.bulk_load(store.data, mesh=mesh, n_shards=n_shards)
         return idx
+
+    def bulk_load(self, rows, *, mesh=None, n_shards: int = None
+                  ) -> np.ndarray:
+        """Sharded bulk build: features on device across ``mesh``'s data
+        axes, tree routing partitioned into ``n_shards`` root subtrees.
+        Chunked like ``insert_rows`` (row-wise maps make chunking
+        bit-identical); returns the new ids in insertion order."""
+        if n_shards is None:
+            n_shards = 1
+            if mesh is not None:
+                from repro.core.distributed import _data_axes
+                for a in _data_axes(mesh):
+                    n_shards *= mesh.shape[a]
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.shape[0] == 0:
+            return np.empty(0, np.int64)
+        out = []
+        for c0 in range(0, rows.shape[0], _INSERT_CHUNK):
+            chunk = rows[c0:c0 + _INSERT_CHUNK]
+            feats = (self.adapter.features_sharded(chunk, mesh)
+                     if mesh is not None else self.adapter.features(chunk))
+            out.append(self.tree.insert_grouped(feats, max(n_shards, 1)))
+        return np.concatenate(out)
 
     def insert_rows(self, rows) -> np.ndarray:
         """Compute features of new rows (chunked — features are row-wise
@@ -97,14 +132,17 @@ class SeriesIndex:
             qs = qs[None]
         return self.adapter.features(qs)
 
-    def source(self, *, prior_d=None, prior_i=None,
-               seen=None) -> TreeCandidates:
+    def source(self, *, prior_d=None, prior_i=None, seen=None,
+               device_order: bool = False) -> TreeCandidates:
         """This index as a ``CandidateSource`` for the match engine.
         ``prior_d`` / ``prior_i`` / ``seen`` enable frontier reuse across
         exclusion-widening rounds (see ``TreeCandidates``): already
-        verified ids are seeded, never verified twice."""
+        verified ids are seeded, never verified twice.  ``device_order``
+        sorts the compact candidate bounds on device and streams ids to
+        the scan instead of handing it a host matrix."""
         return TreeCandidates(self.tree, self.query_features,
-                              prior_d=prior_d, prior_i=prior_i, seen=seen)
+                              prior_d=prior_d, prior_i=prior_i, seen=seen,
+                              device_order=device_order)
 
     def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
              verifier=None, merge=None, dist_fn=None, on_verified=None,

@@ -133,6 +133,50 @@ class SplitTree:
         route(self, self.root, ids)
         return ids
 
+    def insert_grouped(self, feats, n_groups: int) -> np.ndarray:
+        """Bulk insert partitioned by root-subtree address — the sharded
+        build path (``insert.root_addresses`` is the partition key each
+        host/device would own).  Groups are routed one root subtree at a
+        time; because the tree after any insert sequence is a pure
+        function of the feature multiset (:mod:`repro.index.insert`),
+        the structure equals the in-order bulk build, and sorting each
+        leaf's ids afterwards (``_canonicalize_leaves``) restores the
+        only order-dependent state — id order within a leaf — to what
+        the in-order build produces (ascending).  Returns the ids in
+        insertion order, same contract as ``insert``."""
+        from repro.index.insert import root_addresses, route
+        feats = np.asarray(feats, np.float32)
+        if feats.ndim == 1:
+            feats = feats[None]
+        if feats.shape[-1] != self.D:
+            raise ValueError(f"features have {feats.shape[-1]} dims, "
+                             f"adapter has D={self.D}")
+        m = feats.shape[0]
+        if m == 0:
+            return np.empty(0, np.int64)
+        self._grow(self._n + m)
+        self._feats[self._n:self._n + m] = feats
+        ids = np.arange(self._n, self._n + m, dtype=np.int64)
+        self._n += m
+        addr = root_addresses(self, feats, n_groups)
+        for a in np.unique(addr):
+            route(self, self.root, ids[addr == a])
+        self._canonicalize_leaves()
+        return ids
+
+    def _canonicalize_leaves(self):
+        """Sort every leaf's member ids ascending — the canonical order
+        the in-order incremental build produces (ids are assigned
+        monotonically and appended in arrival order)."""
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            if node.is_leaf:
+                if node.ids.size:
+                    node.ids = np.sort(node.ids)
+            else:
+                stack.extend(node.children.values())
+
     # -- symbols ---------------------------------------------------------
     def breaks(self, dim: int, bits: int) -> np.ndarray:
         key = (dim, bits)

@@ -22,6 +22,13 @@ already multi-host shaped.  The content hash is computed over the
 LOGICAL (concatenated) arrays, so it is independent of the shard layout
 and a re-sharded save of identical data hashes identically.
 
+The on-disk contiguous ranges are a MANIFEST concept only — they are
+independent of how a serving process lays rows out on device.  In
+particular, ``core.distributed``'s sweeps mirror rows round-robin
+(row i on device i % n_shards); a snapshot saved under any ``n_hosts``
+opens into a store whose device mirrors answer bit-identically
+(tests/test_sharded_verify.py asserts it end to end).
+
 Crash safety: everything is written into ``snap_XXXX.tmp`` and renamed
 only after the manifest fsyncs, so a torn write can never produce a
 readable-but-wrong snapshot; ``open`` always follows LATEST (or an

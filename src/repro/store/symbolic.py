@@ -240,12 +240,18 @@ class SymbolicStore:
 
     # -- index ------------------------------------------------------------
     def build_index(self, *, leaf_fill: int = 64, max_bits: int = 8,
-                    leaf_capacity: Optional[int] = None):
+                    leaf_capacity: Optional[int] = None,
+                    mesh=None, n_shards: Optional[int] = None):
         """Build (and remember) a ``repro.index.SeriesIndex`` over the
         current rows — any of the four techniques.  Subsequent
         ``append`` calls maintain it incrementally (no rebuild); the
         engine consumes it via ``MatchEngine.topk(..., source="index")``.
-        ``leaf_capacity`` is a legacy alias for ``leaf_fill``."""
+        ``leaf_capacity`` is a legacy alias for ``leaf_fill``.
+
+        ``mesh`` / ``n_shards`` route the bulk build through the sharded
+        path (device feature extraction across the mesh's data axes,
+        tree routing partitioned by root subtree) — bit-identical to the
+        single-host build; see ``SeriesIndex.from_store``."""
         if not self.store_raw:
             raise TypeError("store was built with store_raw=False: index "
                             "features are derived from raw rows (index "
@@ -254,7 +260,8 @@ class SymbolicStore:
             leaf_fill = leaf_capacity
         from repro.index import SeriesIndex
         self.index = SeriesIndex.from_store(self, leaf_fill=leaf_fill,
-                                            max_bits=max_bits)
+                                            max_bits=max_bits,
+                                            mesh=mesh, n_shards=n_shards)
         return self.index
 
     # -- persistence -------------------------------------------------------

@@ -216,6 +216,16 @@ class SubseqEngine:
         dfn = self._sweep.make_dist_fn(zq) if self._device else None
         if idx is not None:
             return self._topk_indexed(zq, idx, k, exclusion, bs, acc, dfn)
+        if exclusion <= 0 and self._sweep is not None:
+            # device-ordered candidate stream: the (Q, n_windows) bound
+            # matrix never materializes on host — the suppression loop
+            # below masks host columns, so it keeps the matrix path
+            stream = self._sweep.candidate_stream(zq)
+            res = topk_verify(zq, None, self.view, k=k, batch_size=bs,
+                              verifier=self.verifier, merge=self.merge,
+                              dist_fn=dfn, stream=stream)
+            return self._wrap(res.indices, res.distances, res,
+                              int(stream.width), acc)
         rd = self.repr_distances(zq)
         nw = rd.shape[1]
         if exclusion <= 0:

@@ -62,3 +62,37 @@ def test_incremental_insert_topk_bit_identical_to_bulk(tech, splits, k):
     np.testing.assert_array_equal(r_inc.distances, r_blk.distances)
     np.testing.assert_array_equal(r_inc.indices, r_lin.indices)
     np.testing.assert_array_equal(r_inc.distances, r_lin.distances)
+
+
+@pytest.mark.parametrize("tech", sorted(ENCODERS))
+@settings(max_examples=4, deadline=None)
+@given(chunk_splits(), st.sampled_from([1, 2, 4]))
+def test_grouped_bulk_build_equals_incremental(tech, splits, n_groups):
+    """The sharded build path — root-subtree grouped routing
+    (``SplitTree.insert_grouped`` keyed by ``insert.root_addresses``) —
+    must equal BOTH the single-host bulk build and the incremental
+    chunked insert on node count and leaf membership, for every
+    encoder, arbitrary chunkings and 1/2/4 mocked hosts."""
+    from repro.index import SeriesIndex
+
+    enc = ENCODERS[tech]
+    inc = SymbolicStore(enc)
+    inc.append(D[:splits[1]])
+    inc.build_index(leaf_fill=12, max_bits=4)   # incremental reference
+    for lo, hi in zip(splits[1:-1], splits[2:]):
+        inc.append(D[lo:hi])
+    ref = inc.index.tree
+
+    # grouped bulk build through the store-facing entry point
+    bulk = SymbolicStore.from_rows(enc, D)
+    bulk.build_index(leaf_fill=12, max_bits=4, n_shards=n_groups)
+    assert bulk.index.n_nodes == inc.index.n_nodes
+    assert bulk.index.tree.leaf_membership() == ref.leaf_membership()
+
+    # grouped insert under the SAME arbitrary chunking: every chunk is
+    # partitioned by root address and routed group-by-group
+    grp = SeriesIndex(enc, leaf_fill=12, max_bits=4)
+    for lo, hi in zip(splits[:-1], splits[1:]):
+        grp.tree.insert_grouped(grp.adapter.features(D[lo:hi]), n_groups)
+    assert grp.tree.n_nodes == ref.n_nodes
+    assert grp.tree.leaf_membership() == ref.leaf_membership()

@@ -82,8 +82,16 @@ def test_device_verification_bitwise_equals_host_all_encoders_shards():
                 assert r_d.store_fetches == 0 and r_d.io_seconds == 0.0
                 head = dev.sweep._head
                 assert head == (51 // shards) * shards
+                # shard_ranges() keeps the snapshot MANIFEST semantics
+                # (contiguous on disk) while the device mirror lays
+                # rows out round-robin — two independent contracts
                 assert dev.sweep.shard_ranges() == \\
                     _shard_ranges(head, shards), (shards, name)
+                assert dev.sweep.mirror_layout == "round_robin"
+                for s in range(shards):
+                    np.testing.assert_array_equal(
+                        dev.sweep.owned_rows(s),
+                        np.arange(s, head, shards))
         print("whole-series device==host OK")
     """)
     assert "whole-series device==host OK" in out
@@ -125,6 +133,111 @@ def test_device_verification_ingest_and_approx():
         print("ingest + approx + indexed OK")
     """)
     assert "ingest + approx + indexed OK" in out
+
+
+def test_ingest_tail_rows_encoded_exactly_once():
+    """Regression for the remainder-path duplication: ragged ingests
+    must run the sharded chunk encode exactly once per ingest (the tail
+    is never re-encoded by the sweep), and the stored representation
+    stays bitwise-equal to a one-shot host encode."""
+    out = _run("""
+        from repro.core.distributed import make_engine_service
+        from repro.store.symbolic import rep_leaves
+
+        X = season_dataset(n=46, T=240, L=10, strength=0.7, seed=19)
+        Q, D1, D2 = X[:2], X[2:25], X[25:]     # 23 + 21 rows, both ragged
+        mesh = make_mesh_compat((4,), ("data",))
+        enc = encoders(240)["stsax"]
+        dev = make_engine_service(enc, None, mesh, batch_size=64)
+        calls = []
+        orig = dev.sweep._encode_chunk
+        dev.sweep._encode_chunk = \\
+            lambda rows: (calls.append(rows.shape[0]), orig(rows))[1]
+        dev.ingest(D1)
+        dev.topk(Q, k=3)                       # sweeps must not re-encode
+        dev.ingest(D2)
+        dev.topk(Q, k=3)
+        dev.topk(Q, k=3, exact=False)
+        assert calls == [23, 21], calls
+        ref = tuple(np.asarray(l) for l in rep_leaves(
+            enc.encode(jnp.asarray(np.concatenate([D1, D2])))))
+        for got, want in zip(rep_leaves(dev.store.rep_view()), ref):
+            np.testing.assert_array_equal(np.asarray(got), want)
+        print("tail encoded once OK")
+    """)
+    assert "tail encoded once OK" in out
+
+
+def test_snapshot_contiguous_save_opens_into_round_robin_mirrors():
+    """Snapshot layout independence: a store saved with contiguous
+    n_hosts=2 shards must open and answer BIT-identically when served
+    through the round-robin device mirrors (the on-disk ranges are a
+    manifest concept, not a device layout)."""
+    out = _run("""
+        import tempfile
+        from repro.core import MatchEngine
+        from repro.core.distributed import make_engine_service
+        from repro.store import SymbolicStore
+
+        X = season_dataset(n=41, T=240, L=10, strength=0.7, seed=29)
+        Q, D = X[:2], X[2:]                    # 39 rows: ragged at 2/4
+        enc = encoders(240)["ssax"]
+        with tempfile.TemporaryDirectory() as d:
+            SymbolicStore.from_rows(enc, D).save(d, n_hosts=2)
+            store = SymbolicStore.open(d)
+        host = MatchEngine(enc, store, verify="host", batch_size=64)
+        r_h = host.topk(Q, k=5)
+        for shards in (2, 4):
+            mesh = make_mesh_compat((shards,), ("data",))
+            dev = make_engine_service(enc, None, mesh, store=store,
+                                      verify="device", batch_size=64)
+            assert dev.sweep.mirror_layout == "round_robin"
+            r_d = dev.topk(Q, k=5)
+            np.testing.assert_array_equal(r_d.indices, r_h.indices)
+            np.testing.assert_array_equal(r_d.distances, r_h.distances)
+            assert r_d.store_accesses == 0
+        print("snapshot layout independence OK")
+    """)
+    assert "snapshot layout independence OK" in out
+
+
+def test_sharded_index_build_bitwise_equals_host_build():
+    """Sharded bulk index build (device feature extraction + root-subtree
+    grouped routing) must produce the identical tree — leaf membership,
+    node count — and identical indexed top-k for every encoder, with the
+    candidate order generated on device (zero host-ordered bytes)."""
+    out = _run("""
+        from repro.core import MatchEngine
+        from repro.core.distributed import make_engine_service
+        from repro.index import SeriesIndex
+        from repro.store import SymbolicStore
+
+        X = season_dataset(n=93, T=120, L=10, strength=0.7, seed=31)
+        Q, D = X[:2], X[2:]                    # 91 rows, ragged at 4
+        mesh = make_mesh_compat((4,), ("data",))
+        for name, enc in encoders(120).items():
+            store = SymbolicStore.from_rows(enc, D)
+            ref = SeriesIndex.from_store(store, leaf_fill=12, max_bits=4)
+            host = MatchEngine(enc, store, verify="host", batch_size=64)
+            host.store.build_index(leaf_fill=12, max_bits=4)
+            r_h = host.topk(Q, k=5, source="index")
+            dev = make_engine_service(enc, None, mesh, store=store,
+                                      verify="device", batch_size=64)
+            idx = dev.store.build_index(leaf_fill=12, max_bits=4,
+                                        mesh=mesh, n_shards=4)
+            assert idx.n_nodes == ref.n_nodes, name
+            assert idx.tree.leaf_membership() == \\
+                ref.tree.leaf_membership(), name
+            np.testing.assert_array_equal(
+                idx.tree.feats, ref.tree.feats)
+            r_d = dev.topk(Q, k=5, source="index")
+            np.testing.assert_array_equal(r_d.indices, r_h.indices)
+            np.testing.assert_array_equal(r_d.distances, r_h.distances)
+            assert r_d.store_accesses == 0, name
+            assert dev.sweep.host_order_bytes == 0, name
+        print("sharded index build OK")
+    """)
+    assert "sharded index build OK" in out
 
 
 def test_device_window_verification_bitwise_equals_host():
