@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_row
+from benchmarks.common import emit_row, observe_topk
 from repro.core import MatchEngine, make_technique
 from repro.data.synthetic import season_dataset
 from repro.subseq import SubseqEngine, WindowView
@@ -64,6 +64,7 @@ def _whole(cfg, rows, examined):
         t0 = time.perf_counter()
         lin = engine.topk(Q, k=k)
         t_lin = time.perf_counter() - t0
+        observe_topk(f"index/whole/{tech}/linear", lin, t_lin)
         io_lin = lin.io_seconds
         t0 = time.perf_counter()
         store.build_index(leaf_fill=64)
@@ -72,6 +73,7 @@ def _whole(cfg, rows, examined):
         t0 = time.perf_counter()
         idx = engine.topk(Q, k=k, source="index")
         t_idx = time.perf_counter() - t0
+        observe_topk(f"index/whole/{tech}/indexed", idx, t_idx)
         agree = int(np.array_equal(idx.indices, lin.indices)
                     and np.array_equal(idx.distances, lin.distances))
         examined[f"bitwise/whole/{tech}"] = agree
@@ -105,6 +107,7 @@ def _windowed(cfg, rows, examined):
         t0 = time.perf_counter()
         lin = eng.topk(Q, k=k, use_index=False)
         t_lin = time.perf_counter() - t0
+        observe_topk(f"index/windowed/{tech}/linear", lin, t_lin)
         io_lin = lin.io_seconds
         t0 = time.perf_counter()
         view.build_index(leaf_fill=64)
@@ -113,6 +116,7 @@ def _windowed(cfg, rows, examined):
         t0 = time.perf_counter()
         idx = eng.topk(Q, k=k)
         t_idx = time.perf_counter() - t0
+        observe_topk(f"index/windowed/{tech}/indexed", idx, t_idx)
         agree = int(np.array_equal(idx.window_ids, lin.window_ids)
                     and np.array_equal(idx.distances, lin.distances))
         examined[f"bitwise/windowed/{tech}"] = agree

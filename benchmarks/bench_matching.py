@@ -17,7 +17,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit_row, time_fn
+from benchmarks.common import emit_row, observe_topk, time_fn
 from repro.core import SAX, SSAX, MatchEngine
 from repro.core.matching import RawStore
 from repro.data.synthetic import season_dataset
@@ -57,11 +57,15 @@ def run():
             "ssax": MatchEngine(ss, stores["ssax"], rep=rep_ss,
                                 batch_size=256),
         }
+        import time as _time
         for k in (1, 32):
             res = {}
             for name, eng in engines.items():
                 stores[name].reset()
+                t0 = _time.perf_counter()
                 res[name] = eng.topk(Q, k=k)
+                observe_topk(f"matching/{name}/R2={s}/k={k}", res[name],
+                             _time.perf_counter() - t0)
             acc_sax = float(res["sax"].raw_accesses.mean())
             acc_ss = float(res["ssax"].raw_accesses.mean())
             fetch_sax = res["sax"].store_fetches

@@ -23,6 +23,14 @@ def _pp(technique, Q, D, k: int = 1):
                           for i in range(len(Q))]))
 
 
+def _record(label: str, value: float):
+    """Registry gauge under the same ``bench.*.pruning_power`` name the
+    engine suites use, so BENCH_pruning.json carries the unified
+    summary schema too."""
+    from repro.obs import REGISTRY
+    REGISTRY.gauge(f"bench.pruning_power.{label}").set(value)
+
+
 def run():
     rows = []
     for s in [0.1, 0.5, 0.9]:
@@ -35,6 +43,8 @@ def run():
                              r2_season=s), Q, D),
                     _pp(SSAX(T=960, W=48, L=10, A_seas=9, A_res=64,
                              r2_season=s), Q, D))
+        _record(f"season/R2={s}/sax", pp_sax)
+        _record(f"season/R2={s}/ssax", pp_ss)
         rows.append(("pruning/season",
                      f"R2={s} sax={pp_sax:.4f} ssax={pp_ss:.4f} "
                      f"gain_pp={(pp_ss - pp_sax) * 100:.1f}"))
@@ -43,6 +53,8 @@ def run():
         Q, D = X[:N_Q], X[N_Q:]
         pp_sax = _pp(SAX(T=960, W=48, A=64), Q, D)
         pp_ts = _pp(TSAX(T=960, W=48, A_tr=64, A_res=64, r2_trend=s), Q, D)
+        _record(f"trend/R2={s}/sax", pp_sax)
+        _record(f"trend/R2={s}/tsax", pp_ts)
         rows.append(("pruning/trend",
                      f"R2={s} sax={pp_sax:.4f} tsax={pp_ts:.4f} "
                      f"gain_pp={(pp_ts - pp_sax) * 100:.1f}"))
@@ -53,8 +65,10 @@ def run():
     Q, D = X[:N_Q], X[N_Q:]
     ss = SSAX(T=960, W=48, L=10, A_seas=9, A_res=64, r2_season=0.7)
     for k in (1, 8, 32):
+        pp_k = _pp(ss, Q, D, k=k)
+        _record(f"season_knn/k={k}/ssax", pp_k)
         rows.append((f"pruning/season_knn_k{k}",
-                     f"R2=0.7 k={k} ssax={_pp(ss, Q, D, k=k):.4f}"))
+                     f"R2=0.7 k={k} ssax={pp_k:.4f}"))
     for name, derived in rows:
         emit_row(name, derived)
     return rows

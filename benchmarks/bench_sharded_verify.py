@@ -31,7 +31,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_row
+from benchmarks.common import emit_row, observe_topk
 from repro.core import make_technique
 from repro.data.synthetic import season_dataset
 from repro.subseq import SubseqEngine, WindowView
@@ -73,9 +73,11 @@ def _whole(cfg, mesh, rows, failures):
         t0 = time.perf_counter()
         r_d = dev.topk(Q, k=k)
         t_dev = time.perf_counter() - t0
+        observe_topk(f"sharded_verify/whole/{tech}/device", r_d, t_dev)
         t0 = time.perf_counter()
         r_h = host.topk(Q, k=k)
         t_host = time.perf_counter() - t0
+        observe_topk(f"sharded_verify/whole/{tech}/host", r_h, t_host)
         agree = int(np.array_equal(r_d.indices, r_h.indices)
                     and np.array_equal(r_d.distances, r_h.distances))
         # the exact path must order candidates on device: zero bound
@@ -111,10 +113,12 @@ def _windowed(cfg, mesh, rows, failures):
         t0 = time.perf_counter()
         r_d = e_dev.topk(Q, k=k)
         t_dev = time.perf_counter() - t0
+        observe_topk(f"sharded_verify/windowed/{tech}/device", r_d, t_dev)
         view.reset()
         t0 = time.perf_counter()
         r_h = e_host.topk(Q, k=k)
         t_host = time.perf_counter() - t0
+        observe_topk(f"sharded_verify/windowed/{tech}/host", r_h, t_host)
         agree = int(np.array_equal(r_d.window_ids, r_h.window_ids)
                     and np.array_equal(r_d.distances, r_h.distances))
         order_b = e_dev._sweep.host_order_bytes

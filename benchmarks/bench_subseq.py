@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_row
+from benchmarks.common import emit_row, observe_topk
 from repro.core import make_technique
 from repro.data.synthetic import season_dataset
 from repro.subseq import SubseqEngine, WindowView
@@ -75,6 +75,7 @@ def run(dryrun: bool = False):
         t0 = time.perf_counter()
         res = eng.topk(Q, k=k)
         t_pruned = time.perf_counter() - t0
+        observe_topk(f"subseq/{tech}", res, t_pruned)
         t0 = time.perf_counter()
         scan = eng.scan_topk(Q, k=k, use_kernel=cfg["use_kernel"])
         t_scan = time.perf_counter() - t0

@@ -35,3 +35,25 @@ def emit(name: str, seconds: float, derived: str = ""):
 
 def emit_row(name: str, derived: str):
     print(f"{name},,{derived}")
+
+
+def observe_topk(label: str, res, wall_s=None):
+    """Record one measured ``MatchEngine``/``SubseqEngine`` top-k result
+    into the process registry under the unified ``bench.*`` schema.
+
+    ``benchmarks.run`` resets the registry at each suite boundary and
+    embeds the snapshot (plus the cross-suite ``summary`` — pruning
+    power, rows fetched, modeled I/O, wall, host bytes) into that
+    suite's ``results/BENCH_<suite>.json``, so every suite that calls
+    this reports through the same schema instead of ad-hoc strings."""
+    from repro.obs import REGISTRY
+    REGISTRY.counter("bench.queries").inc(int(res.raw_accesses.shape[0]))
+    REGISTRY.counter("bench.candidates_verified").inc(
+        int(res.raw_accesses.sum()))
+    REGISTRY.counter("bench.rows_fetched").inc(int(res.store_accesses))
+    REGISTRY.counter("bench.seeks").inc(int(res.store_fetches))
+    REGISTRY.counter("bench.modeled_io_s").inc(float(res.io_seconds))
+    REGISTRY.gauge(f"bench.pruning_power.{label}").set(
+        float(res.pruned_fraction.mean()))
+    if wall_s is not None:
+        REGISTRY.histogram("bench.topk_latency_s").observe(float(wall_s))

@@ -1,10 +1,15 @@
 """§Perf generator: turn results/hillclimb.json into the
 hypothesis -> change -> before -> after -> verdict log, with roofline
-terms recomputed per variant (same methodology as benchmarks/roofline.py).
+terms recomputed per variant (same methodology as benchmarks/roofline.py);
+plus the unified bench summary — one table over every
+``results/BENCH_<suite>.json`` reporting the same five registry-derived
+numbers (pruning power, rows fetched, modeled I/O, wall, host bytes)
+regardless of which suite produced them.
 """
 
 from __future__ import annotations
 
+import glob
 import json
 import os
 
@@ -67,14 +72,57 @@ def perf_log(path: str) -> str:
     return "\n".join(out) + "\n"
 
 
+def _fmt(v, spec=".4g"):
+    return "-" if v is None else format(v, spec)
+
+
+def bench_summary(results_dir: str) -> str:
+    """Markdown table over every ``BENCH_<suite>.json`` summary block
+    (suites that predate the unified schema show dashes)."""
+    lines = ["| suite | ok | pruning_power | rows_fetched | modeled_io_s "
+             "| wall_s | host_bytes |",
+             "|---|---|---|---|---|---|---|"]
+    found = 0
+    for path in sorted(glob.glob(os.path.join(results_dir,
+                                              "BENCH_*.json"))):
+        rec = json.load(open(path))
+        s = rec.get("summary") or {}
+        found += 1
+        suite = rec.get("suite", os.path.basename(path))
+        ok = "ok" if rec.get("ok") else "ERROR"
+        if rec.get("dryrun"):
+            ok += " (dryrun)"
+        lines.append(
+            f"| {suite} | {ok} | {_fmt(s.get('pruning_power'))} "
+            f"| {_fmt(s.get('rows_fetched'), '.0f')} "
+            f"| {_fmt(s.get('modeled_io_s'))} "
+            f"| {_fmt(s.get('wall_s'), '.2f')} "
+            f"| {_fmt(s.get('host_bytes'), '.0f')} |")
+    return "\n".join(lines) if found else ""
+
+
 def run():
-    path = os.path.join(os.path.dirname(__file__), "..", "results",
-                        "hillclimb.json")
+    results = os.path.join(os.path.dirname(__file__), "..", "results")
+
+    table = bench_summary(results)
+    if table:
+        out = os.path.join(results, "bench_summary.md")
+        with open(out, "w") as f:
+            f.write("# Bench suites — unified summary\n\n"
+                    "Registry-derived (`repro.obs`) per-suite numbers; "
+                    "see ROADMAP 'Observability subsystem' for the "
+                    "metric definitions.\n\n" + table + "\n")
+        print(f"perf/bench_summary,,written {out} "
+              f"({table.count(chr(10)) - 1} suites)")
+    else:
+        print("perf/bench_summary,,no results/BENCH_*.json")
+
+    path = os.path.join(results, "hillclimb.json")
     if not os.path.exists(path):
         print("perf/skipped,,no results/hillclimb.json")
         return
     log = perf_log(path)
-    out = os.path.join(os.path.dirname(path), "perf_log.md")
+    out = os.path.join(results, "perf_log.md")
     with open(out, "w") as f:
         f.write("# §Perf — hillclimb log\n" + log)
     print(f"perf/log,,written {out}")

@@ -21,8 +21,10 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import os
+import sys
 import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
@@ -51,13 +53,44 @@ def _write_json(suite: str, payload: dict):
         json.dump(payload, f, indent=1, sort_keys=True)
 
 
+def _summary(snap: dict, seconds: float) -> dict:
+    """The cross-suite comparable summary every BENCH json carries —
+    the same five numbers no matter which suite produced them, pooled
+    from whatever ``bench.*`` / ``match.*`` / ``subseq.*`` metrics the
+    suite recorded (suites record through
+    ``benchmarks.common.observe_topk`` or an engine's ``metrics=``)."""
+    c, g = snap["counters"], snap["gauges"]
+
+    def _tot(suffix):
+        return sum(v for k, v in c.items() if k.endswith(suffix))
+
+    pp = [v for k, v in g.items() if ".pruning_power" in k]
+    return {
+        "pruning_power": (sum(pp) / len(pp)) if pp else None,
+        "rows_fetched": _tot(".rows_fetched"),
+        "modeled_io_s": _tot(".modeled_io_s"),
+        "wall_s": seconds,
+        "host_bytes": _tot(".host_order_bytes") + _tot(".h2d_bytes"),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--dryrun", action="store_true",
+                    help="forward dryrun=True to every suite that "
+                    "accepts it (tiny CI sizes)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any selected suite errored "
+                    "(CI: a diverging bench fails the leg, with the "
+                    "BENCH json still written for the artifact upload)")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else SUITES
 
+    from repro.obs import REGISTRY
+
+    failed = []
     print("name,us_per_call,derived")
     for suite in SUITES:
         if suite not in chosen:
@@ -66,20 +99,39 @@ def main() -> None:
         modname = {"roofline": "benchmarks.roofline",
                    "perf": "benchmarks.perf_report"}.get(
                        suite, f"benchmarks.bench_{suite}")
+        # suite boundary: metrics recorded by one suite must never bleed
+        # into the next suite's snapshot
+        REGISTRY.reset()
         try:
             mod = importlib.import_module(modname)
-            rows = mod.run()
+            kwargs = {}
+            if args.dryrun and "dryrun" in inspect.signature(
+                    mod.run).parameters:
+                kwargs["dryrun"] = True
+            rows = mod.run(**kwargs)
             seconds = time.time() - t0
+            snap = REGISTRY.snapshot()
             _write_json(suite, {"suite": suite, "ok": True,
                                 "seconds": seconds,
-                                "rows": _rows_payload(rows)})
+                                "dryrun": args.dryrun,
+                                "rows": _rows_payload(rows),
+                                "metrics": snap,
+                                "summary": _summary(snap, seconds)})
             print(f"suite/{suite},{seconds * 1e6:.0f},ok", flush=True)
         except Exception as e:   # noqa: BLE001 — report, keep going
+            seconds = time.time() - t0
+            snap = REGISTRY.snapshot()
             _write_json(suite, {"suite": suite, "ok": False,
-                                "seconds": time.time() - t0,
-                                "error": f"{type(e).__name__}: {e}"})
+                                "seconds": seconds,
+                                "dryrun": args.dryrun,
+                                "error": f"{type(e).__name__}: {e}",
+                                "metrics": snap,
+                                "summary": _summary(snap, seconds)})
             print(f"suite/{suite},,ERROR {type(e).__name__}: {e}",
                   flush=True)
+            failed.append(suite)
+    if failed and args.strict:
+        sys.exit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

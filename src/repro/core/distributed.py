@@ -554,6 +554,13 @@ class DeviceOrderedStream:
     def empty(cls, q_n: int) -> "DeviceOrderedStream":
         return cls(None, None, np.zeros(q_n, np.int64), 0)
 
+    @property
+    def n_finite(self) -> np.ndarray:
+        """(Q,) finite-bound candidate count per query — what the
+        observability layer reports as 'candidates generated' when the
+        (Q, N) matrix never reaches the host."""
+        return self._n_fin.copy()
+
     def peek(self) -> np.ndarray:
         """(Q,) next unverified bound per query; +inf when exhausted."""
         if self._C == 0:
@@ -742,6 +749,14 @@ class ShardedRepSweep:
             total += self._raw_mirror.h2d_bytes
         return total
 
+    def transfer_stats(self) -> dict:
+        """Device<->host transfer counters for the observability layer:
+        ``host_order_bytes`` (host-assembled candidate-order matrices —
+        0 on the streaming exact path) and ``h2d_bytes`` (mirror
+        uploads)."""
+        return {"host_order_bytes": int(self.host_order_bytes),
+                "h2d_bytes": int(self.h2d_bytes)}
+
     def _mirror_tree(self):
         return self._restructure(tuple(m.buf for m in self._mirrors))
 
@@ -911,7 +926,7 @@ class ShardedRepSweep:
 def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
                         batch_size: int = 64, verify: str = "auto",
                         pairwise: Callable | None = None,
-                        media: str = "ssd"):
+                        media: str = "ssd", metrics=None):
     """Sharded representation sweep feeding the batched k-NN engine.
 
     Builds (or adopts) a ``repro.store.SymbolicStore``, runs one sharded
@@ -971,7 +986,8 @@ def make_engine_service(encoder, dataset, mesh: Mesh, store=None, *,
                          cand_fn=sweep.candidates,
                          stream_factory=sweep.candidate_stream,
                          dist_factory=(sweep.make_dist_fn
-                                       if device_verify else None))
+                                       if device_verify else None),
+                         metrics=metrics)
     engine.sweep = sweep
     engine.ingest = sweep.ingest
     return engine
@@ -1034,6 +1050,12 @@ class ShardedWindowSweep:
     @property
     def host_order_bytes(self) -> int:
         return self.rep_sweep.host_order_bytes
+
+    def transfer_stats(self) -> dict:
+        """Same contract as ``ShardedRepSweep.transfer_stats`` with the
+        source-row mirror traffic folded in."""
+        return {"host_order_bytes": int(self.host_order_bytes),
+                "h2d_bytes": int(self.h2d_bytes)}
 
     def _sync_raw(self):
         """Incremental round-robin mirror of the source rows

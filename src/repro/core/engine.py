@@ -183,7 +183,7 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
                 init_d=None, init_i=None, col_ids=None,
                 dist_fn: Optional[Callable] = None,
                 on_verified: Optional[Callable] = None,
-                stream=None) -> TopKResult:
+                stream=None, trace=None) -> TopKResult:
     """Exact top-k under d_ED for a query batch given lower-bounding
     representation distances (Q, N).  See the module docstring for the
     correctness argument.
@@ -224,7 +224,15 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     so it is mutually exclusive with ``col_ids``; the verification
     schedule is identical to the matrix path when the stream's order is
     (bound, id)-sorted, and the result is exact for ANY valid-bound
-    order."""
+    order.
+
+    ``trace``: optional ``repro.obs.Trace``.  Every recording site is
+    guarded by ``trace is None`` and records copies after the round's
+    computation — with no trace the loop executes the exact
+    pre-observability instruction stream, and with one the results and
+    store accounting stay bit-identical (property-tested in
+    tests/test_obs_neutrality.py)."""
+    import time as _time
     qs = np.asarray(queries_raw)        # native dtype: the host verifier
     if qs.ndim == 1:                    # stays bit-identical to brute force
         qs = qs[None]
@@ -272,6 +280,14 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     pos = np.zeros(q_n, np.int64)
     acc = np.zeros(q_n, np.int64)
     start_acc, start_fetch = store.accesses, store.fetches
+    if trace is not None:                # candidates handed to this scan
+        if stream is None:
+            gen = n_fin.astype(np.int64)
+        else:
+            nf = getattr(stream, "n_finite", None)
+            gen = (np.asarray(nf, np.int64) if nf is not None
+                   else np.full(q_n, n, np.int64))
+        trace.add("generated", gen)
 
     while True:
         # >= (not >): a candidate whose bound ties the k-th best verified
@@ -290,6 +306,7 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
         if not active.any():
             break
         aq = np.nonzero(active)[0]
+        t_round = _time.perf_counter() if trace is not None else 0.0
         if stream is None:
             cand = np.full((len(aq), batch_size), -1, np.int64)
             for r, qi in enumerate(aq):
@@ -321,14 +338,26 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
         acc[aq] += n_real
         if stream is None:               # a stream advances its own cursor
             pos[aq] += n_real
+        if trace is not None:            # round telemetry: the k-th-best
+            trace.record_round(          # threshold AFTER this merge
+                phase="scan", active=int(len(aq)),
+                examined=int(n_real.sum()), kth=front_d[aq, -1].copy(),
+                wall_s=_time.perf_counter() - t_round)
 
     total = store.accesses - start_acc
     n_fetch = store.fetches - start_fetch
+    io_s = store.modeled_io_seconds(total, n_fetch)
+    if trace is not None:
+        trace.add("examined", acc)
+        trace.add("verified", acc)
+        trace.add("rows_fetched", int(total))
+        trace.add("seeks", int(n_fetch))
+        trace.add("modeled_io_s", float(io_s))
     return TopKResult(indices=front_i, distances=front_d,
                       raw_accesses=acc,
                       pruned_fraction=1.0 - acc / n,
                       store_accesses=total, store_fetches=n_fetch,
-                      io_seconds=store.modeled_io_seconds(total, n_fetch))
+                      io_seconds=io_s)
 
 
 def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
@@ -336,13 +365,18 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
                       verifier: Callable = numpy_verifier,
                       merge: Callable = merge_topk_numpy,
                       dist_fn: Optional[Callable] = None,
-                      on_verified: Optional[Callable] = None) -> TopKResult:
+                      on_verified: Optional[Callable] = None,
+                      trace=None, trace_phase: str = "seed") -> TopKResult:
     """Approximate top-k: verify an externally supplied candidate set
     (e.g. the sharded representation top-k) and rank by true d_ED.
     cand_idx: (Q, C) dataset rows; -1 entries are padding.  ``dist_fn``
     / ``on_verified``: same contracts as :func:`topk_verify` — with a
     ``dist_fn`` the store is never fetched (device-resident
-    verification)."""
+    verification).  ``trace`` records this call as one verification
+    round labelled ``trace_phase`` ("seed" for the tree seed walk,
+    "approx" for the approximate path)."""
+    import time as _time
+    t0 = _time.perf_counter() if trace is not None else 0.0
     qs = np.asarray(queries_raw)
     if qs.ndim == 1:
         qs = qs[None]
@@ -381,10 +415,22 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
     total = store.accesses - start_acc
     n_fetch = store.fetches - start_fetch
     acc = mask.sum(axis=1)
+    io_s = store.modeled_io_seconds(total, n_fetch)
+    if trace is not None:
+        trace.add("generated", acc.astype(np.int64))
+        trace.add("examined", acc.astype(np.int64))
+        trace.add("verified", acc.astype(np.int64))
+        trace.add("rows_fetched", int(total))
+        trace.add("seeks", int(n_fetch))
+        trace.add("modeled_io_s", float(io_s))
+        trace.record_round(phase=trace_phase, active=q_n,
+                           examined=int(acc.sum()),
+                           kth=out_d[:, -1].copy(),
+                           wall_s=_time.perf_counter() - t0)
     return TopKResult(indices=out_i, distances=out_d, raw_accesses=acc,
                       pruned_fraction=1.0 - acc / n,
                       store_accesses=total, store_fetches=n_fetch,
-                      io_seconds=store.modeled_io_seconds(total, n_fetch))
+                      io_seconds=io_s)
 
 
 # ---------------------------------------------------------------------------
@@ -465,10 +511,15 @@ class MatchEngine:
                  cand_fn: Callable | None = None,
                  device_merge: bool = False,
                  dist_factory: Callable | None = None,
-                 stream_factory: Callable | None = None):
+                 stream_factory: Callable | None = None,
+                 metrics=None):
         self.encoder = encoder
         self.store = store
         self.batch_size = batch_size
+        self.verify_mode = verify
+        # opt-in repro.obs.MetricsRegistry: per-query counters and
+        # latency histograms; None (the default) records nothing
+        self.metrics = metrics
         self.device_verify = verify == "device"
         if self.device_verify and dist_factory is None:
             raise ValueError(
@@ -560,7 +611,7 @@ class MatchEngine:
     # -- matching --------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exact: bool = True,
              batch_size: Optional[int] = None, expand: int = 4,
-             source=None) -> TopKResult:
+             source=None, trace=None, explain: bool = False) -> TopKResult:
         """Top-k matches for a (Q, T) query batch (or a single (T,) query).
 
         exact=True:  pruned scan, provably identical to brute force.
@@ -571,10 +622,35 @@ class MatchEngine:
         exact=False: verify the top ``k * expand`` representation
                      candidates only (the paper's approximate matching,
                      generalized to k-NN); ``source`` is ignored.
+
+        trace / explain: ``trace`` records a per-query ``repro.obs``
+        query trace into the given object; ``explain=True`` creates one
+        and attaches it to the result as ``res.trace`` (render with
+        ``repro.obs.render_trace``).  Tracing never changes results or
+        store accounting (observability neutrality, property-tested).
         """
+        import time as _time
         qs = np.asarray(queries_raw)
         if qs.ndim == 1:
             qs = qs[None]
+        if explain and trace is None:
+            from repro.obs import Trace
+            trace = Trace("match.topk")
+        total = getattr(self.store, "n", None)
+        if total is None:
+            total = self.store.data.shape[0]
+        observing = trace is not None or self.metrics is not None
+        t0 = _time.perf_counter() if observing else 0.0
+        sweep = getattr(self, "sweep", None)
+        if trace is not None:
+            src_name = ("index" if source == "index" else
+                        "linear" if source is None else
+                        type(source).__name__)
+            trace.meta.update(engine="match", k=int(k), exact=bool(exact),
+                              q_n=int(qs.shape[0]), total=int(total),
+                              source=src_name, verify=self.verify_mode)
+        hob0 = sweep.host_order_bytes if sweep is not None else 0
+        h2d0 = sweep.h2d_bytes if sweep is not None else 0
         dfn = self._make_dist_fn(qs)
         if exact:
             from repro.index.candidates import LinearSweep, topk_from_source
@@ -583,18 +659,61 @@ class MatchEngine:
                                      stream_fn=self._stream_factory)
             elif source == "index":
                 source = self.index_source()
-            total = getattr(self.store, "n", None)
-            if total is None:
-                total = self.store.data.shape[0]
-            return topk_from_source(
+            res = topk_from_source(
                 qs, source, self.store, k=k,
                 batch_size=batch_size or self.batch_size,
                 verifier=self.verifier, merge=self.merge, total=total,
-                dist_fn=dfn)
-        cand = self.candidates(qs, k * max(expand, 1))
-        return verify_candidates(qs, cand, self.store, k=k,
-                                 verifier=self.verifier, merge=self.merge,
-                                 dist_fn=dfn)
+                dist_fn=dfn, trace=trace)
+        else:
+            from repro.obs.trace import maybe_span
+            with maybe_span(trace, "order"):
+                cand = self.candidates(qs, k * max(expand, 1))
+            with maybe_span(trace, "verify"):
+                res = verify_candidates(
+                    qs, cand, self.store, k=k, verifier=self.verifier,
+                    merge=self.merge, dist_fn=dfn, trace=trace,
+                    trace_phase="approx")
+        if observing:
+            self._observe(trace, res, sweep, total, qs.shape[0],
+                          _time.perf_counter() - t0, hob0, h2d0)
+        if trace is not None:
+            res.trace = trace
+        return res
+
+    def _observe(self, trace, res: TopKResult, sweep, total: int,
+                 q_n: int, wall_s: float, hob0: int, h2d0: int) -> None:
+        """Post-call recording: transfer deltas, pruning power, registry
+        metrics.  Runs only when a trace or a registry is attached and
+        only AFTER the result exists — it cannot perturb matching."""
+        hob = (sweep.host_order_bytes - hob0) if sweep is not None else None
+        h2d = (sweep.h2d_bytes - h2d0) if sweep is not None else None
+        # the device path never fetches the store; any store accesses
+        # during a device-verified call ARE rows moved to the host
+        rth = int(res.store_accesses) if self.device_verify else None
+        if trace is not None:
+            trace.set("wall_s", wall_s)
+            trace.set("pruning_power", res.pruned_fraction.copy())
+            if sweep is not None:
+                trace.set("host_order_bytes", int(hob))
+                trace.set("h2d_bytes", int(h2d))
+            if rth is not None:
+                trace.set("rows_to_host", rth)
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("match.queries").inc(q_n)
+            m.counter("match.candidates_verified").inc(
+                int(res.raw_accesses.sum()))
+            m.counter("match.rows_fetched").inc(int(res.store_accesses))
+            m.counter("match.seeks").inc(int(res.store_fetches))
+            m.counter("match.modeled_io_s").inc(float(res.io_seconds))
+            m.gauge("match.pruning_power").set(
+                float(res.pruned_fraction.mean()))
+            m.histogram("match.topk_latency_s").observe(wall_s)
+            if hob is not None:
+                m.counter("match.host_order_bytes").inc(int(hob))
+                m.counter("match.h2d_bytes").inc(int(h2d))
+            if rth is not None:
+                m.counter("match.rows_to_host").inc(rth)
 
     def _make_dist_fn(self, qs) -> Optional[Callable]:
         """Device-resident verification closure for this query batch

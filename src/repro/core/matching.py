@@ -109,9 +109,17 @@ class RawStore:
         bytes_per = self.data.shape[-1] * 4
         return f * self.seek_s + n * bytes_per / self.read_bps
 
-    def reset(self):
+    def reset_counters(self):
+        """Zero the I/O accounting (``accesses`` / ``fetches``) without
+        touching anything else — the phase boundary every benchmark /
+        launcher measurement should call so counters never bleed from
+        one measured run into the next (a reused store otherwise keeps
+        accumulating and the later phase under- or over-reports)."""
         self.accesses = 0
         self.fetches = 0
+
+    def reset(self):
+        self.reset_counters()
 
 
 # ---------------------------------------------------------------------------

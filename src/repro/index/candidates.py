@@ -219,7 +219,7 @@ class TreeCandidates:
 def topk_from_source(queries_raw, source: CandidateSource, store, *,
                      k: int = 1, batch_size: int = 64, verifier=None,
                      merge=None, total: Optional[int] = None,
-                     dist_fn=None, on_verified=None):
+                     dist_fn=None, on_verified=None, trace=None):
     """Exact top-k through any candidate source — one verification path
     (``core.engine.topk_verify``) for linear and indexed search.
 
@@ -231,10 +231,16 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
     ``dist_fn`` / ``on_verified`` follow the ``core.engine.topk_verify``
     contracts and apply to BOTH phases — with a ``dist_fn`` the seed
     verification is device-resident too.
+
+    ``trace``: optional ``repro.obs.Trace`` — candidate generation is
+    recorded as span "order" (the tree's seed verification nests as
+    "order/seed") and the pruned scan as span "verify"; off (None) the
+    call path is unchanged.
     """
     from repro.core.engine import (
         TopKResult, merge_topk_numpy, numpy_verifier, topk_verify,
         verify_candidates)
+    from repro.obs.trace import maybe_span
     verifier = verifier or numpy_verifier
     merge = merge or merge_topk_numpy
 
@@ -243,16 +249,28 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
         qs = qs[None]
 
     def verify(cand_idx):
-        return verify_candidates(qs, cand_idx, store, k=k,
-                                 verifier=verifier, merge=merge,
-                                 dist_fn=dist_fn, on_verified=on_verified)
+        with maybe_span(trace, "seed"):
+            return verify_candidates(qs, cand_idx, store, k=k,
+                                     verifier=verifier, merge=merge,
+                                     dist_fn=dist_fn,
+                                     on_verified=on_verified, trace=trace)
 
-    cs = source.candidate_bounds(qs, k, verify)
-    res = topk_verify(qs, cs.bounds, store, k=k, batch_size=batch_size,
-                      verifier=verifier, merge=merge, col_ids=cs.col_ids,
-                      init_d=cs.init_d, init_i=cs.init_i,
-                      dist_fn=dist_fn, on_verified=on_verified,
-                      stream=cs.stream)
+    with maybe_span(trace, "order") as order_span:
+        cs = source.candidate_bounds(qs, k, verify)
+        if trace is not None and cs.stream is not None:
+            # the stream's sort ran on device — fence it so the "order"
+            # wall-clock is the kernel time, not the dispatch time
+            from repro.obs.trace import block_until_ready
+            block_until_ready((getattr(cs.stream, "_b", None),
+                               getattr(cs.stream, "_i", None)))
+            order_span.meta["stream"] = True
+    with maybe_span(trace, "verify"):
+        res = topk_verify(qs, cs.bounds, store, k=k, batch_size=batch_size,
+                          verifier=verifier, merge=merge,
+                          col_ids=cs.col_ids,
+                          init_d=cs.init_d, init_i=cs.init_i,
+                          dist_fn=dist_fn, on_verified=on_verified,
+                          stream=cs.stream, trace=trace)
     width = (int(cs.stream.width) if cs.stream is not None
              else cs.bounds.shape[1])
     n = width if total is None else int(total)

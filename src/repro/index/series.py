@@ -146,17 +146,19 @@ class SeriesIndex:
 
     def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
              verifier=None, merge=None, dist_fn=None, on_verified=None,
-             prior_d=None, prior_i=None, seen=None):
+             prior_d=None, prior_i=None, seen=None, trace=None):
         """Exact top-k over ``store`` through the indexed traversal —
         bit-identical to the linear-sweep engine (same verification
         path, same tie-break).  ``dist_fn`` routes verification through
         a device-resident distance hook; ``prior_d``/``prior_i``/``seen``
-        reuse an earlier round's verified frontier."""
+        reuse an earlier round's verified frontier; ``trace`` records a
+        ``repro.obs`` query trace (seed/collect/scan phases)."""
         src = self.source(prior_d=prior_d, prior_i=prior_i, seen=seen)
         return topk_from_source(queries_raw, src, store, k=k,
                                 batch_size=batch_size, verifier=verifier,
                                 merge=merge, total=self.n,
-                                dist_fn=dist_fn, on_verified=on_verified)
+                                dist_fn=dist_fn, on_verified=on_verified,
+                                trace=trace)
 
     # -- snapshot serialization ------------------------------------------
     def to_snapshot(self):

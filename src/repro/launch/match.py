@@ -47,6 +47,36 @@ import time
 import numpy as np
 
 
+def _explain(trace, *, device: bool):
+    """Render the per-query plan and hard-fail on a broken trace.
+
+    ``device=True`` additionally enforces the device-path invariants as
+    a gate: ``host_order_bytes == 0`` (ordering stayed device-resident)
+    and ``rows_to_host == 0`` (no raw row crossed to the host during
+    verification).  CI runs this through ``--explain --dryrun``."""
+    from repro.obs import check_trace, render_trace
+    print(render_trace(trace))
+    problems = check_trace(trace, device=device)
+    if problems:
+        raise SystemExit("[explain] trace check FAILED: "
+                         + "; ".join(problems))
+
+
+def _print_metrics(registry):
+    """One-screen registry summary (counters + latency quantiles)."""
+    snap = registry.snapshot()
+    if snap["counters"]:
+        kv = ", ".join(f"{k}={v:g}" for k, v in
+                       sorted(snap["counters"].items()))
+        print(f"[metrics] {kv}")
+    for name, h in sorted(snap["histograms"].items()):
+        hist = registry.histogram(name)
+        if hist.count:
+            print(f"[metrics] {name}: n={hist.count} "
+                  f"p50<={hist.quantile(0.5):.3g}s "
+                  f"p99<={hist.quantile(0.99):.3g}s")
+
+
 def run_subseq(args):
     """Subsequence mode: index every window of an (n, T) long-series
     corpus, localize snippet queries exactly, compare against the
@@ -55,6 +85,7 @@ def run_subseq(args):
 
     from repro.core import make_technique
     from repro.data.synthetic import season_dataset
+    from repro.obs import REGISTRY
     from repro.subseq import SubseqEngine, WindowView
 
     m, s = args.window, args.stride
@@ -87,7 +118,7 @@ def run_subseq(args):
           f"-> {view.n} windows (m={m}, stride={s}); "
           f"encode {time.perf_counter() - t0:.2f}s")
     engine = SubseqEngine(view, batch_size=args.batch, verify=args.verify,
-                          mesh=mesh)
+                          mesh=mesh, metrics=REGISTRY)
 
     if args.index:
         t0 = time.perf_counter()
@@ -98,8 +129,11 @@ def run_subseq(args):
 
     view.reset()
     t0 = time.perf_counter()
-    res = engine.topk(Q, k=args.k, exclusion=args.exclusion)
+    res = engine.topk(Q, k=args.k, exclusion=args.exclusion,
+                      explain=args.explain)
     dt = time.perf_counter() - t0
+    if args.explain:
+        _explain(res.trace, device=args.verify == "device")
     t0 = time.perf_counter()
     scan = engine.scan_topk(Q, k=args.k, use_kernel=False)
     dt_scan = time.perf_counter() - t0
@@ -121,8 +155,14 @@ def run_subseq(args):
           f"wall {dt:.2f}s (scan {dt_scan:.2f}s)")
 
     if args.index:
+        # cold-cache boundary: the indexed run above left its I/O counts
+        # and a warm row buffer behind, which used to bleed into (and
+        # under-report) the linear comparison below
+        view.reset()
         lin = engine.topk(Q, k=args.k, exclusion=args.exclusion,
-                          use_index=False)
+                          use_index=False, explain=args.explain)
+        if args.explain:
+            _explain(lin.trace, device=args.verify == "device")
         agree = int(np.array_equal(res.window_ids, lin.window_ids))
         print(f"[subseq] index vs linear sweep: bitwise identical "
               f"{'yes' if agree else 'NO'}; windows examined/query "
@@ -140,6 +180,8 @@ def run_subseq(args):
     res2 = engine.topk(extra[:1, o2:o2 + m], k=1)
     print(f"[subseq] query of appended row -> row {res2.rows[0, 0]} "
           f"start {res2.starts[0, 0]} d={res2.distances[0, 0]:.4f}")
+    if args.explain:
+        _print_metrics(REGISTRY)
 
 
 def main():
@@ -183,7 +225,26 @@ def main():
                     help="window hop in samples")
     ap.add_argument("--exclusion", type=int, default=0,
                     help="non-overlap suppression distance (0: off)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print a per-query plan (spans, candidates, "
+                    "pruning, I/O, rounds) for every served path and "
+                    "hard-fail if required spans are missing or a "
+                    "device-path transfer invariant is violated")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="shrink every dimension to a seconds-scale "
+                    "smoke (the CI explain gate)")
     args = ap.parse_args()
+
+    if args.dryrun:
+        args.n = min(args.n, 12 if args.subseq else 256)
+        args.T = min(args.T, 480)
+        args.queries = min(args.queries, 4)
+        args.k = min(args.k, 8)
+        args.batch = min(args.batch, 64)
+        args.ingest = min(args.ingest, 1)
+        if args.subseq:
+            args.window = min(args.window, 240)
+            args.stride = max(args.stride, 8)
 
     if args.subseq:
         return run_subseq(args)
@@ -195,6 +256,7 @@ def main():
     from repro.core.matching import pairwise_euclidean
     from repro.data.synthetic import season_dataset
     from repro.launch.mesh import make_mesh_compat
+    from repro.obs import REGISTRY
 
     n_dev = len(jax.devices())
     mesh = make_mesh_compat((n_dev,), ("data",))
@@ -214,7 +276,7 @@ def main():
     t0 = time.perf_counter()
     engine = make_engine_service(tech, jnp.asarray(D), mesh,
                                  batch_size=args.batch, media=args.store,
-                                 verify=args.verify)
+                                 verify=args.verify, metrics=REGISTRY)
     store = engine.store                 # SymbolicStore: raw + live rep
     jax.block_until_ready(engine.rep)
     print(f"[match] encode: {time.perf_counter() - t0:.2f}s")
@@ -226,8 +288,10 @@ def main():
     for k in (1, args.k):
         store.reset()
         t0 = time.perf_counter()
-        res = engine.topk(Q, k=k)
+        res = engine.topk(Q, k=k, explain=args.explain)
         dt = time.perf_counter() - t0
+        if args.explain:
+            _explain(res.trace, device=args.verify == "device")
         hits = sum(int(np.array_equal(res.indices[qi],
                                       true_nn[qi, :k]))
                    for qi in range(args.queries))
@@ -249,8 +313,11 @@ def main():
         lin_acc = res_lin.raw_accesses.mean()
         store.reset()
         t0 = time.perf_counter()
-        res_idx = engine.topk(Q, k=args.k, source="index")
+        res_idx = engine.topk(Q, k=args.k, source="index",
+                              explain=args.explain)
         dt = time.perf_counter() - t0
+        if args.explain:
+            _explain(res_idx.trace, device=args.verify == "device")
         agree = np.array_equal(res_idx.indices, res_lin.indices)
         print(f"[match] index: {store.index.n_nodes} nodes over "
               f"{store.index.n} rows (leaf_fill {args.leaf_fill}) in "
@@ -262,8 +329,10 @@ def main():
     # approximate top-k from the sharded candidate frontier
     store.reset()
     t0 = time.perf_counter()
-    res = engine.topk(Q, k=args.k, exact=False)
+    res = engine.topk(Q, k=args.k, exact=False, explain=args.explain)
     dt = time.perf_counter() - t0
+    if args.explain:
+        _explain(res.trace, device=args.verify == "device")
     hit1 = sum(int(res.indices[qi, 0] == true_nn[qi, 0])
                for qi in range(args.queries))
     print(f"[match] approx k={args.k}: 1-NN hit {hit1}/{args.queries}; "
@@ -301,6 +370,9 @@ def main():
         path = store.save(args.snapshot_dir)
         print(f"[match] snapshot: {store.n} rows + rep -> {path} "
               f"({time.perf_counter() - t0:.2f}s)")
+
+    if args.explain:
+        _print_metrics(REGISTRY)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--metrics-out", default="",
+                    help="write the repro.obs registry snapshot (request/"
+                    "token counters + latency histogram) as JSON")
     args = ap.parse_args(argv)
 
     cfg = dataclasses.replace(
@@ -50,14 +53,30 @@ def main(argv=None):
                         int(rng.integers(4, 24))).astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
+    from repro.obs import REGISTRY
     eng = ServeEngine(model, params, n_slots=args.slots,
-                      max_len=args.max_len)
+                      max_len=args.max_len, metrics=REGISTRY)
     t0 = time.perf_counter()
     done = eng.run(list(reqs))
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {n_tok} tokens, {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s CPU)")
+
+    snap = REGISTRY.snapshot()
+    kv = ", ".join(f"{k}={v:g}" for k, v in
+                   sorted(snap["counters"].items()))
+    print(f"[serve] metrics: {kv}")
+    lat = REGISTRY.histogram("serve.request_latency_s")
+    if lat.count:
+        print(f"[serve] request latency: n={lat.count} "
+              f"p50<={lat.quantile(0.5):.3g}s "
+              f"p99<={lat.quantile(0.99):.3g}s")
+    if args.metrics_out:
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""Observability subsystem: per-query traces, process metrics, EXPLAIN.
+
+Three pieces (ROADMAP.md §Observability documents the schema):
+
+* :mod:`repro.obs.trace` — ``Trace`` / ``Span``: per-engine-call query
+  traces (phase wall-clocks with ``block_until_ready`` fencing,
+  verification-round telemetry, candidate / I/O / transfer counters).
+  Engines take ``trace=None`` and record nothing unless one is passed
+  (zero-overhead-when-off; neutrality is property-tested).
+* :mod:`repro.obs.metrics` — ``MetricsRegistry`` (+ the process-wide
+  ``REGISTRY``): named counters / gauges / fixed-log-bucket histograms
+  with deterministic snapshot merges and plain-JSON export, embedded in
+  ``results/BENCH_<suite>.json``.
+* :mod:`repro.obs.explain` — ``render_trace`` (the ``--explain``
+  per-query plan report) and ``check_trace`` (the CI gate's span /
+  device-invariant validation).
+"""
+
+from repro.obs.explain import REQUIRED_SPANS, check_trace, render_trace
+from repro.obs.metrics import (LATENCY_BUCKETS, REGISTRY, Counter, Gauge,
+                               Histogram, MetricsRegistry, merge_snapshots)
+from repro.obs.trace import Span, Trace, block_until_ready, maybe_span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS", "MetricsRegistry",
+    "REGISTRY", "REQUIRED_SPANS", "Span", "Trace", "block_until_ready",
+    "check_trace", "maybe_span", "merge_snapshots", "render_trace",
+]

@@ -1,0 +1,166 @@
+"""Per-query tracing: the ``Trace`` / ``Span`` API.
+
+A ``Trace`` is created per engine call (``MatchEngine.topk(trace=...)``
+/ ``explain=True``) and carries three layers of telemetry:
+
+* **Spans** — wall-clocked phases.  ``with trace.span("verify"):``
+  records a ``Span`` whose name is the '/'-joined path of the open span
+  stack (``"order/seed"`` for the tree seed verification nested inside
+  candidate generation).  When the traced region ends in device work,
+  pass ``fence=arrays`` so the span blocks on ``jax.block_until_ready``
+  before closing — kernel timings are then honest rather than dispatch
+  timings.  Fencing only runs when a trace is active, and only *after*
+  the traced computation, so it can never change results or store
+  accounting (observability neutrality).
+* **Rounds** — one dict per verification round
+  (``core.engine.topk_verify`` / ``verify_candidates``): phase
+  (seed/scan), active query count, candidates examined, the per-query
+  k-th-best bound after the merge (the pruning threshold's evolution),
+  and per-round wall clock.
+* **Meta** — accumulated scalars and per-query arrays
+  (``trace.add``): candidates generated / examined / verified, rows
+  fetched, modeled seeks, modeled I/O seconds, device<->host byte
+  counters.  ``add`` sums numerics and numpy arrays elementwise, so
+  multi-round paths (exclusion widening, seed + scan) accumulate
+  instead of overwriting.
+
+Zero-overhead-when-off contract: every instrumentation site in the
+matching stack is guarded by ``trace is None`` (or uses
+:func:`maybe_span`, which returns a shared null context) — with no
+trace the hot loops execute exactly the pre-observability instruction
+stream.
+
+``to_dict()`` is plain JSON (numpy converted), schema documented in
+ROADMAP.md §Observability.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager, nullcontext
+from typing import List, Optional
+
+import numpy as np
+
+
+def _jsonable(v):
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+class Span:
+    """One wall-clocked phase; ``name`` is the full '/'-joined path."""
+
+    __slots__ = ("name", "t0", "t1", "meta")
+
+    def __init__(self, name: str, t0: float, meta: Optional[dict] = None):
+        self.name = name
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.meta = meta or {}
+
+    @property
+    def seconds(self) -> float:
+        return 0.0 if self.t1 is None else self.t1 - self.t0
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "seconds": self.seconds,
+                **({"meta": _jsonable(self.meta)} if self.meta else {})}
+
+
+class Trace:
+    """Per-call query trace (see module docstring for the layers)."""
+
+    __slots__ = ("name", "meta", "spans", "rounds", "_stack")
+
+    def __init__(self, name: str = "query", **meta):
+        self.name = name
+        self.meta = dict(meta)
+        self.spans: List[Span] = []
+        self.rounds: List[dict] = []
+        self._stack: List[str] = []
+
+    # -- spans ------------------------------------------------------------
+    @contextmanager
+    def span(self, name: str, *, fence=None, **meta):
+        """Wall-clock a phase.  ``fence``: device array(s) (or a pytree)
+        to ``block_until_ready`` before the span closes."""
+        path = "/".join(self._stack + [name])
+        sp = Span(path, time.perf_counter(), meta or None)
+        self.spans.append(sp)
+        self._stack.append(name)
+        try:
+            yield sp
+        finally:
+            self._stack.pop()
+            if fence is not None:
+                block_until_ready(fence)
+            sp.t1 = time.perf_counter()
+
+    def span_names(self) -> List[str]:
+        return [s.name for s in self.spans]
+
+    def has_span(self, name: str) -> bool:
+        """True if any span's path equals ``name`` or ends in it (so
+        ``"seed"`` matches the nested ``"order/seed"``)."""
+        return any(s.name == name or s.name.endswith("/" + name)
+                   for s in self.spans)
+
+    def span_seconds(self, name: str) -> float:
+        return sum(s.seconds for s in self.spans
+                   if s.name == name or s.name.endswith("/" + name))
+
+    # -- meta -------------------------------------------------------------
+    def set(self, key: str, value) -> None:
+        self.meta[key] = value
+
+    def get(self, key: str, default=None):
+        return self.meta.get(key, default)
+
+    def add(self, key: str, value) -> None:
+        """Accumulate: numerics sum, numpy arrays sum elementwise (a
+        copy is stored, never a live engine buffer)."""
+        cur = self.meta.get(key)
+        if isinstance(value, np.ndarray):
+            value = value.copy()
+        if cur is None:
+            self.meta[key] = value
+        else:
+            self.meta[key] = cur + value
+
+    # -- rounds -----------------------------------------------------------
+    def record_round(self, **fields) -> None:
+        self.rounds.append(fields)
+
+    # -- export -----------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"name": self.name,
+                "meta": _jsonable(self.meta),
+                "spans": [s.to_dict() for s in self.spans],
+                "rounds": _jsonable(self.rounds)}
+
+
+_NULL = nullcontext()
+
+
+def maybe_span(trace: Optional[Trace], name: str, **kw):
+    """``trace.span(name)`` or a no-op context — the one-liner guard the
+    engine call sites use so the untraced path allocates nothing."""
+    return _NULL if trace is None else trace.span(name, **kw)
+
+
+def block_until_ready(x) -> None:
+    """Fence helper: block on any jax array / pytree; silently ignore
+    plain host values (numpy arrays, None, tuples of either)."""
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass

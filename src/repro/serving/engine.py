@@ -36,7 +36,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
-                 max_len: int = 256, eos_id: int = -1):
+                 max_len: int = 256, eos_id: int = -1, metrics=None):
         self.model = model
         self.params = params
         self.B = n_slots
@@ -50,6 +50,10 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         # single-slot prefill writes one slot's cache lines
         self._prefill_one = jax.jit(self._prefill_impl, static_argnums=(2,))
+        # opt-in repro.obs.MetricsRegistry: request/token counters +
+        # admit->done latency histogram; None records nothing
+        self.metrics = metrics
+        self._t_admit: dict[int, float] = {}
 
     # -- prefill -------------------------------------------------------
     def _prefill_impl(self, params, tokens, slot: int):
@@ -86,6 +90,8 @@ class ServeEngine:
                          f"max_new_tokens {req.max_new_tokens} exceeds "
                          f"engine max_len {self.max_len}")
             req.done = True
+            if self.metrics is not None:
+                self.metrics.counter("serve.rejected").inc()
             return False
         for slot in range(self.B):
             if self.active[slot] is None:
@@ -106,6 +112,12 @@ class ServeEngine:
                                             for s in range(self.B)
                                             if self.active[s] is not None)),
                                     jnp.int32))
+                if self.metrics is not None:
+                    import time
+                    self.metrics.counter("serve.requests").inc()
+                    self.metrics.counter("serve.prompt_tokens").inc(
+                        len(req.prompt))
+                    self._t_admit[req.rid] = time.perf_counter()
                 return True
         return False
 
@@ -116,6 +128,8 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.last_token))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self.metrics is not None:
+            self.metrics.counter("serve.decode_steps").inc()
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -123,9 +137,18 @@ class ServeEngine:
             req.out_tokens.append(tok)
             self.slot_budget[slot] -= 1
             self.last_token[slot, 0] = tok
+            if self.metrics is not None:
+                self.metrics.counter("serve.tokens").inc()
             if tok == self.eos or self.slot_budget[slot] <= 0:
                 req.done = True
                 self.active[slot] = None
+                if self.metrics is not None:
+                    import time
+                    t0 = self._t_admit.pop(req.rid, None)
+                    if t0 is not None:
+                        self.metrics.histogram(
+                            "serve.request_latency_s").observe(
+                                time.perf_counter() - t0)
 
     def run(self, requests: list[Request]) -> list[Request]:
         """Serve a request list to completion (simple FCFS admission)."""

@@ -235,6 +235,11 @@ class SymbolicStore:
                            n_fetches: Optional[int] = None) -> float:
         return self._io.modeled_io_seconds(n_accesses, n_fetches)
 
+    def reset_counters(self):
+        """Zero the I/O accounting between measured phases (delegates to
+        the backing ``RawStore``)."""
+        self._io.reset_counters()
+
     def reset(self):
         self._io.reset()
 

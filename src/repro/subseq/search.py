@@ -141,11 +141,14 @@ class SubseqEngine:
 
     def __init__(self, view: WindowView, *, batch_size: int = 64,
                  verify: str = "numpy", device_merge: bool = False,
-                 mesh=None):
+                 mesh=None, metrics=None):
         self.view = view
         self.encoder = view.encoder
         self.batch_size = batch_size
         self.mesh = mesh
+        self.verify_mode = verify
+        # opt-in repro.obs.MetricsRegistry (None: record nothing)
+        self.metrics = metrics
         self._device = verify == "device"
         if self._device and mesh is None:
             raise ValueError('verify="device" needs a mesh (the sharded '
@@ -193,7 +196,8 @@ class SubseqEngine:
     # -- matching ---------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exclusion: int = 0,
              batch_size: Optional[int] = None,
-             use_index: object = "auto") -> SubseqResult:
+             use_index: object = "auto", trace=None,
+             explain: bool = False) -> SubseqResult:
         """Top-k windows for a (Q, m) query batch (or a single (m,)
         query), exact under z-normalized d_ED.
 
@@ -205,33 +209,111 @@ class SubseqEngine:
         linear candidate generation verify through the same k-th-best
         early-stop scan and return bit-identical results — the index
         only changes how many windows are examined.
+
+        trace / explain: record a per-query ``repro.obs`` query trace
+        (``explain=True`` creates one and attaches it as ``res.trace``);
+        bit-identical results and accounting either way (observability
+        neutrality, property-tested).
         """
+        import time as _time
+        if explain and trace is None:
+            from repro.obs import Trace
+            trace = Trace("subseq.topk")
+        observing = trace is not None or self.metrics is not None
+        t0 = _time.perf_counter() if observing else 0.0
+        rows0 = self.view.accesses if observing else 0
+        hob0 = (self._sweep.host_order_bytes
+                if observing and self._sweep is not None else 0)
+        h2d0 = (self._sweep.h2d_bytes
+                if observing and self._sweep is not None else 0)
+        res = self._topk(queries_raw, k, exclusion, batch_size, use_index,
+                         trace)
+        if observing:
+            self._observe(trace, res, k, _time.perf_counter() - t0,
+                          self.view.accesses - rows0, hob0, h2d0)
+        if trace is not None:
+            res.trace = trace
+        return res
+
+    def _observe(self, trace, res: SubseqResult, k: int, wall_s: float,
+                 rows_delta: int, hob0: int, h2d0: int) -> None:
+        """Post-call trace/registry recording (never perturbs results —
+        it only reads the finished result and monotonic counters)."""
+        rth = int(rows_delta) if self._device else None
+        hob = h2d = None
+        if self._sweep is not None:
+            hob = int(self._sweep.host_order_bytes - hob0)
+            h2d = int(self._sweep.h2d_bytes - h2d0)
+        if trace is not None:
+            trace.meta.update(engine="subseq", k=int(k),
+                              q_n=int(res.window_ids.shape[0]),
+                              total=int(self.view.n),
+                              verify=self.verify_mode)
+            trace.set("wall_s", wall_s)
+            trace.set("pruning_power", res.pruned_fraction.copy())
+            if hob is not None:
+                trace.set("host_order_bytes", hob)
+                trace.set("h2d_bytes", h2d)
+            if rth is not None:
+                trace.set("rows_to_host", rth)
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("subseq.queries").inc(res.window_ids.shape[0])
+            m.counter("subseq.windows_verified").inc(
+                int(res.raw_accesses.sum()))
+            m.counter("subseq.rows_fetched").inc(int(res.store_accesses))
+            m.counter("subseq.seeks").inc(int(res.store_fetches))
+            m.counter("subseq.modeled_io_s").inc(float(res.io_seconds))
+            m.gauge("subseq.pruning_power").set(
+                float(res.pruned_fraction.mean()))
+            m.histogram("subseq.topk_latency_s").observe(wall_s)
+            if hob is not None:
+                m.counter("subseq.host_order_bytes").inc(hob)
+                m.counter("subseq.h2d_bytes").inc(h2d)
+            if rth is not None:
+                m.counter("subseq.rows_to_host").inc(rth)
+
+    def _topk(self, queries_raw, k: int, exclusion: int,
+              batch_size: Optional[int], use_index: object,
+              trace) -> SubseqResult:
+        from repro.obs.trace import maybe_span
         zq = self.normalize_queries(queries_raw)
         bs = batch_size or self.batch_size
         idx = self.view.index if use_index in ("auto", True) else None
         if use_index is True and idx is None:
             raise ValueError("use_index=True but the view has no index; "
                              "call view.build_index() first")
+        if trace is not None:
+            trace.set("source", "index" if idx is not None else "linear")
         acc = {"rows": 0, "fetches": 0, "io": 0.0}
         dfn = self._sweep.make_dist_fn(zq) if self._device else None
         if idx is not None:
-            return self._topk_indexed(zq, idx, k, exclusion, bs, acc, dfn)
+            return self._topk_indexed(zq, idx, k, exclusion, bs, acc, dfn,
+                                      trace)
         if exclusion <= 0 and self._sweep is not None:
             # device-ordered candidate stream: the (Q, n_windows) bound
             # matrix never materializes on host — the suppression loop
             # below masks host columns, so it keeps the matrix path
-            stream = self._sweep.candidate_stream(zq)
-            res = topk_verify(zq, None, self.view, k=k, batch_size=bs,
-                              verifier=self.verifier, merge=self.merge,
-                              dist_fn=dfn, stream=stream)
+            with maybe_span(trace, "order") as sp:
+                stream = self._sweep.candidate_stream(zq)
+                if trace is not None:
+                    from repro.obs.trace import block_until_ready
+                    block_until_ready((stream._b, stream._i))
+                    sp.meta["stream"] = True
+            with maybe_span(trace, "verify"):
+                res = topk_verify(zq, None, self.view, k=k, batch_size=bs,
+                                  verifier=self.verifier, merge=self.merge,
+                                  dist_fn=dfn, stream=stream, trace=trace)
             return self._wrap(res.indices, res.distances, res,
                               int(stream.width), acc)
-        rd = self.repr_distances(zq)
+        with maybe_span(trace, "order"):
+            rd = self.repr_distances(zq)
         nw = rd.shape[1]
         if exclusion <= 0:
-            res = topk_verify(zq, rd, self.view, k=k, batch_size=bs,
-                              verifier=self.verifier, merge=self.merge,
-                              dist_fn=dfn)
+            with maybe_span(trace, "verify"):
+                res = topk_verify(zq, rd, self.view, k=k, batch_size=bs,
+                                  verifier=self.verifier, merge=self.merge,
+                                  dist_fn=dfn, trace=trace)
             return self._wrap(res.indices, res.distances, res, nw, acc)
 
         # widen the verified frontier until k non-overlapping survivors
@@ -245,12 +327,17 @@ class SubseqEngine:
         ver = _VerifiedSet(zq.shape[0])
         k_fetch = min(nw, max(4 * k, k + 8))
         rd = np.array(rd)                  # writeable: columns get masked
+        widen_round = 0
         while True:
             init_d, init_i = ver.frontier(k_fetch)
-            res = topk_verify(zq, rd, self.view, k=k_fetch, batch_size=bs,
-                              verifier=self.verifier, merge=self.merge,
-                              init_d=init_d, init_i=init_i,
-                              dist_fn=dfn, on_verified=ver.add)
+            with maybe_span(trace, "verify", round=widen_round):
+                res = topk_verify(zq, rd, self.view, k=k_fetch,
+                                  batch_size=bs,
+                                  verifier=self.verifier, merge=self.merge,
+                                  init_d=init_d, init_i=init_i,
+                                  dist_fn=dfn, on_verified=ver.add,
+                                  trace=trace)
+            widen_round += 1
             acc["rows"] += res.store_accesses
             acc["fetches"] += res.store_fetches
             acc["io"] += res.io_seconds
@@ -263,7 +350,7 @@ class SubseqEngine:
             k_fetch = min(nw, 2 * k_fetch)
 
     def _topk_indexed(self, zq, idx, k: int, exclusion: int, bs: int,
-                      acc: dict, dfn) -> SubseqResult:
+                      acc: dict, dfn, trace=None) -> SubseqResult:
         """Indexed candidate generation: route the tree's compact
         candidate set through the same verification scan
         (``repro.index.candidates.topk_from_source``) — bit-identical to
@@ -279,7 +366,7 @@ class SubseqEngine:
         common = dict(batch_size=bs, verifier=self.verifier,
                       merge=self.merge, dist_fn=dfn)
         if exclusion <= 0:
-            res = idx.topk(zq, self.view, k=k, **common)
+            res = idx.topk(zq, self.view, k=k, trace=trace, **common)
             return self._wrap(res.indices, res.distances, res, nw_total,
                               acc)
         ver = _VerifiedSet(zq.shape[0])
@@ -290,7 +377,7 @@ class SubseqEngine:
                     if init_d is not None else None)
             res = idx.topk(zq, self.view, k=k_fetch, on_verified=ver.add,
                            prior_d=init_d, prior_i=init_i, seen=seen,
-                           **common)
+                           trace=trace, **common)
             acc["rows"] += res.store_accesses
             acc["fetches"] += res.store_fetches
             acc["io"] += res.io_seconds

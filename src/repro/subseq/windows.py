@@ -266,6 +266,13 @@ class WindowView:
                            n_fetches: Optional[int] = None) -> float:
         return self.source.modeled_io_seconds(n_accesses, n_fetches)
 
+    def reset_counters(self):
+        """Zero the I/O accounting only, KEEPING the row buffer warm —
+        the phase boundary for back-to-back measurements over a live
+        service (the buffer pool doesn't empty between queries in
+        production).  Use :meth:`reset` for a cold-cache measurement."""
+        self.source.reset_counters()
+
     def reset(self):
         """Reset I/O accounting AND drop the row buffer (a fresh-cache
         measurement, like a cold OS page cache)."""

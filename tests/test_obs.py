@@ -1,0 +1,195 @@
+"""Observability subsystem unit tests (``repro.obs``): metric
+primitives, deterministic snapshot merges, trace span nesting /
+accumulation, the rendered EXPLAIN report, and the trace checker that
+gates CI (missing spans, device-path transfer invariants)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (LATENCY_BUCKETS, Histogram, MetricsRegistry, Trace,
+                       check_trace, maybe_span, merge_snapshots,
+                       render_trace)
+
+
+# -- metrics ---------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2.5)
+    reg.gauge("g").set(0.25)
+    reg.gauge("g").set(0.75)            # last-wins
+    h = reg.histogram("h")
+    for v in (1e-5, 1e-5, 2.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 3.5
+    assert snap["gauges"]["g"] == 0.75
+    assert snap["histograms"]["h"]["count"] == 3
+    assert sum(snap["histograms"]["h"]["counts"]) == 3
+    # the accessor returns the SAME object every time (no reset on read)
+    assert reg.histogram("h") is h
+    json.dumps(snap)                     # plain JSON, embeddable as-is
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(TypeError):
+        reg.histogram("x")
+
+
+def test_registry_reset_is_suite_boundary():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(7)
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+    assert reg.counter("c").value == 0.0
+
+
+def test_histogram_quantile_fixed_bounds():
+    h = Histogram()
+    assert h.bounds == LATENCY_BUCKETS
+    assert math.isnan(h.quantile(0.5))
+    for _ in range(99):
+        h.observe(1e-4)
+    h.observe(1e6)                       # overflow slot
+    # p50 lands in the 1e-4 bucket: the reported bound covers the value
+    assert 1e-4 <= h.quantile(0.5) < 2e-4
+    assert h.quantile(1.0) == float("inf")
+
+
+def test_histogram_merge_requires_identical_bounds():
+    with pytest.raises(ValueError):
+        Histogram((1.0, 2.0)).merge(Histogram((1.0, 3.0)))
+
+
+def test_merge_snapshots_deterministic():
+    """Recording split across two registries then merged must equal one
+    registry recording everything — the property fixed bucket bounds
+    buy (multi-host / multi-suite aggregation with no re-binning)."""
+    obs_a = [1e-5, 3e-3, 0.2]
+    obs_b = [4e-6, 0.2, 50.0, 1e9]
+    split = []
+    for obs in (obs_a, obs_b):
+        reg = MetricsRegistry()
+        reg.counter("n").inc(len(obs))
+        for v in obs:
+            reg.histogram("lat").observe(v)
+        split.append(reg.snapshot())
+    merged = merge_snapshots(split[0], split[1])
+
+    ref = MetricsRegistry()
+    ref.counter("n").inc(len(obs_a) + len(obs_b))
+    for v in obs_a + obs_b:
+        ref.histogram("lat").observe(v)
+    assert merged == ref.snapshot()
+    # merge is associative with empty/None
+    assert merge_snapshots(merged, None) == merged
+
+
+# -- traces ----------------------------------------------------------------
+
+def test_trace_span_nesting_paths():
+    tr = Trace("t")
+    with tr.span("order"):
+        with tr.span("seed"):
+            pass
+    with tr.span("verify"):
+        pass
+    assert tr.span_names() == ["order", "order/seed", "verify"]
+    assert tr.has_span("order") and tr.has_span("verify")
+    assert tr.has_span("seed")           # suffix match on the nested path
+    assert not tr.has_span("nope")
+    assert tr.span_seconds("order") >= tr.span_seconds("seed") >= 0.0
+
+
+def test_trace_add_accumulates_and_copies():
+    tr = Trace("t")
+    live = np.array([1, 2], np.int64)
+    tr.add("examined", live)
+    live[:] = 99                         # engine buffer mutates afterwards
+    tr.add("examined", np.array([10, 20], np.int64))
+    np.testing.assert_array_equal(tr.get("examined"), [11, 22])
+    tr.add("rows", 5)
+    tr.add("rows", 7)
+    assert tr.get("rows") == 12
+
+
+def test_trace_to_dict_is_json():
+    tr = Trace("t", engine="match")
+    with tr.span("verify", k=np.int64(4)):
+        pass
+    tr.add("generated", np.array([3, 4]))
+    tr.record_round(phase="scan", active=2,
+                    kth=np.array([1.5, 2.5], np.float32))
+    d = tr.to_dict()
+    json.dumps(d)
+    assert d["meta"]["generated"] == [3, 4]
+    assert d["rounds"][0]["kth"] == [1.5, 2.5]
+
+
+def test_maybe_span_off_is_shared_noop():
+    a = maybe_span(None, "order")
+    b = maybe_span(None, "verify")
+    assert a is b                        # one shared nullcontext object
+    with a as sp:
+        assert sp is None
+
+
+# -- explain / checker -----------------------------------------------------
+
+def _fake_trace(**overrides):
+    tr = Trace("match.topk")
+    tr.meta.update(engine="match", k=4, q_n=2, total=100,
+                   source="linear", verify="host")
+    with tr.span("order"):
+        pass
+    with tr.span("verify"):
+        pass
+    tr.add("generated", np.array([100, 100], np.int64))
+    tr.add("examined", np.array([20, 30], np.int64))
+    tr.add("verified", np.array([20, 30], np.int64))
+    tr.set("pruning_power", np.array([0.8, 0.7]))
+    tr.add("rows_fetched", 50)
+    tr.add("seeks", 2)
+    tr.add("modeled_io_s", 0.01)
+    tr.record_round(phase="scan", active=2, examined=50,
+                    kth=np.array([1.0, 2.0]), wall_s=0.001)
+    tr.meta.update(overrides)
+    return tr
+
+
+def test_render_trace_report_fields():
+    out = render_trace(_fake_trace())
+    assert "match.topk" in out and "k=4" in out
+    assert "order" in out and "verify" in out
+    assert "pruning" in out and "50 rows in 2 seeks" in out
+
+
+def test_check_trace_passes_on_complete_trace():
+    assert check_trace(_fake_trace()) == []
+
+
+def test_check_trace_flags_missing_spans_and_rounds():
+    empty = Trace("match.topk")
+    problems = check_trace(empty)
+    joined = " ".join(problems)
+    assert problems
+    assert "order" in joined and "verify" in joined
+
+
+def test_check_trace_device_invariants():
+    # device path without transfer accounting at all -> flagged
+    assert check_trace(_fake_trace(), device=True)
+    ok = _fake_trace(host_order_bytes=0, rows_to_host=0)
+    assert check_trace(ok, device=True) == []
+    bad = _fake_trace(host_order_bytes=4096, rows_to_host=3)
+    problems = check_trace(bad, device=True)
+    assert len(problems) == 2
