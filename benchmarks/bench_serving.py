@@ -1,0 +1,264 @@
+"""Serving benchmark — the always-on matching service under load.
+
+Drives :class:`repro.service.MatchSession` (coalescing queue +
+telemetry-driven planner over the device-resident sharded engine) and
+reports what serving a paper-exact matcher actually costs:
+
+* **bit-identity gate** — planner-routed exact-tier answers must equal
+  direct ``engine.topk`` for both the index and linear tiers
+  (RuntimeError otherwise; this is a CI gate, not a statistic).
+* **coalescing** — closed-loop burst at concurrency >= 32: serial
+  dispatch (``max_batch=1``) vs coalesced (``max_batch=64``); the
+  coalesced configuration must beat serial QPS.
+* **open-loop Poisson** — seeded-arrival load; p50/p99 request
+  latency and achieved QPS (the numbers ``perf_report`` tabulates from
+  the ``serve.request_latency_s`` histogram embedded in
+  ``BENCH_serving.json``).
+* **overload shedding** — tiny queue + tight deadlines; the
+  per-reason ``serve.shed.*`` counters must sum exactly to
+  ``serve.rejected`` (never-silent-drop accounting gate).
+* **deadline downgrade** — calibrated planner under a mid budget:
+  tier mix, approx-tier recall vs the exact oracle, and the error-bar
+  certificate.
+* **window sweep** — QPS / requests-per-dispatch vs coalescing
+  window.
+
+Under ``verify="device"`` (any mesh size, including the CI
+forced-8-device leg) the run additionally gates
+``match.host_order_bytes == 0`` — serving must not regress the
+device-residency invariant.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_row
+
+CONCURRENCY = 32
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
+        else float("nan")
+
+
+def _burst(session, queries, k, *, n_clients=CONCURRENCY):
+    """Closed-loop: n_clients threads each submit their share and wait."""
+    reqs = [None] * len(queries)
+
+    def client(c):
+        for i in range(c, len(queries), n_clients):
+            r = session.submit(queries[i], k=k)
+            r.wait(120)
+            reqs[i] = r
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=client, args=(c,))
+          for c in range(n_clients)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    wall = time.perf_counter() - t0
+    ok = [r for r in reqs if r is not None and r.ok]
+    return ok, wall
+
+
+def _recall(approx_ids, exact_ids) -> float:
+    """Mean per-query top-k overlap with the exact oracle frontier."""
+    vals = [np.intersect1d(a[a >= 0], e[e >= 0]).size
+            / max((e >= 0).sum(), 1)
+            for a, e in zip(approx_ids, exact_ids)]
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def run(dryrun: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_technique
+    from repro.core.distributed import make_engine_service
+    from repro.data.synthetic import season_dataset
+    from repro.launch.mesh import make_mesh_compat
+    from repro.obs import REGISTRY
+    from repro.service import MatchSession
+
+    n, T, k = (256, 480, 4) if dryrun else (4096, 960, 8)
+    n_open = 16 if dryrun else 96
+    rate_qps = 50.0 if dryrun else 200.0
+    rows = []
+
+    n_dev = len(jax.devices())
+    n = max((n // n_dev) * n_dev, n_dev)
+    X = season_dataset(n + 2 * CONCURRENCY, T, 10, 0.7,
+                       per_series_strength=True, seed=21)
+    Q, D = X[:2 * CONCURRENCY], X[2 * CONCURRENCY:]
+    tech = make_technique("ssax", T=T, W=48, L=10, r2_season=0.7)
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    engine = make_engine_service(tech, jnp.asarray(D), mesh,
+                                 batch_size=64, verify="device",
+                                 media="ssd", metrics=REGISTRY)
+    engine.store.build_index(leaf_fill=16 if dryrun else 64)
+    jax.block_until_ready(engine.rep)
+    # warm the kernels over the session's power-of-two batch buckets so
+    # serial-vs-coalesced compares steady state, not compile time
+    q_n = 1
+    while q_n <= CONCURRENCY:
+        engine.topk(Q[:q_n], k=k, source="index")
+        q_n *= 2
+    engine.topk(Q[:1], k=k)
+    engine.topk_approx(Q[:1], k=k)
+
+    # -- gate 1: exact-tier bit-identity ---------------------------------
+    for tier, src in (("index", "index"), ("linear", None)):
+        with MatchSession(engine, metrics=REGISTRY, window_s=0.002,
+                          max_batch=CONCURRENCY) as s:
+            reqs = s.serve(Q[:CONCURRENCY], k=k, tier=tier)
+        oracle = engine.topk(Q[:CONCURRENCY], k=k, source=src)
+        for i, r in enumerate(reqs):
+            if not r.ok:
+                raise RuntimeError(f"serving/{tier}: request {i} shed: "
+                                   f"{r.error}")
+            if not (np.array_equal(r.indices, oracle.indices[i])
+                    and np.array_equal(r.distances, oracle.distances[i])):
+                raise RuntimeError(
+                    f"serving/{tier}: request {i} diverged from the "
+                    "direct engine oracle (exactness gate)")
+        rows.append((f"serving/exact_{tier}",
+                     f"bit_identical=yes n={len(reqs)} k={k}"))
+
+    # -- phase 2: serial vs coalesced at fixed concurrency ---------------
+    qps = {}
+    for label, mb, win in (("serial", 1, 0.0),
+                           ("coalesced", CONCURRENCY, 0.002)):
+        with MatchSession(engine, metrics=REGISTRY, window_s=win,
+                          max_batch=mb, max_queue=4 * CONCURRENCY) as s:
+            ok, wall = _burst(s, Q[:CONCURRENCY], k)
+        if len(ok) != CONCURRENCY:
+            raise RuntimeError(f"serving/{label}: {CONCURRENCY - len(ok)} "
+                               "requests shed in a closed-loop burst")
+        qps[label] = len(ok) / max(wall, 1e-9)
+        snap = REGISTRY.snapshot()["counters"]
+        rows.append((f"serving/{label}",
+                     f"conc={CONCURRENCY} qps={qps[label]:.0f} "
+                     f"p50={_pct([r.latency_s for r in ok], 50) * 1e3:.1f}"
+                     f"ms p99="
+                     f"{_pct([r.latency_s for r in ok], 99) * 1e3:.1f}ms"))
+    speedup = qps["coalesced"] / max(qps["serial"], 1e-9)
+    rows.append(("serving/coalescing_speedup", f"{speedup:.2f}x"))
+    if qps["coalesced"] <= qps["serial"]:
+        raise RuntimeError(
+            f"coalescing did not improve QPS over serial dispatch at "
+            f"concurrency {CONCURRENCY}: {qps['coalesced']:.0f} vs "
+            f"{qps['serial']:.0f}")
+
+    # -- phase 3: open-loop Poisson --------------------------------------
+    rng = np.random.default_rng(33)
+    gaps = rng.exponential(1.0 / rate_qps, size=n_open)
+    with MatchSession(engine, metrics=REGISTRY, window_s=0.002,
+                      max_batch=CONCURRENCY,
+                      max_queue=8 * CONCURRENCY) as s:
+        reqs = []
+        t0 = time.perf_counter()
+        for i in range(n_open):
+            time.sleep(gaps[i])
+            reqs.append(s.submit(Q[i % len(Q)], k=k))
+        for r in reqs:
+            r.wait(120)
+        wall = time.perf_counter() - t0
+    ok = [r for r in reqs if r.ok]
+    lat = [r.latency_s for r in ok]
+    shed_rate = 1.0 - len(ok) / max(len(reqs), 1)
+    rows.append(("serving/poisson",
+                 f"rate={rate_qps:.0f}qps served={len(ok)}/{n_open} "
+                 f"qps={len(ok) / max(wall, 1e-9):.0f} "
+                 f"p50={_pct(lat, 50) * 1e3:.1f}ms "
+                 f"p99={_pct(lat, 99) * 1e3:.1f}ms "
+                 f"shed={shed_rate:.2%}"))
+
+    # -- phase 4: overload shedding + accounting gate --------------------
+    with MatchSession(engine, metrics=REGISTRY, window_s=0.0,
+                      max_batch=4, max_queue=4) as s:
+        reqs = [s.submit(Q[i % len(Q)], k=k, deadline_s=1e-4)
+                for i in range(2 * CONCURRENCY)]
+        for r in reqs:
+            r.wait(120)
+    shed = [r for r in reqs if not r.ok]
+    reasons = {}
+    for r in shed:
+        reasons[r.shed_reason] = reasons.get(r.shed_reason, 0) + 1
+    c = REGISTRY.snapshot()["counters"]
+    shed_total = sum(v for name, v in c.items()
+                     if name.startswith("serve.shed."))
+    rejected = c.get("serve.rejected", 0)
+    if shed_total != rejected:
+        raise RuntimeError(
+            f"shed-reason accounting broken: sum(serve.shed.*)="
+            f"{shed_total} != serve.rejected={rejected}")
+    if not shed:
+        raise RuntimeError("overload phase shed nothing — the admission "
+                           "path was not exercised")
+    rows.append(("serving/overload",
+                 f"shed={len(shed)}/{len(reqs)} reasons={reasons} "
+                 f"accounting=exact"))
+
+    # -- phase 5: deadline downgrade + approx recall/error bar -----------
+    with MatchSession(engine, metrics=REGISTRY, window_s=0.002,
+                      max_batch=CONCURRENCY) as s:
+        s.calibrate(Q[:1], k=k)
+        budget = max(2e-3, 0.5 * s.planner.estimate("index"))
+        reqs = s.serve(Q[:CONCURRENCY], k=k, deadline_s=budget)
+    served = [r for r in reqs if r.ok]
+    tiers = {}
+    for r in served:
+        tiers[r.tier_served] = tiers.get(r.tier_served, 0) + 1
+    apx = [r for r in served if r.tier_served == "approx"]
+    recall = float("nan")
+    bars = [r.error_bar for r in apx if r.error_bar is not None]
+    if apx:
+        oracle = engine.topk(np.stack([r.query for r in apx]), k=k)
+        recall = _recall([r.indices for r in apx], oracle.indices)
+    rows.append(("serving/deadline",
+                 f"budget={budget * 1e3:.1f}ms tiers={tiers} "
+                 f"approx_recall={recall:.3f} "
+                 f"error_bar_mean={np.mean(bars) if bars else 0.0:.4f} "
+                 f"exact_certified="
+                 f"{sum(1 for b in bars if b == 0)}/{len(bars)}"))
+    REGISTRY.gauge("bench.approx_recall.serving").set(
+        recall if recall == recall else 1.0)
+
+    # -- phase 6: coalescing window sweep --------------------------------
+    for win_ms in (0.0, 2.0, 8.0):
+        with MatchSession(engine, metrics=REGISTRY,
+                          window_s=win_ms * 1e-3,
+                          max_batch=CONCURRENCY,
+                          max_queue=4 * CONCURRENCY) as s:
+            b0 = REGISTRY.snapshot()["counters"]
+            ok, wall = _burst(s, Q, k)
+        b1 = REGISTRY.snapshot()["counters"]
+        disp = b1.get("serve.batches", 0) - b0.get("serve.batches", 0)
+        per = len(ok) / max(disp, 1)
+        rows.append((f"serving/window_{win_ms:g}ms",
+                     f"qps={len(ok) / max(wall, 1e-9):.0f} "
+                     f"req_per_dispatch={per:.1f} "
+                     f"p50={_pct([r.latency_s for r in ok], 50) * 1e3:.1f}"
+                     "ms"))
+
+    # -- gate: serving must keep the device path device-resident ---------
+    hob = REGISTRY.snapshot()["counters"].get("match.host_order_bytes", 0)
+    if int(hob) != 0:
+        raise RuntimeError(f"serving moved candidate order to the host: "
+                           f"match.host_order_bytes={int(hob)}")
+    rows.append(("serving/device_residency", "host_order_bytes=0"))
+
+    for name, derived in rows:
+        emit_row(name, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    run(dryrun=True)

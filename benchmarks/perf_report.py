@@ -76,12 +76,25 @@ def _fmt(v, spec=".4g"):
     return "-" if v is None else format(v, spec)
 
 
+def _serve_quantiles(rec):
+    """(p50, p99) of the per-request serving latency from the suite's
+    embedded ``serve.request_latency_s`` histogram; (None, None) for
+    suites that never served a request."""
+    snap = rec.get("metrics") or {}
+    h = (snap.get("histograms") or {}).get("serve.request_latency_s")
+    if not h or not h.get("count"):
+        return None, None
+    from repro.obs.metrics import Histogram
+    hist = Histogram.from_dict(h)
+    return hist.quantile(0.5), hist.quantile(0.99)
+
+
 def bench_summary(results_dir: str) -> str:
     """Markdown table over every ``BENCH_<suite>.json`` summary block
     (suites that predate the unified schema show dashes)."""
     lines = ["| suite | ok | pruning_power | rows_fetched | modeled_io_s "
-             "| wall_s | host_bytes |",
-             "|---|---|---|---|---|---|---|"]
+             "| wall_s | host_bytes | serve_p50_s | serve_p99_s |",
+             "|---|---|---|---|---|---|---|---|---|"]
     found = 0
     for path in sorted(glob.glob(os.path.join(results_dir,
                                               "BENCH_*.json"))):
@@ -92,12 +105,14 @@ def bench_summary(results_dir: str) -> str:
         ok = "ok" if rec.get("ok") else "ERROR"
         if rec.get("dryrun"):
             ok += " (dryrun)"
+        p50, p99 = _serve_quantiles(rec)
         lines.append(
             f"| {suite} | {ok} | {_fmt(s.get('pruning_power'))} "
             f"| {_fmt(s.get('rows_fetched'), '.0f')} "
             f"| {_fmt(s.get('modeled_io_s'))} "
             f"| {_fmt(s.get('wall_s'), '.2f')} "
-            f"| {_fmt(s.get('host_bytes'), '.0f')} |")
+            f"| {_fmt(s.get('host_bytes'), '.0f')} "
+            f"| {_fmt(p50, '.3g')} | {_fmt(p99, '.3g')} |")
     return "\n".join(lines) if found else ""
 
 

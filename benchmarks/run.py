@@ -14,6 +14,7 @@ Paper artifact map:
     subseq   -> (subsequence subsystem: pruned windowed scan vs brute)
     index    -> (index subsystem: tree candidates vs linear sweep)
     sharded_verify -> (device-resident sharded verification vs host)
+    serving  -> (service subsystem: coalescing queue + planner under load)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -29,7 +30,7 @@ import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
           "extensions", "ingest", "subseq", "index", "sharded_verify",
-          "roofline", "perf"]
+          "serving", "roofline", "perf"]
 
 RESULTS_DIR = "results"
 

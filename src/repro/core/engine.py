@@ -283,10 +283,25 @@ def topk_verify(queries_raw, repr_dists, store: RawStore, *, k: int = 1,
     if trace is not None:                # candidates handed to this scan
         if stream is None:
             gen = n_fin.astype(np.int64)
+            # id layer behind the accumulated count: exclusion widening
+            # re-hands surviving candidates every round, so the summed
+            # "generated" over-counts — the noted ids dedup it into the
+            # per-query "generated_unique" the engines finalize
+            note = getattr(trace, "note_ids", None)
+            if note is not None:
+                for qi in range(q_n):
+                    fin = np.nonzero(np.isfinite(rd[qi]))[0]
+                    note("generated", qi,
+                         col_ids[fin] if col_ids is not None else fin)
         else:
             nf = getattr(stream, "n_finite", None)
             gen = (np.asarray(nf, np.int64) if nf is not None
                    else np.full(q_n, n, np.int64))
+            # a stream never re-hands an id, so its count is already a
+            # dedup count — no host-side id materialization needed
+            note = getattr(trace, "note_counts", None)
+            if note is not None:
+                note("generated", gen)
         trace.add("generated", gen)
 
     while True:
@@ -418,6 +433,10 @@ def verify_candidates(queries_raw, cand_idx, store: RawStore, *,
     io_s = store.modeled_io_seconds(total, n_fetch)
     if trace is not None:
         trace.add("generated", acc.astype(np.int64))
+        note = getattr(trace, "note_ids", None)
+        if note is not None:
+            for r in range(q_n):
+                note("generated", r, cand[r][mask[r]])
         trace.add("examined", acc.astype(np.int64))
         trace.add("verified", acc.astype(np.int64))
         trace.add("rows_fetched", int(total))
@@ -643,10 +662,13 @@ class MatchEngine:
         t0 = _time.perf_counter() if observing else 0.0
         sweep = getattr(self, "sweep", None)
         if trace is not None:
+            approx_src = bool(getattr(source, "is_approx", False))
             src_name = ("index" if source == "index" else
                         "linear" if source is None else
+                        "index-approx" if approx_src else
                         type(source).__name__)
-            trace.meta.update(engine="match", k=int(k), exact=bool(exact),
+            trace.meta.update(engine="match", k=int(k),
+                              exact=bool(exact) and not approx_src,
                               q_n=int(qs.shape[0]), total=int(total),
                               source=src_name, verify=self.verify_mode)
         hob0 = sweep.host_order_bytes if sweep is not None else 0
@@ -680,6 +702,32 @@ class MatchEngine:
             res.trace = trace
         return res
 
+    def topk_approx(self, queries_raw, k: int = 1, *,
+                    collect: Optional[int] = None, trace=None,
+                    explain: bool = False) -> TopKResult:
+        """Anytime/approximate top-k with a per-query error bar.
+
+        When the backing store carries a split-tree index, routes
+        through ``TreeCandidates`` approximate mode: the exact seed walk
+        runs in full, then the collect phase keeps only the ``collect``
+        best-bound survivors (default ``max(4 * k, 32)``).  The result
+        carries ``res.kth_lb`` (the k-th smallest of verified true
+        distances and the DROPPED candidates' lower bounds — a certified
+        lower bound on the true k-th-NN distance) and ``res.error_bar``
+        (``d_k - kth_lb``, >= 0; zero proves the answer exact).  Without
+        an index, falls back to the representation-top-k approximate
+        path (``exact=False``), which has no dropped-bound certificate —
+        ``kth_lb`` / ``error_bar`` are then absent."""
+        idx = getattr(self.store, "index", None)
+        if idx is None:
+            return self.topk(queries_raw, k=k, exact=False, trace=trace,
+                             explain=explain)
+        src = idx.source(device_order=self._stream_factory is not None,
+                         approx_collect=(collect if collect is not None
+                                         else max(4 * k, 32)))
+        return self.topk(queries_raw, k=k, source=src, trace=trace,
+                         explain=explain)
+
     def _observe(self, trace, res: TopKResult, sweep, total: int,
                  q_n: int, wall_s: float, hob0: int, h2d0: int) -> None:
         """Post-call recording: transfer deltas, pruning power, registry
@@ -693,6 +741,10 @@ class MatchEngine:
         if trace is not None:
             trace.set("wall_s", wall_s)
             trace.set("pruning_power", res.pruned_fraction.copy())
+            gu = trace.unique_counts("generated", q_n) \
+                if hasattr(trace, "unique_counts") else None
+            if gu is not None:
+                trace.set("generated_unique", gu)
             if sweep is not None:
                 trace.set("host_order_bytes", int(hob))
                 trace.set("h2d_bytes", int(h2d))

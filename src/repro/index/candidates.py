@@ -53,6 +53,10 @@ class CandidateSet:
     init_i: Optional[np.ndarray] = None
     seed_res: Optional[object] = None  # TopKResult of the seed phase
     stream: Optional[object] = None    # device-ordered candidate stream
+    # approximate mode only: per-query lower bounds of the candidates
+    # the bounded collect DROPPED — the certificate behind the result's
+    # ``kth_lb`` / ``error_bar`` (None on exact paths)
+    approx_dropped: Optional[list] = None
 
 
 @runtime_checkable
@@ -110,14 +114,29 @@ class TreeCandidates:
     ids instead of the host (bounds, col_ids) pair — results are
     identical (exactness holds for any valid-bound order; the f64
     bounds are rounded downward to f32, staying valid lower bounds).
+
+    ``approx_collect=C`` is the APPROXIMATE mode (the planner's anytime
+    tier): the seed walk still runs exactly, but the collect phase keeps
+    only the C best-(bound, id) survivors per query and records the
+    dropped candidates' lower bounds in ``CandidateSet.approx_dropped``.
+    ``topk_from_source`` turns those into a certified per-query
+    ``kth_lb`` (the k-th smallest over verified true distances and
+    dropped bounds — every dropped candidate's true distance is >= its
+    bound, so the true k-th NN distance is >= ``kth_lb``) and
+    ``error_bar = d_k - kth_lb``; an ``error_bar`` of zero proves the
+    answer exact despite the cap.
     """
 
     def __init__(self, tree: SplitTree, query_features: Callable, *,
                  prior_d=None, prior_i=None, seen=None,
-                 device_order: bool = False):
+                 device_order: bool = False,
+                 approx_collect: Optional[int] = None):
         self.tree = tree
         self._query_features = query_features
         self._device_order = bool(device_order)
+        if approx_collect is not None and approx_collect < 0:
+            raise ValueError("approx_collect must be >= 0")
+        self._approx_collect = approx_collect
         # prior and seen travel together: seen ids without their verified
         # frontier cannot be excluded exactly (their distances are lost),
         # and a seeded frontier without the seen set would be re-collected
@@ -129,6 +148,10 @@ class TreeCandidates:
         self._prior_d = prior_d
         self._prior_i = prior_i
         self._seen = seen
+
+    @property
+    def is_approx(self) -> bool:
+        return self._approx_collect is not None
 
     def _fresh_seeds(self, qf_r, k: int, n_prior: int, seen_r):
         """Best-first seed ids never verified before, walking deeper
@@ -153,7 +176,10 @@ class TreeCandidates:
             qf = qf[None]
         q_n = qf.shape[0]
         if tree.n == 0:
-            return CandidateSet(bounds=np.empty((q_n, 0)), col_ids=None)
+            return CandidateSet(
+                bounds=np.empty((q_n, 0)), col_ids=None,
+                approx_dropped=([np.empty(0)] * q_n if self.is_approx
+                                else None))
         k = min(k, tree.n)
 
         seen = self._seen if self._seen is not None \
@@ -191,6 +217,7 @@ class TreeCandidates:
                 np.concatenate([prior_i, seed_res.indices], axis=1), k)
 
         all_ids, all_lbs = [], []
+        dropped = [] if self.is_approx else None
         for r in range(q_n):
             # U upper-bounds the true k-th NN only once k members are
             # verified; a short frontier (corpus < k) collects everything
@@ -199,8 +226,20 @@ class TreeCandidates:
             ids_r, lb_r = tree.collect_bounds(qf[r], u)
             drop = np.concatenate([seen[r], seeds[r]])
             keep = ~np.isin(ids_r, drop)   # verified ids never re-enter
-            all_ids.append(ids_r[keep])
-            all_lbs.append(lb_r[keep])
+            ids_r, lb_r = ids_r[keep], lb_r[keep]
+            if self.is_approx and ids_r.size > self._approx_collect:
+                # bounded collect: keep the C best survivors in the scan
+                # order (bound, id); the dropped bounds are the error
+                # certificate — every dropped true distance >= its bound
+                order = np.lexsort((ids_r, lb_r))
+                cut = order[self._approx_collect:]
+                dropped.append(lb_r[cut].copy())
+                sel = np.sort(order[:self._approx_collect])
+                ids_r, lb_r = ids_r[sel], lb_r[sel]
+            elif self.is_approx:
+                dropped.append(np.empty(0))
+            all_ids.append(ids_r)
+            all_lbs.append(lb_r)
         union = np.unique(np.concatenate(all_ids))     # sorted row ids
         bounds = np.full((q_n, union.size), np.inf, np.float64)
         for r in range(q_n):
@@ -210,10 +249,11 @@ class TreeCandidates:
             return CandidateSet(bounds=None, col_ids=None,
                                 stream=host_order_stream(bounds, union),
                                 init_d=merged_d, init_i=merged_i,
-                                seed_res=seed_res)
+                                seed_res=seed_res, approx_dropped=dropped)
         return CandidateSet(bounds=bounds, col_ids=union,
                             init_d=merged_d,
-                            init_i=merged_i, seed_res=seed_res)
+                            init_i=merged_i, seed_res=seed_res,
+                            approx_dropped=dropped)
 
 
 def topk_from_source(queries_raw, source: CandidateSource, store, *,
@@ -275,19 +315,53 @@ def topk_from_source(queries_raw, source: CandidateSource, store, *,
              else cs.bounds.shape[1])
     n = width if total is None else int(total)
     if cs.seed_res is None:
-        if total is None or n == width or n == 0:
-            return res
-        return TopKResult(
+        if total is not None and n != width and n != 0:
+            res = TopKResult(
+                indices=res.indices, distances=res.distances,
+                raw_accesses=res.raw_accesses,
+                pruned_fraction=1.0 - res.raw_accesses / n,
+                store_accesses=res.store_accesses,
+                store_fetches=res.store_fetches,
+                io_seconds=res.io_seconds)
+    else:
+        seed = cs.seed_res
+        acc = res.raw_accesses + seed.raw_accesses
+        res = TopKResult(
             indices=res.indices, distances=res.distances,
-            raw_accesses=res.raw_accesses,
-            pruned_fraction=1.0 - res.raw_accesses / n,
-            store_accesses=res.store_accesses,
-            store_fetches=res.store_fetches, io_seconds=res.io_seconds)
-    seed = cs.seed_res
-    acc = res.raw_accesses + seed.raw_accesses
-    return TopKResult(
-        indices=res.indices, distances=res.distances, raw_accesses=acc,
-        pruned_fraction=1.0 - acc / max(n, 1),
-        store_accesses=res.store_accesses + seed.store_accesses,
-        store_fetches=res.store_fetches + seed.store_fetches,
-        io_seconds=res.io_seconds + seed.io_seconds)
+            raw_accesses=acc,
+            pruned_fraction=1.0 - acc / max(n, 1),
+            store_accesses=res.store_accesses + seed.store_accesses,
+            store_fetches=res.store_fetches + seed.store_fetches,
+            io_seconds=res.io_seconds + seed.io_seconds)
+    if cs.approx_dropped is not None:
+        _attach_error_bar(res, cs.approx_dropped, k, trace)
+    return res
+
+
+def _attach_error_bar(res, dropped: list, k: int, trace=None) -> None:
+    """Approximate-mode certificate: ``res.kth_lb[r]`` is the k-th
+    smallest over (verified true distances, dropped candidates' lower
+    bounds) — a valid lower bound on the true k-th-NN distance because
+    every dropped candidate's true distance is >= its bound.
+    ``res.error_bar = d_k - kth_lb`` (0 proves exactness; inf when
+    fewer than k candidates were verified at all)."""
+    q_n = res.distances.shape[0]
+    kth_lb = np.full(q_n, np.inf)
+    for r in range(q_n):
+        row = res.distances[r]
+        vals = np.concatenate([row[np.isfinite(row)],
+                               np.asarray(dropped[r], np.float64)])
+        if vals.size:
+            vals.sort()
+            kth_lb[r] = vals[min(k, vals.size) - 1]
+    dk = res.distances[:, -1].astype(np.float64)
+    # dk finite -> kth_lb <= dk (the union includes the verified row);
+    # dk inf with a finite dropped bound -> genuinely unbounded error;
+    # both inf (empty corpus) -> vacuously exact
+    res.kth_lb = kth_lb
+    res.error_bar = np.where(
+        np.isfinite(dk), np.maximum(dk - kth_lb, 0.0),
+        np.where(np.isfinite(kth_lb), np.inf, 0.0))
+    if trace is not None:
+        trace.set("kth_lb", kth_lb.copy())
+        trace.set("error_bar", res.error_bar.copy())

@@ -133,27 +133,37 @@ class SeriesIndex:
         return self.adapter.features(qs)
 
     def source(self, *, prior_d=None, prior_i=None, seen=None,
-               device_order: bool = False) -> TreeCandidates:
+               device_order: bool = False,
+               approx_collect: Optional[int] = None) -> TreeCandidates:
         """This index as a ``CandidateSource`` for the match engine.
         ``prior_d`` / ``prior_i`` / ``seen`` enable frontier reuse across
         exclusion-widening rounds (see ``TreeCandidates``): already
         verified ids are seeded, never verified twice.  ``device_order``
         sorts the compact candidate bounds on device and streams ids to
-        the scan instead of handing it a host matrix."""
+        the scan instead of handing it a host matrix.  ``approx_collect``
+        switches to the APPROXIMATE anytime mode: exact seed walk, then
+        at most that many collected survivors per query, with the
+        dropped bounds carried as the result's error certificate."""
         return TreeCandidates(self.tree, self.query_features,
                               prior_d=prior_d, prior_i=prior_i, seen=seen,
-                              device_order=device_order)
+                              device_order=device_order,
+                              approx_collect=approx_collect)
 
     def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
              verifier=None, merge=None, dist_fn=None, on_verified=None,
-             prior_d=None, prior_i=None, seen=None, trace=None):
+             prior_d=None, prior_i=None, seen=None,
+             approx_collect: Optional[int] = None, trace=None):
         """Exact top-k over ``store`` through the indexed traversal —
         bit-identical to the linear-sweep engine (same verification
         path, same tie-break).  ``dist_fn`` routes verification through
         a device-resident distance hook; ``prior_d``/``prior_i``/``seen``
         reuse an earlier round's verified frontier; ``trace`` records a
-        ``repro.obs`` query trace (seed/collect/scan phases)."""
-        src = self.source(prior_d=prior_d, prior_i=prior_i, seen=seen)
+        ``repro.obs`` query trace (seed/collect/scan phases).
+        ``approx_collect`` routes through the bounded-collect
+        approximate mode — the result then carries ``kth_lb`` /
+        ``error_bar`` (see ``TreeCandidates``)."""
+        src = self.source(prior_d=prior_d, prior_i=prior_i, seen=seen,
+                          approx_collect=approx_collect)
         return topk_from_source(queries_raw, src, store, k=k,
                                 batch_size=batch_size, verifier=verifier,
                                 merge=merge, total=self.n,

@@ -73,11 +73,26 @@ def render_trace(trace: Trace) -> str:
     exa = _arr(trace, "examined", q_n)
     ver = _arr(trace, "verified", q_n)
     pp = trace.get("pruning_power")
+    gu = trace.get("generated_unique")
+    uniq = ""
+    if gu is not None and not np.array_equal(np.atleast_1d(gu), gen):
+        # widening rounds re-hand candidates: the accumulated total
+        # over-counts, the union size is the honest per-query number
+        uniq = f" ({np.atleast_1d(gu).mean():.0f} unique)"
     lines.append("candidates/query: generated "
-                 f"{gen.mean():.0f}, examined {exa.mean():.0f}, "
+                 f"{gen.mean():.0f}{uniq}, examined {exa.mean():.0f}, "
                  f"verified {ver.mean():.0f}"
                  + (f"; pruning power {np.mean(pp):.2%}"
                     if pp is not None else ""))
+    bar = trace.get("error_bar")
+    if bar is not None:
+        bar = np.atleast_1d(np.asarray(bar, np.float64))
+        fin = bar[np.isfinite(bar)]
+        lines.append("approx certificate: error bar mean "
+                     f"{fin.mean() if fin.size else float('inf'):.4f}, "
+                     f"max {fin.max() if fin.size else float('inf'):.4f}"
+                     f" ({int((bar == 0).sum())}/{bar.size} provably "
+                     "exact)")
 
     rows = m.get("rows_fetched")
     if rows is not None:

@@ -15,12 +15,24 @@ Everything here is plain Python (no jax, no numpy required at import
 time): recording a metric is a dict lookup + float add, cheap enough to
 leave on in benchmarks, and absent entirely from the matching hot loops
 unless a caller opted in (engines take ``metrics=None`` by default).
+
+Thread safety: the matching service (``repro.service``) records from
+submitter threads concurrently with its dispatcher thread, so every
+read-modify-write (``inc`` / ``observe`` / ``merge`` / registry
+get-or-create) holds one shared module lock — a float add under a lock
+is still cheap, and exact totals under concurrency are what the
+merged-snapshot determinism contract promises.
 """
 
 from __future__ import annotations
 
 from bisect import bisect_left
+from threading import Lock
 from typing import Dict, Optional, Tuple
+
+# One lock for all metric mutation: contention is negligible (recording
+# is nanoseconds) and a shared lock avoids a per-metric slot.
+_REC_LOCK = Lock()
 
 # Quarter-decade log-spaced latency bounds, 1e-6 s .. ~1.78e2 s.  The
 # tuple is a module-level constant on purpose: every histogram in every
@@ -40,7 +52,8 @@ class Counter:
         self.value = 0.0
 
     def inc(self, v: float = 1.0) -> None:
-        self.value += float(v)
+        with _REC_LOCK:
+            self.value += float(v)
 
 
 class Gauge:
@@ -53,7 +66,8 @@ class Gauge:
         self.value = 0.0
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        with _REC_LOCK:
+            self.value = float(v)
 
 
 class Histogram:
@@ -71,18 +85,20 @@ class Histogram:
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.counts[bisect_left(self.bounds, v)] += 1
-        self.sum += v
-        self.count += 1
+        with _REC_LOCK:
+            self.counts[bisect_left(self.bounds, v)] += 1
+            self.sum += v
+            self.count += 1
 
     def merge(self, other: "Histogram") -> None:
         if self.bounds != other.bounds:
             raise ValueError("histogram bounds differ; merges are only "
                              "deterministic over identical fixed buckets")
-        for i, c in enumerate(other.counts):
-            self.counts[i] += c
-        self.sum += other.sum
-        self.count += other.count
+        with _REC_LOCK:
+            for i, c in enumerate(other.counts):
+                self.counts[i] += c
+            self.sum += other.sum
+            self.count += other.count
 
     def quantile(self, q: float) -> float:
         """Upper bucket bound at quantile ``q`` (conservative estimate;
@@ -99,8 +115,10 @@ class Histogram:
         return float("inf")
 
     def to_dict(self) -> dict:
-        return {"bounds": list(self.bounds), "counts": list(self.counts),
-                "sum": self.sum, "count": self.count}
+        with _REC_LOCK:                  # consistent (counts, sum, count)
+            return {"bounds": list(self.bounds),
+                    "counts": list(self.counts),
+                    "sum": self.sum, "count": self.count}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Histogram":
@@ -125,9 +143,9 @@ class MetricsRegistry:
     def _get(self, name: str, cls, *args):
         m = self._metrics.get(name)
         if m is None:
-            m = cls(*args)
-            self._metrics[name] = m
-        elif not isinstance(m, cls):
+            with _REC_LOCK:
+                m = self._metrics.setdefault(name, cls(*args))
+        if not isinstance(m, cls):
             raise TypeError(f"metric {name!r} is a {m.kind}, not a "
                             f"{cls.kind}")
         return m
@@ -152,8 +170,9 @@ class MetricsRegistry:
         """Plain-JSON view: ``{"counters": {name: value}, "gauges":
         {...}, "histograms": {name: {bounds, counts, sum, count}}}``."""
         out = {"counters": {}, "gauges": {}, "histograms": {}}
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
+        # list() snapshots the key set atomically; per-metric reads are
+        # consistent (Histogram.to_dict holds the recording lock)
+        for name, m in sorted(list(self._metrics.items())):
             if isinstance(m, Counter):
                 out["counters"][name] = m.value
             elif isinstance(m, Gauge):

@@ -22,7 +22,13 @@ A ``Trace`` is created per engine call (``MatchEngine.topk(trace=...)``
   fetched, modeled seeks, modeled I/O seconds, device<->host byte
   counters.  ``add`` sums numerics and numpy arrays elementwise, so
   multi-round paths (exclusion widening, seed + scan) accumulate
-  instead of overwriting.
+  instead of overwriting.  Because ``add`` sums, a candidate handed to
+  two widening rounds counts once per round — a per-round total, not a
+  dedup count.  The engines therefore also record the id sets behind
+  ``generated`` (``note_ids`` / ``note_counts``) and finalize a
+  deduplicated ``generated_unique`` per-query array into meta next to
+  the accumulated total (equal on single-round paths, strictly smaller
+  under exclusion widening).
 
 Zero-overhead-when-off contract: every instrumentation site in the
 matching stack is guarded by ``trace is None`` (or uses
@@ -78,7 +84,8 @@ class Span:
 class Trace:
     """Per-call query trace (see module docstring for the layers)."""
 
-    __slots__ = ("name", "meta", "spans", "rounds", "_stack")
+    __slots__ = ("name", "meta", "spans", "rounds", "_stack",
+                 "_ids", "_id_counts")
 
     def __init__(self, name: str = "query", **meta):
         self.name = name
@@ -86,6 +93,13 @@ class Trace:
         self.spans: List[Span] = []
         self.rounds: List[dict] = []
         self._stack: List[str] = []
+        # deduplicated-id layer behind the accumulated meta counts:
+        # key -> {query index -> [id arrays handed so far]} plus a
+        # count-only fallback for sources that cannot expose ids (a
+        # device-ordered stream never re-hands an id, so counting it
+        # once is already deduplicated)
+        self._ids: dict = {}
+        self._id_counts: dict = {}
 
     # -- spans ------------------------------------------------------------
     @contextmanager
@@ -134,6 +148,43 @@ class Trace:
             self.meta[key] = value
         else:
             self.meta[key] = cur + value
+
+    # -- deduplicated id tracking ------------------------------------------
+    def note_ids(self, key: str, qi: int, ids) -> None:
+        """Record the candidate ids behind one ``add(key, ...)`` round for
+        query ``qi``; :meth:`unique_counts` later reports the union size
+        (the dedup count the accumulated meta total over-counts under
+        exclusion widening)."""
+        arr = np.asarray(ids, np.int64)
+        if arr.size:
+            self._ids.setdefault(key, {}).setdefault(int(qi),
+                                                     []).append(arr.copy())
+
+    def note_counts(self, key: str, counts) -> None:
+        """Count-only fallback of :meth:`note_ids` for sources whose ids
+        stay on device (a candidate stream) — valid as a dedup count
+        because such a source never re-hands an id."""
+        counts = np.atleast_1d(np.asarray(counts, np.int64))
+        cur = self._id_counts.get(key)
+        self._id_counts[key] = counts.copy() if cur is None \
+            else cur + counts
+
+    def unique_counts(self, key: str, q_n: int):
+        """(q_n,) deduplicated per-query count for ``key``: |union of
+        noted id arrays| plus the count-only stream contribution.
+        None when nothing was noted under ``key``."""
+        per_q = self._ids.get(key)
+        counted = self._id_counts.get(key)
+        if per_q is None and counted is None:
+            return None
+        out = np.zeros(q_n, np.int64)
+        if counted is not None:
+            out[:len(counted)] += counted
+        if per_q is not None:
+            for qi, chunks in per_q.items():
+                if qi < q_n:
+                    out[qi] += np.unique(np.concatenate(chunks)).size
+        return out
 
     # -- rounds -----------------------------------------------------------
     def record_round(self, **fields) -> None:

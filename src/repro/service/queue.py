@@ -1,0 +1,265 @@
+"""Async request queue with coalescing dispatch and graceful shedding.
+
+The front half of the always-on matching service: callers ``submit``
+single-query requests from any thread; a dispatcher thread coalesces
+whatever is waiting (up to ``max_batch``, after at most ``window_s`` of
+batching delay anchored at the first queued request) into ONE engine
+dispatch — the kernels and ``core.engine.topk_verify`` are already
+multi-query, so a coalesced (Q, T) batch costs one encode, one
+candidate ordering and one sharded verification round-trip instead of
+Q of each.
+
+Admission control mirrors ``repro.serving.engine.ServeEngine.admit``'s
+shape and the ``serve.*`` metric names: a request that cannot be served
+is REJECTED WITH A REASON (``req.error`` set, ``req.done`` event set,
+``serve.rejected`` incremented) — never silently dropped.  Every shed
+is additionally counted under ``serve.shed.<reason>``, so the shed
+accounting always sums to the rejected count (a CI gate in
+``benchmarks/bench_serving.py``).
+
+Shed reasons:
+
+* ``queue_full``        — backlog at ``max_queue`` (admission time).
+* ``deadline_expired``  — the per-request deadline passed while queued
+  (dispatch time) or was non-positive at submit.
+* ``bad_query``         — malformed request (wrong length, bad k, an
+  unservable tier override); admission time, via the session's
+  validator.
+* ``shutdown``          — the service stopped before dispatch and was
+  closed without draining.
+* ``engine_error``      — the dispatch callback raised; every request
+  of the failed batch is shed with the exception text.
+
+The queue itself never looks inside a result: the ``dispatch(batch)``
+callback (``repro.service.session.MatchSession``) owns planning,
+engine calls and response fill-in.  Deadline-expiry shedding at
+dispatch time also lives in the session (it holds the clock) through
+:meth:`CoalescingQueue.shed`.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+SHED_QUEUE_FULL = "queue_full"
+SHED_DEADLINE = "deadline_expired"
+SHED_BAD_QUERY = "bad_query"
+SHED_SHUTDOWN = "shutdown"
+SHED_ENGINE_ERROR = "engine_error"
+
+_RID = itertools.count()
+
+
+@dataclass
+class MatchRequest:
+    """One single-query matching request and its response slot.
+
+    Callers fill the top block at ``submit`` time; the service fills
+    the rest and fires ``done``.  ``error`` follows the
+    ``ServeEngine.admit`` contract: None means the request was served;
+    a string is the reject/shed explanation (``shed_reason`` carries
+    the machine-readable reason code)."""
+
+    query: np.ndarray                   # (T,) raw query
+    k: int = 1
+    deadline_s: Optional[float] = None  # latency budget from submit
+    tier: Optional[str] = None          # explicit tier override
+    explain: bool = False               # attach a repro.obs trace
+
+    rid: int = field(default_factory=lambda: next(_RID))
+    t_submit: float = 0.0
+    t_deadline: Optional[float] = None
+    t_done: float = 0.0
+
+    indices: Optional[np.ndarray] = None    # (k,) best ids
+    distances: Optional[np.ndarray] = None  # (k,) true d_ED
+    rows: Optional[np.ndarray] = None       # subsequence mode only
+    starts: Optional[np.ndarray] = None
+    kth_lb: Optional[float] = None          # approx tier certificate
+    error_bar: Optional[float] = None
+    tier_served: Optional[str] = None
+    plan: Optional[object] = None           # planner.PlanDecision
+    trace: Optional[object] = None
+
+    error: Optional[str] = None
+    shed_reason: Optional[str] = None
+    done: threading.Event = field(default_factory=threading.Event)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until served or shed; True when the request finished."""
+        return self.done.wait(timeout)
+
+    @property
+    def ok(self) -> bool:
+        return self.done.is_set() and self.error is None
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class CoalescingQueue:
+    """Thread-safe coalescing request queue (see module docstring).
+
+    Parameters
+    ----------
+    dispatch:   ``dispatch(batch: list[MatchRequest]) -> None`` — runs
+                on the dispatcher thread, must fill every request and
+                set its ``done`` event (or shed it via :meth:`shed`).
+    validate:   optional ``validate(req) -> Optional[str]`` admission
+                hook; a returned message rejects with ``bad_query``.
+    window_s:   coalescing window — after the first request of a batch
+                arrives, wait at most this long for more before
+                dispatching (0: dispatch whatever is queued
+                immediately; coalescing then only captures requests
+                that raced in together).
+    max_batch:  dispatch at most this many requests per engine call
+                (1: serial dispatch, the bench baseline).
+    max_queue:  admission backlog bound; beyond it submits shed with
+                ``queue_full``.
+    metrics:    optional ``repro.obs.MetricsRegistry`` (``serve.*``).
+    clock:      injectable monotonic clock (tests).
+    """
+
+    def __init__(self, dispatch: Callable, *,
+                 validate: Optional[Callable] = None,
+                 window_s: float = 0.002, max_batch: int = 64,
+                 max_queue: int = 256, metrics=None,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._dispatch = dispatch
+        self._validate = validate
+        self.window_s = float(window_s)
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.metrics = metrics
+        self._clock = clock
+        self._q: List[MatchRequest] = []
+        self._cond = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- admission ---------------------------------------------------------
+    def shed(self, req: MatchRequest, reason: str, msg: str) -> None:
+        """Reject/shed one request with a reason — the never-silent-drop
+        primitive.  Mirrors ``ServeEngine.admit``'s reject shape (error
+        string, done flag, ``serve.rejected``) and adds the per-reason
+        ``serve.shed.<reason>`` counter the accounting gate sums."""
+        req.error = msg
+        req.shed_reason = reason
+        req.t_done = self._clock()
+        if self.metrics is not None:
+            self.metrics.counter("serve.rejected").inc()
+            self.metrics.counter(f"serve.shed.{reason}").inc()
+        req.done.set()
+
+    def submit(self, req: MatchRequest) -> bool:
+        """Admit a request (thread-safe).  Returns False when the
+        request was rejected — ``req.error`` / ``req.shed_reason`` say
+        why; the request is always resolved, never silently dropped."""
+        now = self._clock()
+        if self._stop:
+            self.shed(req, SHED_SHUTDOWN, "service is shut down")
+            return False
+        if self._validate is not None:
+            msg = self._validate(req)
+            if msg is not None:
+                self.shed(req, SHED_BAD_QUERY, msg)
+                return False
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            self.shed(req, SHED_DEADLINE,
+                      f"deadline budget {req.deadline_s}s is not positive")
+            return False
+        with self._cond:
+            if len(self._q) >= self.max_queue:
+                self.shed(req, SHED_QUEUE_FULL,
+                          f"queue at capacity ({self.max_queue})")
+                return False
+            req.t_submit = now
+            if req.deadline_s is not None:
+                req.t_deadline = now + req.deadline_s
+            self._q.append(req)
+            self._cond.notify_all()
+        if self.metrics is not None:
+            self.metrics.counter("serve.requests").inc()
+        return True
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+    # -- dispatcher --------------------------------------------------------
+    def start(self) -> "CoalescingQueue":
+        if self._thread is not None:
+            return self
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="match-dispatch", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the dispatcher.  ``drain=True`` serves everything still
+        queued (one final coalesced dispatch per ``max_batch``);
+        ``drain=False`` sheds the backlog with ``shutdown``."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        while True:
+            with self._cond:
+                batch = self._q[:self.max_batch]
+                del self._q[:self.max_batch]
+            if not batch:
+                break
+            if drain:
+                self._run_batch(batch)
+            else:
+                for r in batch:
+                    self.shed(r, SHED_SHUTDOWN,
+                              "service shut down before dispatch")
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._q and not self._stop:
+                    self._cond.wait()
+                if self._stop:
+                    return               # close() drains or sheds the rest
+                # coalescing window, anchored at the first queued request
+                # this batch: wait (briefly) for more traffic to batch
+                t_close = self._clock() + self.window_s
+                while len(self._q) < self.max_batch and not self._stop:
+                    left = t_close - self._clock()
+                    if left <= 0:
+                        break
+                    self._cond.wait(timeout=left)
+                batch = self._q[:self.max_batch]
+                del self._q[:self.max_batch]
+            if batch:
+                self._run_batch(batch)
+
+    def _run_batch(self, batch: List[MatchRequest]) -> None:
+        if self.metrics is not None:
+            self.metrics.counter("serve.batches").inc()
+            self.metrics.counter("serve.batched_requests").inc(len(batch))
+        try:
+            self._dispatch(batch)
+        except Exception as e:  # noqa: BLE001 — resolve, never hang callers
+            for r in batch:
+                if not r.done.is_set():
+                    self.shed(r, SHED_ENGINE_ERROR,
+                              f"{type(e).__name__}: {e}")
+        for r in batch:          # belt-and-braces: a dispatch must never
+            if not r.done.is_set():      # leave a caller blocked forever
+                self.shed(r, SHED_ENGINE_ERROR,
+                          "dispatch returned without resolving request")

@@ -1,0 +1,287 @@
+"""Session façade: store + index + sharded verify + obs in one object.
+
+``MatchSession`` wires an existing engine (``core.engine.MatchEngine``
+— typically built device-resident via
+``core.distributed.make_engine_service`` — or
+``subseq.search.SubseqEngine``) behind the coalescing queue
+(``service.queue``) and the telemetry-driven planner
+(``service.planner``), producing the one servable object the launcher
+(``launch/serve_match.py``) and the serving benchmark talk to:
+
+* ``submit`` / ``serve`` — async single-query requests; waiting
+  requests coalesce into one (Q, T) engine dispatch per batch.
+* exact tiers stay EXACT: a planner-routed "index" or "linear" answer
+  is bit-identical to calling ``engine.topk`` directly with that
+  source, and a coalesced batch answers every request identically to
+  dispatching it alone (batching neutrality) — both property-tested.
+* deadline-threatened requests downgrade to the anytime "approx" tier
+  and carry back ``kth_lb`` / ``error_bar`` (the certificate from
+  ``index.candidates``), never a silent miss.
+* every dispatch feeds the planner (``planner.observe``) and the obs
+  registry (``serve.*`` metrics + optional per-request EXPLAIN trace).
+
+Store I/O accounting is session-scoped: construction calls
+``store.reset_counters()`` so a session's ``io`` numbers never bleed
+in from whatever ran before it (and resetting never perturbs results
+— covered by the metrics-concurrency tests).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.service.planner import TIERS, QueryPlanner
+from repro.service.queue import (SHED_DEADLINE, CoalescingQueue,
+                                 MatchRequest)
+
+
+class MatchSession:
+    """One always-on matching service over one engine (see module doc).
+
+    Parameters
+    ----------
+    engine:      ``MatchEngine`` or ``SubseqEngine`` (auto-detected by
+                 the presence of ``engine.view``).
+    metrics:     ``repro.obs.MetricsRegistry`` for ``serve.*`` metrics;
+                 defaults to the engine's registry when it has one.
+    planner:     inject a preconfigured ``QueryPlanner`` (tests); by
+                 default one is built from the engine's store/index and
+                 seeded from the registry's existing latency history.
+    window_s / max_batch / max_queue: coalescing queue knobs.
+    approx_collect: bounded-collect size for the approx tier (default
+                 ``max(4k, 32)`` per request, the engine's own default).
+    safety:      planner deadline-downgrade margin.
+    """
+
+    def __init__(self, engine, *, metrics=None, planner=None,
+                 window_s: float = 0.002, max_batch: int = 64,
+                 max_queue: int = 256,
+                 approx_collect: Optional[int] = None,
+                 safety: float = 2.0):
+        self.engine = engine
+        self._subseq = hasattr(engine, "view")
+        self.metrics = metrics if metrics is not None \
+            else getattr(engine, "metrics", None)
+        self._approx_collect = approx_collect
+        if self._subseq:
+            view = engine.view
+            self.query_len = int(view.m)
+            self._store = view
+            has_index = getattr(view, "index", None) is not None
+            # the subsequence anytime tier routes through the window
+            # index; without one there is no approx tier to downgrade to
+            has_approx = has_index
+            total = int(view.n)
+        else:
+            store = engine.store
+            self.query_len = int(engine.encoder.T)
+            self._store = store
+            has_index = getattr(store, "index", None) is not None
+            has_approx = True
+            total = int(getattr(store, "n", None)
+                        or store.data.shape[0])
+        self.planner = planner if planner is not None else QueryPlanner(
+            total=total, has_index=has_index, has_approx=has_approx,
+            store=self._store, safety=safety,
+            approx_collect=approx_collect or 32)
+        if planner is None:
+            self.planner.seed_from_metrics(self.metrics)
+        # session-scoped I/O accounting (never perturbs results)
+        if hasattr(self._store, "reset_counters"):
+            self._store.reset_counters()
+        self._plan_lock = threading.Lock()
+        self.queue = CoalescingQueue(
+            self._dispatch, validate=self._validate, window_s=window_s,
+            max_batch=max_batch, max_queue=max_queue,
+            metrics=self.metrics)
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "MatchSession":
+        self.queue.start()
+        return self
+
+    def close(self, *, drain: bool = True) -> None:
+        self.queue.close(drain=drain)
+
+    def __enter__(self) -> "MatchSession":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=not any(exc))
+
+    # -- client surface ----------------------------------------------------
+    def submit(self, query, *, k: int = 1,
+               deadline_s: Optional[float] = None,
+               tier: Optional[str] = None,
+               explain: bool = False) -> MatchRequest:
+        """Enqueue one single-query request; returns immediately.  The
+        request resolves (served or shed-with-reason) via ``req.wait()``
+        — it is never silently dropped."""
+        req = MatchRequest(query=np.asarray(query, np.float32), k=int(k),
+                           deadline_s=deadline_s, tier=tier,
+                           explain=explain)
+        self.queue.submit(req)
+        return req
+
+    def serve(self, queries, *, k: int = 1,
+              deadline_s: Optional[float] = None,
+              tier: Optional[str] = None,
+              timeout: Optional[float] = 60.0) -> List[MatchRequest]:
+        """Convenience closed-loop batch: submit every query, wait for
+        all of them, return the resolved requests in submit order."""
+        reqs = [self.submit(q, k=k, deadline_s=deadline_s, tier=tier)
+                for q in np.atleast_2d(np.asarray(queries, np.float32))]
+        for r in reqs:
+            r.wait(timeout)
+        return reqs
+
+    def topk(self, queries, k: int = 1, **kw):
+        """Direct synchronous engine passthrough (the oracle the
+        service's exactness property tests compare against)."""
+        return self.engine.topk(queries, k=k, **kw)
+
+    def calibrate(self, sample=None, *, k: int = 1) -> dict:
+        """Prime the planner's rolling estimates by running each
+        servable tier once, directly, over ``sample`` (default: one
+        median query of zeros — enough for a latency observation).
+        Returns the planner snapshot."""
+        if sample is None:
+            sample = np.zeros((1, self.query_len), np.float32)
+        qs = np.atleast_2d(np.asarray(sample, np.float32))
+        for tier in TIERS:
+            if not self.planner.servable(tier):
+                continue
+            t0 = time.perf_counter()
+            res = self._run_tier(qs, k, tier, None)
+            with self._plan_lock:
+                self.planner.observe(tier, qs.shape[0],
+                                     time.perf_counter() - t0, res)
+        return self.planner.snapshot()
+
+    # -- admission ---------------------------------------------------------
+    def _validate(self, req: MatchRequest) -> Optional[str]:
+        q = np.asarray(req.query)
+        if q.ndim != 1 or q.shape[0] != self.query_len:
+            return (f"query shape {q.shape} does not match service "
+                    f"query length ({self.query_len},)")
+        if not np.all(np.isfinite(q)):
+            return "query contains non-finite values"
+        if req.k < 1:
+            return f"k must be >= 1, got {req.k}"
+        if req.tier is not None:
+            if req.tier not in TIERS:
+                return f"unknown tier {req.tier!r} (tiers: {TIERS})"
+            if not self.planner.servable(req.tier):
+                return f"tier {req.tier!r} is not servable here"
+        return None
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, batch: List[MatchRequest]) -> None:
+        """One coalesced engine round: shed the already-expired, route
+        the rest, run one engine call per (tier, k) group, scatter the
+        per-request slices back.  Runs on the dispatcher thread."""
+        now = time.monotonic()
+        groups: dict = {}
+        for req in batch:
+            if req.t_deadline is not None and now >= req.t_deadline:
+                self.queue.shed(req, SHED_DEADLINE,
+                                "deadline expired while queued")
+                continue
+            left = (req.t_deadline - now
+                    if req.t_deadline is not None else None)
+            with self._plan_lock:
+                plan = self.planner.route(k=req.k, deadline_left=left,
+                                          tier=req.tier)
+            req.plan = plan
+            if plan.downgraded and self.metrics is not None:
+                self.metrics.counter("serve.downgraded").inc()
+            groups.setdefault((plan.tier, req.k), []).append(req)
+        for (tier, k), reqs in groups.items():
+            self._run_group(tier, k, reqs)
+
+    @staticmethod
+    def _bucket(qs: np.ndarray) -> np.ndarray:
+        """Pad a coalesced batch up to the next power-of-two row count
+        (repeating the last query).  Coalescing produces arbitrary batch
+        sizes; without bucketing every new size is a fresh XLA compile,
+        which serial dispatch never pays — bucketing caps the shape set
+        at log2(max_batch) compiles.  Pad rows are real duplicate
+        queries, answered independently and sliced off, so per-request
+        results are untouched (covered by the batching-neutrality
+        property test)."""
+        q_n = qs.shape[0]
+        pow2 = 1 << (q_n - 1).bit_length()
+        if pow2 == q_n:
+            return qs
+        return np.concatenate(
+            [qs, np.repeat(qs[-1:], pow2 - q_n, axis=0)])
+
+    def _run_group(self, tier: str, k: int,
+                   reqs: Sequence[MatchRequest]) -> None:
+        qs = self._bucket(np.stack([r.query for r in reqs])
+                          .astype(np.float32))
+        trace = None
+        if any(r.explain for r in reqs):
+            from repro.obs import Trace
+            trace = Trace("serve.dispatch")
+        t0 = time.perf_counter()
+        res = self._run_tier(qs, k, tier, trace)
+        wall = time.perf_counter() - t0
+        with self._plan_lock:
+            self.planner.observe(tier, qs.shape[0], wall, res)
+        ids = getattr(res, "window_ids", None)
+        if ids is None:
+            ids = res.indices
+        kth_lb = getattr(res, "kth_lb", None)
+        error_bar = getattr(res, "error_bar", None)
+        for i, req in enumerate(reqs):
+            req.indices = np.asarray(ids[i]).copy()
+            req.distances = np.asarray(res.distances[i]).copy()
+            if self._subseq:
+                req.rows = np.asarray(res.rows[i]).copy()
+                req.starts = np.asarray(res.starts[i]).copy()
+            if kth_lb is not None:
+                req.kth_lb = float(np.atleast_1d(kth_lb)[i])
+            if error_bar is not None:
+                req.error_bar = float(np.atleast_1d(error_bar)[i])
+            req.tier_served = tier
+            req.trace = trace
+            req.t_done = time.monotonic()
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "serve.request_latency_s").observe(req.latency_s)
+                self.metrics.counter(f"serve.tier.{tier}").inc()
+            req.done.set()
+
+    def _run_tier(self, qs: np.ndarray, k: int, tier: str, trace):
+        """One engine call for one (tier, k) group.  Exact tiers call
+        ``engine.topk`` with exactly the source a direct caller would
+        pass — the bit-identity contract depends on adding nothing
+        else."""
+        collect = (self._approx_collect
+                   if self._approx_collect is not None else None)
+        if self._subseq:
+            if tier == "approx":
+                return self.engine.topk_approx(qs, k=k, collect=collect,
+                                               trace=trace)
+            return self.engine.topk(qs, k=k,
+                                    use_index=(tier == "index"),
+                                    trace=trace)
+        if tier == "approx":
+            return self.engine.topk_approx(qs, k=k, collect=collect,
+                                           trace=trace)
+        return self.engine.topk(qs, k=k,
+                                source="index" if tier == "index"
+                                else None, trace=trace)
+
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Service-level JSON view: planner estimates + queue depth."""
+        return {"planner": self.planner.snapshot(),
+                "queue_depth": self.queue.depth(),
+                "window_s": self.queue.window_s,
+                "max_batch": self.queue.max_batch}

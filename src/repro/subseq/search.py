@@ -251,6 +251,14 @@ class SubseqEngine:
                               verify=self.verify_mode)
             trace.set("wall_s", wall_s)
             trace.set("pruning_power", res.pruned_fraction.copy())
+            # deduplicated "generated": the accumulated meta total counts
+            # re-handed candidates once per widening round; the noted id
+            # layer reports the true union size alongside it
+            gu = trace.unique_counts("generated",
+                                     res.window_ids.shape[0]) \
+                if hasattr(trace, "unique_counts") else None
+            if gu is not None:
+                trace.set("generated_unique", gu)
             if hob is not None:
                 trace.set("host_order_bytes", hob)
                 trace.set("h2d_bytes", h2d)
@@ -348,6 +356,57 @@ class SubseqEngine:
             for qi in range(zq.shape[0]):
                 rd[qi, ver.ids(qi)] = np.inf
             k_fetch = min(nw, 2 * k_fetch)
+
+    def topk_approx(self, queries_raw, k: int = 1, *,
+                    collect: Optional[int] = None,
+                    batch_size: Optional[int] = None,
+                    trace=None, explain: bool = False) -> SubseqResult:
+        """Anytime/approximate window top-k through the index's bounded
+        collect (requires ``view.build_index()``): exact seed walk, at
+        most ``collect`` (default ``max(4 * k, 32)``) collected
+        candidates per query.  The result carries ``kth_lb`` /
+        ``error_bar`` — the same certificate contract as
+        ``MatchEngine.topk_approx``; an error bar of zero proves the
+        answer exact despite the cap."""
+        import time as _time
+        idx = self.view.index
+        if idx is None:
+            raise ValueError("topk_approx needs the window index; call "
+                             "view.build_index() first")
+        if idx.n != self.view.n:
+            raise ValueError(f"window index covers {idx.n} of "
+                             f"{self.view.n} windows; call view.sync()")
+        if explain and trace is None:
+            from repro.obs import Trace
+            trace = Trace("subseq.topk")
+        observing = trace is not None or self.metrics is not None
+        t0 = _time.perf_counter() if observing else 0.0
+        rows0 = self.view.accesses if observing else 0
+        hob0 = (self._sweep.host_order_bytes
+                if observing and self._sweep is not None else 0)
+        h2d0 = (self._sweep.h2d_bytes
+                if observing and self._sweep is not None else 0)
+        zq = self.normalize_queries(queries_raw)
+        if trace is not None:
+            trace.set("source", "index-approx")
+            trace.set("exact", False)
+        dfn = self._sweep.make_dist_fn(zq) if self._device else None
+        res = idx.topk(zq, self.view, k=k,
+                       batch_size=batch_size or self.batch_size,
+                       verifier=self.verifier, merge=self.merge,
+                       dist_fn=dfn, trace=trace,
+                       approx_collect=(collect if collect is not None
+                                       else max(4 * k, 32)))
+        out = self._wrap(res.indices, res.distances, res, self.view.n,
+                         {"rows": 0, "fetches": 0, "io": 0.0})
+        out.kth_lb = res.kth_lb
+        out.error_bar = res.error_bar
+        if observing:
+            self._observe(trace, out, k, _time.perf_counter() - t0,
+                          self.view.accesses - rows0, hob0, h2d0)
+        if trace is not None:
+            out.trace = trace
+        return out
 
     def _topk_indexed(self, zq, idx, k: int, exclusion: int, bs: int,
                       acc: dict, dfn, trace=None) -> SubseqResult:

@@ -1,0 +1,210 @@
+"""Anytime/approximate tier + generated-count dedup regression.
+
+Covers the two observability/index changes this PR rides on:
+
+* ``generated_unique``: exclusion-widening re-runs ``topk_verify`` on
+  the same trace, so the summed per-round ``generated`` over-counts
+  candidates that reappear across rounds.  The trace now also reports
+  the deduplicated per-query union (``generated_unique``) — equal to
+  the accumulated total for single-round calls, strictly <= (and
+  bounded by the corpus) for widening calls.
+
+* ``TreeCandidates`` approximate mode: stop after the exact seed walk
+  plus a bounded collect.  The dropped candidates' lower bounds join
+  the verified distances to form ``kth_lb`` — a certified lower bound
+  on the true k-NN distance — and ``error_bar = d_k - kth_lb >= 0``,
+  with zero proving the answer exact.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MatchEngine, make_technique
+from repro.data.synthetic import season_dataset
+from repro.obs import Trace
+from repro.store import SymbolicStore
+
+L = 10
+TECHS = ["sax", "ssax", "tsax", "stsax"]
+
+
+def _enc(name, T):
+    kw = {"sax": {}, "ssax": {"r2_season": 0.7},
+          "tsax": {"r2_trend": 0.3}, "stsax": {"r2_season": 0.5}}[name]
+    return make_technique(name, T=T, W=T // (2 * L), L=L, **kw)
+
+
+def _engine(tech, D, T):
+    store = SymbolicStore.from_rows(_enc(tech, T), D, media="ssd")
+    store.build_index(leaf_fill=16)
+    return MatchEngine(_enc(tech, T), store, verify="host",
+                       batch_size=32)
+
+
+# -- generated_unique regression ----------------------------------------
+
+def test_generated_unique_equals_total_single_round():
+    """Without widening there is exactly one topk_verify call per query
+    batch: the dedup union must equal the accumulated total."""
+    T, n, n_q = 240, 48, 3
+    X = season_dataset(n + n_q, T, L, 0.7, seed=3)
+    Q, D = X[:n_q], X[n_q:]
+    eng = _engine("ssax", D, T)
+    for source in (None, "index"):
+        res = eng.topk(Q, k=4, source=source, explain=True)
+        gen = np.atleast_1d(res.trace.get("generated"))
+        gu = np.atleast_1d(res.trace.get("generated_unique"))
+        assert np.array_equal(gen, gu), (source, gen, gu)
+
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_generated_unique_dedups_widening_rounds(tech):
+    """Exclusion widening re-generates candidates across rounds on one
+    trace: the summed total over-counts, the union must not — and must
+    never exceed the corpus size."""
+    from repro.subseq import SubseqEngine, WindowView
+    n, T, m, stride, k = 5, 360, 120, 3, 4
+    rng = np.random.default_rng(13)
+    D = season_dataset(n, T, L, 0.7, per_series_strength=True, seed=13)
+    rows_ = rng.integers(0, n, size=3)
+    offs = rng.integers(0, T - m, size=3)
+    Q = np.stack([D[r, o:o + m] for r, o in zip(rows_, offs)])
+    Q = Q + 0.02 * rng.normal(size=Q.shape).astype(np.float32)
+    view = WindowView(_enc(tech, m), D, stride=stride, media="ssd")
+    eng = SubseqEngine(view, verify="numpy", batch_size=64)
+    # heavy exclusion forces widening: every reported match suppresses
+    # a neighborhood, so the engine re-runs verification rounds
+    res = eng.topk(Q, k=k, exclusion=m, explain=True)
+    gen = np.atleast_1d(res.trace.get("generated")).astype(np.int64)
+    gu = np.atleast_1d(res.trace.get("generated_unique")).astype(np.int64)
+    assert gu.shape == gen.shape
+    assert np.all(gu <= gen)
+    assert np.all(gu <= view.n), (gu, view.n)
+    # the over-count is the regression: widening re-hands the full
+    # sweep, so the accumulated total exceeds the corpus while the
+    # dedup union cannot
+    if res.trace.rounds and len(
+            [r for r in res.trace.rounds if r.get("phase") == "widen"]):
+        assert gen.sum() > gu.sum()
+
+
+def test_trace_unique_counts_unit():
+    t = Trace("t")
+    t.note_ids("generated", 0, np.array([1, 2, 3]))
+    t.note_ids("generated", 0, np.array([2, 3, 4]))
+    t.note_ids("generated", 1, np.array([7]))
+    t.note_counts("generated", np.array([0, 2]))
+    out = t.unique_counts("generated", 3)
+    assert np.array_equal(out, [4, 3, 0])
+    assert t.unique_counts("nope", 2) is None
+
+
+# -- approximate tier ----------------------------------------------------
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_topk_approx_certificate(tech):
+    """kth_lb lower-bounds the true k-NN distance, error_bar >= 0, and
+    the approximate frontier's distances are >= the exact ones."""
+    T, n, n_q, k = 240, 96, 4, 4
+    X = season_dataset(n + n_q, T, L, 0.7, per_series_strength=True,
+                       seed=7)
+    Q, D = X[:n_q], X[n_q:]
+    eng = _engine(tech, D, T)
+    exact = eng.topk(Q, k=k, source="index")
+    res = eng.topk_approx(Q, k=k, collect=k, explain=True)
+    assert res.kth_lb.shape == (n_q,)
+    assert res.error_bar.shape == (n_q,)
+    assert np.all(res.error_bar >= 0.0)
+    for qi in range(n_q):
+        true_dk = exact.distances[qi, -1]
+        assert res.kth_lb[qi] <= true_dk + 1e-5, tech
+        # approximate distances can only be >= exact (same metric,
+        # subset of candidates verified)
+        assert np.all(res.distances[qi] >= exact.distances[qi] - 1e-5)
+    # trace labels the source as approximate
+    assert res.trace.get("exact") is False
+    assert res.trace.get("source") == "index-approx"
+    assert res.trace.get("error_bar") is not None
+
+
+def test_topk_approx_large_collect_is_exact():
+    """With a collect budget >= the corpus nothing is dropped: the
+    answer equals exact topk and the error bar certifies it (0)."""
+    T, n, n_q, k = 240, 64, 3, 4
+    X = season_dataset(n + n_q, T, L, 0.7, seed=19)
+    Q, D = X[:n_q], X[n_q:]
+    eng = _engine("ssax", D, T)
+    exact = eng.topk(Q, k=k, source="index")
+    res = eng.topk_approx(Q, k=k, collect=n)
+    assert np.array_equal(res.indices, exact.indices)
+    assert np.array_equal(res.distances, exact.distances)
+    assert np.all(res.error_bar == 0.0)
+
+
+def test_topk_approx_recall_improves_with_collect():
+    """Recall vs the exact oracle is monotone-ish in the collect budget
+    and bounded by 1; the bounded run examines fewer candidates."""
+    T, n, n_q, k = 240, 128, 6, 4
+    X = season_dataset(n + n_q, T, L, 0.5, per_series_strength=True,
+                       seed=23)
+    Q, D = X[:n_q], X[n_q:]
+    eng = _engine("ssax", D, T)
+    exact = eng.topk(Q, k=k, source="index")
+
+    def recall(res):
+        return np.mean([np.intersect1d(a, e).size / k for a, e in
+                        zip(res.indices, exact.indices)])
+
+    small = eng.topk_approx(Q, k=k, collect=k)
+    large = eng.topk_approx(Q, k=k, collect=n)
+    assert 0.0 <= recall(small) <= 1.0
+    assert recall(large) == 1.0
+    assert small.raw_accesses.sum() <= large.raw_accesses.sum()
+
+
+def test_topk_approx_without_index_falls_back():
+    """No index: topk_approx degrades to representation-top-k (the
+    paper's approximate matching) without a certificate."""
+    T, n, n_q, k = 240, 48, 2, 3
+    X = season_dataset(n + n_q, T, L, 0.7, seed=29)
+    Q, D = X[:n_q], X[n_q:]
+    enc = _enc("sax", T)
+    store = SymbolicStore.from_rows(enc, D, media="ssd")  # no index
+    eng = MatchEngine(enc, store, verify="host", batch_size=32)
+    res = eng.topk_approx(Q, k=k)
+    ref = eng.topk(Q, k=k, exact=False)
+    assert np.array_equal(res.indices, ref.indices)
+    assert not hasattr(res, "kth_lb")
+
+
+def test_subseq_topk_approx_certificate():
+    from repro.subseq import SubseqEngine, WindowView
+    n, T, m, stride, k = 6, 360, 120, 6, 3
+    rng = np.random.default_rng(31)
+    D = season_dataset(n, T, L, 0.7, per_series_strength=True, seed=31)
+    rows_ = rng.integers(0, n, size=3)
+    offs = rng.integers(0, T - m, size=3)
+    Q = np.stack([D[r, o:o + m] for r, o in zip(rows_, offs)])
+    view = WindowView(_enc("ssax", m), D, stride=stride, media="ssd")
+    view.build_index(leaf_fill=16)
+    eng = SubseqEngine(view, verify="host", batch_size=64)
+    exact = eng.topk(Q, k=k, use_index=True)
+    res = eng.topk_approx(Q, k=k, collect=k, explain=True)
+    assert np.all(res.error_bar >= 0.0)
+    for qi in range(len(Q)):
+        assert res.kth_lb[qi] <= exact.distances[qi, -1] + 1e-5
+    big = eng.topk_approx(Q, k=k, collect=view.n)
+    assert np.array_equal(big.window_ids, exact.window_ids)
+    assert np.all(big.error_bar == 0.0)
+    # unindexed subseq engines cannot serve the anytime tier
+    view2 = WindowView(_enc("ssax", m), D, stride=stride, media="ssd")
+    with pytest.raises(ValueError):
+        SubseqEngine(view2, verify="numpy").topk_approx(Q, k=k)
+
+
+def test_tree_candidates_rejects_bad_collect():
+    T, n = 240, 48
+    X = season_dataset(n, T, L, 0.7, seed=37)
+    eng = _engine("ssax", X, T)
+    with pytest.raises(ValueError):
+        eng.store.index.source(approx_collect=-1)

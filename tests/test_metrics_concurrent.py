@@ -1,0 +1,145 @@
+"""MetricsRegistry under concurrent service use.
+
+The serving front-end records from client threads, the dispatcher
+thread and the engine simultaneously; this suite pins down the
+guarantees the service relies on:
+
+* recording is atomic under threads — no lost counter increments or
+  histogram observations;
+* ``merge_snapshots`` over per-phase registries equals one shared
+  registry that saw the same traffic (merged histograms == sum of the
+  per-phase snapshots, bucket by bucket);
+* ``reset_counters()`` at a service-session boundary scopes store I/O
+  accounting to the session — no bleed into the next session's
+  numbers, and no effect on results.
+"""
+
+import threading
+
+import numpy as np
+
+from repro.data.synthetic import season_dataset
+from repro.obs import MetricsRegistry
+from repro.obs.metrics import merge_snapshots
+
+N_THREADS = 8
+N_OPS = 400
+
+
+def _hammer(reg, tid):
+    for i in range(N_OPS):
+        reg.counter("c.total").inc()
+        reg.counter(f"c.thread{tid}").inc(2)
+        reg.histogram("h.lat").observe(1e-5 * (i % 7 + 1))
+        reg.gauge(f"g.thread{tid}").set(float(i))
+
+
+def test_concurrent_recording_loses_nothing():
+    reg = MetricsRegistry()
+    ts = [threading.Thread(target=_hammer, args=(reg, t))
+          for t in range(N_THREADS)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["counters"]["c.total"] == N_THREADS * N_OPS
+    for t in range(N_THREADS):
+        assert snap["counters"][f"c.thread{t}"] == 2 * N_OPS
+    h = snap["histograms"]["h.lat"]
+    assert h["count"] == N_THREADS * N_OPS
+    assert sum(h["counts"]) == N_THREADS * N_OPS
+
+
+def test_merged_phase_snapshots_equal_shared_registry():
+    """Per-phase registries merged == one shared registry, for the same
+    interleaved traffic (the bench runner's per-suite pattern under
+    concurrent use)."""
+    shared = MetricsRegistry()
+    phases = [MetricsRegistry() for _ in range(3)]
+
+    def worker(tid):
+        for p, reg in enumerate(phases):
+            for i in range(50):
+                for r in (reg, shared):
+                    r.counter("c.ops").inc()
+                    r.histogram("h.lat").observe(1e-4 * (i % 5 + 1 + p))
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    merged = None
+    for reg in phases:
+        merged = merge_snapshots(merged, reg.snapshot())
+    want = shared.snapshot()
+    assert merged["counters"] == want["counters"]
+    mh, wh = merged["histograms"]["h.lat"], want["histograms"]["h.lat"]
+    assert mh["count"] == wh["count"]
+    assert mh["counts"] == wh["counts"]
+    assert np.isclose(mh["sum"], wh["sum"])
+    # and bucket-by-bucket the merge is the sum of the phases
+    per_phase = [reg.snapshot()["histograms"]["h.lat"] for reg in phases]
+    assert mh["counts"] == [
+        sum(p["counts"][b] for p in per_phase)
+        for b in range(len(mh["counts"]))]
+
+
+def test_reset_counters_scopes_io_to_session():
+    """Store I/O accounting resets at a session boundary: the second
+    session reports only its own traffic, and resetting never perturbs
+    results (same engine, same answers)."""
+    from repro.core import MatchEngine, make_technique
+    from repro.service import MatchSession
+    from repro.store import SymbolicStore
+
+    T, n, n_q, k, L = 240, 48, 3, 3, 10
+    X = season_dataset(n + n_q, T, L, 0.7, seed=41)
+    Q, D = X[:n_q], X[n_q:]
+    enc = make_technique("ssax", T=T, W=T // (2 * L), L=L, r2_season=0.7)
+    store = SymbolicStore.from_rows(enc, D, media="ssd")
+    store.build_index(leaf_fill=16)
+    eng = MatchEngine(enc, store, verify="host", batch_size=32)
+
+    with MatchSession(eng, metrics=MetricsRegistry(),
+                      window_s=0.0, max_batch=4) as s1:
+        r1 = s1.serve(Q, k=k, tier="index")
+    after_first = store.accesses
+    assert after_first > 0
+
+    # session 2: construction resets the store counters, so its I/O
+    # numbers start from zero instead of inheriting session 1's
+    with MatchSession(eng, metrics=MetricsRegistry(),
+                      window_s=0.0, max_batch=4) as s2:
+        assert store.accesses == 0
+        r2 = s2.serve(Q, k=k, tier="index")
+    assert 0 < store.accesses <= after_first
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a.indices, b.indices)
+        assert np.array_equal(a.distances, b.distances)
+
+
+def test_snapshot_while_recording_does_not_deadlock():
+    """snapshot() runs concurrently with recording (the reporter thread
+    pattern) — must terminate and return a consistent shape."""
+    reg = MetricsRegistry()
+    stop = threading.Event()
+
+    def rec():
+        while not stop.is_set():
+            reg.counter("c.x").inc()
+            reg.histogram("h.x").observe(1e-3)
+
+    ts = [threading.Thread(target=rec) for _ in range(3)]
+    for t in ts:
+        t.start()
+    try:
+        for _ in range(200):
+            snap = reg.snapshot()
+            assert set(snap) == {"counters", "gauges", "histograms"}
+    finally:
+        stop.set()
+        for t in ts:
+            t.join()
+    assert reg.snapshot()["counters"]["c.x"] > 0

@@ -1,0 +1,264 @@
+"""Service subsystem: coalescing front-end + planner exactness.
+
+The two properties the always-on service is allowed to exist under:
+
+1. **Exactness discipline** — a planner-routed exact-tier answer is
+   bit-identical to calling ``engine.topk`` directly with that tier's
+   source, for every encoder x candidate source x verification path.
+2. **Batching neutrality** — a coalesced (Q, T) dispatch answers every
+   request identically to dispatching it alone (including the session's
+   power-of-two shape bucketing, which pads with duplicate queries).
+
+Plus the front-end contracts: admission control sheds with a reason
+and exact ``serve.shed.* == serve.rejected`` accounting (never a
+silent drop), deadline-threatened requests downgrade to the anytime
+tier with an error-bar certificate, and the planner's routing follows
+its estimates.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MatchEngine, make_technique
+from repro.data.synthetic import season_dataset
+from repro.obs import MetricsRegistry
+from repro.service import (TIERS, CoalescingQueue, MatchRequest,
+                           MatchSession, QueryPlanner)
+from repro.store import SymbolicStore
+
+L = 10
+TECHS = ["sax", "ssax", "tsax", "stsax"]
+
+
+def _enc(name, T):
+    kw = {"sax": {}, "ssax": {"r2_season": 0.7},
+          "tsax": {"r2_trend": 0.3}, "stsax": {"r2_season": 0.5}}[name]
+    return make_technique(name, T=T, W=T // (2 * L), L=L, **kw)
+
+
+def _mesh1():
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1,), ("data",))
+
+
+def _data(tech, T=240, n=64, n_q=5, seed=5):
+    X = season_dataset(n + n_q, T, L, 0.7, per_series_strength=True,
+                       seed=seed)
+    return X[:n_q], X[n_q:]
+
+
+def _host_engine(tech, Q, D, T):
+    enc = _enc(tech, T)
+    store = SymbolicStore.from_rows(enc, D, media="ssd")
+    store.build_index(leaf_fill=16)
+    return MatchEngine(enc, store, verify="host", batch_size=32)
+
+
+def _device_engine(tech, Q, D, T):
+    import jax.numpy as jnp
+    from repro.core.distributed import make_engine_service
+    dev = make_engine_service(_enc(tech, T), jnp.asarray(D), _mesh1(),
+                              batch_size=32, verify="device")
+    dev.store.build_index(leaf_fill=16)
+    return dev
+
+
+@pytest.mark.parametrize("tech", TECHS)
+@pytest.mark.parametrize("verify", ["host", "device"])
+def test_exact_tiers_bit_identical_and_batch_neutral(tech, verify):
+    """Coalesced, planner-routed exact answers == direct per-request
+    ``topk`` for both exact tiers, all encoders, host and device."""
+    T, k = 240, 4
+    Q, D = _data(tech, T=T)
+    engine = (_host_engine if verify == "host" else _device_engine)(
+        tech, Q, D, T)
+    src = {"index": "index", "linear": None}
+    for tier in ("index", "linear"):
+        sess = MatchSession(engine, metrics=MetricsRegistry(),
+                            window_s=0.05, max_batch=len(Q))
+        # submit before start: deterministically one coalesced batch
+        reqs = [sess.submit(q, k=k, tier=tier) for q in Q]
+        sess.start()
+        for r in reqs:
+            assert r.wait(120) and r.ok, (tier, r.error)
+        sess.close()
+        assert all(r.tier_served == tier for r in reqs)
+        batch = engine.topk(Q, k=k, source=src[tier])
+        for i, r in enumerate(reqs):
+            solo = engine.topk(Q[i][None], k=k, source=src[tier])
+            label = (tech, verify, tier, i)
+            assert np.array_equal(r.indices, batch.indices[i]), label
+            assert np.array_equal(r.distances, batch.distances[i]), label
+            assert np.array_equal(r.indices, solo.indices[0]), label
+            assert np.array_equal(r.distances, solo.distances[0]), label
+
+
+def test_batching_neutrality_odd_sizes():
+    """Non-power-of-two coalesced batches (exercising the pad bucket)
+    answer identically to solo dispatch."""
+    T, k = 240, 3
+    Q, D = _data("ssax", T=T, n_q=5)
+    engine = _host_engine("ssax", Q, D, T)
+    for n_sub in (1, 3, 5):
+        sess = MatchSession(engine, metrics=MetricsRegistry(),
+                            window_s=0.05, max_batch=8)
+        reqs = [sess.submit(q, k=k, tier="index") for q in Q[:n_sub]]
+        sess.start()
+        for r in reqs:
+            assert r.wait(120) and r.ok, r.error
+        sess.close()
+        for i, r in enumerate(reqs):
+            solo = engine.topk(Q[i][None], k=k, source="index")
+            assert np.array_equal(r.indices, solo.indices[0]), n_sub
+            assert np.array_equal(r.distances, solo.distances[0]), n_sub
+
+
+def test_subseq_session_exact_tiers():
+    """The session serves a SubseqEngine too: exact window answers
+    bit-identical to direct windowed topk."""
+    from repro.subseq import SubseqEngine, WindowView
+    n, T, m, stride, k = 6, 360, 120, 6, 3
+    rng = np.random.default_rng(9)
+    D = season_dataset(n, T, L, 0.7, per_series_strength=True, seed=9)
+    rows_ = rng.integers(0, n, size=3)
+    offs = rng.integers(0, T - m, size=3)
+    Q = np.stack([D[r, o:o + m] for r, o in zip(rows_, offs)])
+    view = WindowView(_enc("ssax", m), D, stride=stride, media="ssd")
+    view.build_index(leaf_fill=16)
+    engine = SubseqEngine(view, verify="host", batch_size=64)
+    for tier, use_index in (("index", True), ("linear", False)):
+        sess = MatchSession(engine, metrics=MetricsRegistry(),
+                            window_s=0.05, max_batch=4)
+        reqs = [sess.submit(q, k=k, tier=tier) for q in Q]
+        sess.start()
+        for r in reqs:
+            assert r.wait(120) and r.ok, r.error
+        sess.close()
+        for i, r in enumerate(reqs):
+            solo = engine.topk(Q[i][None], k=k, use_index=use_index)
+            assert np.array_equal(r.indices, solo.window_ids[0])
+            assert np.array_equal(r.rows, solo.rows[0])
+            assert np.array_equal(r.starts, solo.starts[0])
+            assert np.array_equal(r.distances, solo.distances[0])
+
+
+def test_shed_accounting_and_reasons():
+    """Every rejected request carries a reason; per-reason counters sum
+    exactly to ``serve.rejected``; nothing is silently dropped."""
+    T = 240
+    Q, D = _data("sax", T=T)
+    engine = _host_engine("sax", Q, D, T)
+    reg = MetricsRegistry()
+    sess = MatchSession(engine, metrics=reg, window_s=0.0,
+                        max_batch=2, max_queue=2)
+    sheds = []
+    sheds.append(sess.submit(np.zeros(7)))               # bad shape
+    sheds.append(sess.submit(Q[0], k=0))                 # bad k
+    sheds.append(sess.submit(Q[0], tier="nope"))         # bad tier
+    sheds.append(sess.submit(Q[0], deadline_s=-1.0))     # dead budget
+    bad_vals = Q[0].copy()
+    bad_vals[0] = np.nan
+    sheds.append(sess.submit(bad_vals))                  # non-finite
+    ok1 = sess.submit(Q[0])
+    ok2 = sess.submit(Q[1])
+    sheds.append(sess.submit(Q[2]))                      # queue full
+    for r in sheds:
+        assert r.done.is_set() and not r.ok and r.error is not None
+        assert r.shed_reason in ("bad_query", "deadline_expired",
+                                 "queue_full")
+    sess.start()
+    sess.close()
+    assert ok1.ok and ok2.ok
+    sess2 = MatchSession(engine, metrics=reg, window_s=0.0, max_batch=2)
+    late = MatchRequest(query=Q[0].astype(np.float32))
+    sess2.start()
+    sess2.close()
+    sess2.queue.submit(late)                             # after shutdown
+    assert late.shed_reason == "shutdown"
+    c = reg.snapshot()["counters"]
+    shed_total = sum(v for name, v in c.items()
+                     if name.startswith("serve.shed."))
+    assert shed_total == c["serve.rejected"] == len(sheds) + 1
+    assert c["serve.requests"] == 2
+
+
+def test_engine_error_resolves_requests():
+    """A dispatch exception sheds the batch with ``engine_error`` —
+    callers are never left blocked."""
+    def boom(batch):
+        raise RuntimeError("kaput")
+
+    reg = MetricsRegistry()
+    q = CoalescingQueue(boom, window_s=0.0, max_batch=4, metrics=reg)
+    req = MatchRequest(query=np.zeros(4, np.float32))
+    q.submit(req)
+    q.start()
+    assert req.wait(30)
+    q.close()
+    assert req.shed_reason == "engine_error" and "kaput" in req.error
+    c = reg.snapshot()["counters"]
+    assert c["serve.shed.engine_error"] == c["serve.rejected"] == 1
+
+
+def test_deadline_downgrade_serves_approx_with_error_bar():
+    """A request whose budget cannot cover the exact tier is downgraded
+    (not shed): served from the anytime tier, carrying kth_lb and a
+    non-negative error bar."""
+    T, k = 240, 4
+    Q, D = _data("stsax", T=T)
+    engine = _host_engine("stsax", Q, D, T)
+    reg = MetricsRegistry()
+    sess = MatchSession(engine, metrics=reg, window_s=0.0, max_batch=4)
+    sess.calibrate(Q[:1], k=k)
+    # pin the exact-tier estimates far beyond the budget: every request
+    # is deadline-threatened, but 5s is generous enough that none
+    # expires while queued
+    sess.planner._est["index"].wall_s = 10.0
+    sess.planner._est["linear"].wall_s = 10.0
+    sess.start()
+    reqs = [sess.submit(q, k=k, deadline_s=5.0) for q in Q]
+    for r in reqs:
+        assert r.wait(120)
+    sess.close()
+    exact = engine.topk(Q, k=k, source="index")
+    for i, r in enumerate(reqs):
+        assert r.ok, r.error
+        assert r.tier_served == "approx"
+        assert r.plan is not None and r.plan.downgraded
+        assert r.kth_lb is not None and r.error_bar is not None
+        assert r.error_bar >= 0.0
+        # certificate: kth_lb lower-bounds the true k-NN distance
+        assert r.kth_lb <= exact.distances[i, -1] + 1e-5
+    assert reg.snapshot()["counters"]["serve.downgraded"] == len(Q)
+
+
+def test_planner_routing_and_learning():
+    planner = QueryPlanner(total=10_000, has_index=True)
+    d = planner.route(k=1)
+    assert d.tier == "index" and d.reason == "cost"
+    # learned estimates flip the choice
+    class _R:
+        raw_accesses = np.array([100.0])
+    planner.observe("index", 1, 5.0, _R())
+    planner.observe("linear", 1, 0.01, _R())
+    assert planner.route(k=1).tier == "linear"
+    # deadline downgrade
+    d = planner.route(k=1, deadline_left=1e-4)
+    assert d.tier == "approx" and d.downgraded
+    # forced override wins
+    assert planner.route(k=1, tier="linear").reason == "forced"
+    # no index -> linear is the only exact tier
+    p2 = QueryPlanner(total=100, has_index=False)
+    assert p2.route(k=1).tier == "linear"
+    assert p2.route(k=1).reason == "only_tier"
+
+
+def test_planner_seeds_from_registry_history():
+    reg = MetricsRegistry()
+    for _ in range(8):
+        reg.histogram("match.topk_latency_s").observe(0.25)
+    planner = QueryPlanner(total=1000, has_index=True)
+    planner.seed_from_metrics(reg)
+    # adopted the observed p50 (conservative bucket upper bound)
+    assert 0.2 <= planner.estimate("index") <= 0.5
+    assert 0.2 <= planner.estimate("linear") <= 0.5
