@@ -1,0 +1,207 @@
+"""Matrix-profile self-join benchmark (``repro.profile``).
+
+Three measurements:
+
+1. **FFT vs accumulation crossover** — ``kernels.fft_dot``'s MASS-style
+   rfft/irfft sliding dot product against the m-step accumulation twin
+   (both plain jitted XLA; off-TPU the Pallas kernel benchmarks the
+   interpreter, not the algorithm), swept over window length m.  The
+   crossover m (first m where FFT wins) lands in ``BENCH_selfjoin.json``
+   — the acceptance regime is m >= 1k, where the O(T log T) transform
+   must beat the O(T m) accumulation.  Numeric agreement of the
+   ``ops.windowed_euclid`` method dispatch is asserted within the
+   documented ``fft_dot.fft_tolerance(m)`` contract.
+2. **Pruning power per encoder** — ``SelfJoinEngine.profile`` (exact
+   per-window nearest non-trivial neighbor) for SAX / sSAX / tSAX /
+   stSAX, bit-identity against the brute-force profile oracle
+   (``scan_profile``) as a hard contract, plus the modeled I/O of the
+   pruned profile vs the oracle's streaming pass.
+3. **Device residency** — the sharded stream path over every local
+   device with ``verify="device"``: bit-identity against the host twin
+   AND ``host_order_bytes == 0`` / ``rows_to_host == 0`` via
+   ``repro.obs.check_trace`` (the CI 8-device leg's gate).
+
+``--dryrun`` shrinks everything to CI scale; any bitwise divergence or
+device-invariant violation raises (the ``--strict`` gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_row, observe_topk, time_fn
+from repro.core import make_technique
+from repro.data.synthetic import season_dataset
+
+L = 10
+
+FULL = dict(n=16, T=960, m=120, stride=8,
+            dot_n=8, dot_T=8192, dot_q=4,
+            dot_ms=(64, 256, 1024, 2048))
+DRY = dict(n=6, T=240, m=60, stride=6,
+           dot_n=4, dot_T=512, dot_q=2,
+           dot_ms=(32, 128))
+
+
+def _encoders(m):
+    w = m // L
+    return {
+        "sax": make_technique("sax", T=m, W=w, L=L),
+        "ssax": make_technique("ssax", T=m, W=w, L=L, r2_season=0.7),
+        "tsax": make_technique("tsax", T=m, W=w, L=L, r2_trend=0.3),
+        "stsax": make_technique("stsax", T=m, W=w, L=L, r2_season=0.5),
+    }
+
+
+def _dot_crossover(cfg, rows, diverged):
+    """FFT vs accumulation sliding dot product over m; returns the
+    crossover m (first m where the FFT path is faster), or None."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.fft_dot import (fft_tolerance, sliding_dot_accum,
+                                       sliding_dot_fft)
+    from repro.kernels.ref import sliding_dot_ref
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(cfg["dot_n"], cfg["dot_T"])),
+                    jnp.float32)
+    crossover = None
+    for m in cfg["dot_ms"]:
+        q = rng.normal(size=(cfg["dot_q"], m)).astype(np.float32)
+        q = (q - q.mean(1, keepdims=True)) / q.std(1, keepdims=True)
+        qd = jnp.asarray(q)
+        t_fft = time_fn(lambda: sliding_dot_fft(x, qd))
+        t_acc = time_fn(lambda: sliding_dot_accum(x, qd))
+        ok = np.allclose(np.asarray(sliding_dot_fft(x, qd)),
+                         np.asarray(sliding_dot_accum(x, qd)),
+                         **fft_tolerance(m))
+        ref_ok = np.allclose(np.asarray(sliding_dot_fft(x, qd)),
+                             np.asarray(sliding_dot_ref(x, qd)),
+                             **fft_tolerance(m))
+        if not (ok and ref_ok):
+            diverged.append(f"dot/m{m}")
+        if crossover is None and t_fft < t_acc:
+            crossover = m
+        rows.append((
+            f"selfjoin/dot_m{m}",
+            f"T={cfg['dot_T']} fft_s={t_fft:.5f} accum_s={t_acc:.5f} "
+            f"speedup={t_acc / max(t_fft, 1e-12):.2f}x "
+            f"tol_ok={'yes' if ok and ref_ok else 'NO'}"))
+    # the distance-expansion dispatch must agree with the accumulation
+    # oracle within the same documented contract (small fixed case —
+    # the interpret-mode kernel is the reference, so keep it tiny)
+    xs = jnp.asarray(rng.normal(size=(3, 200)), jnp.float32)
+    qs = rng.normal(size=(2, 40)).astype(np.float32)
+    qs = (qs - qs.mean(1, keepdims=True)) / qs.std(1, keepdims=True)
+    d_fft = np.asarray(ops.windowed_euclid(xs, jnp.asarray(qs), stride=2,
+                                           method="fft"))
+    d_acc = np.asarray(ops.windowed_euclid(xs, jnp.asarray(qs), stride=2,
+                                           method="accum"))
+    if not np.allclose(d_fft, d_acc, **fft_tolerance(40)):
+        diverged.append("dot/dispatch")
+    return crossover
+
+
+def run(dryrun: bool = False):
+    cfg = DRY if dryrun else FULL
+    n, T, m, stride = cfg["n"], cfg["T"], cfg["m"], cfg["stride"]
+    rows, diverged = [], []
+
+    crossover = _dot_crossover(cfg, rows, diverged)
+    big_ok = crossover is not None and crossover <= 1024
+    verdict = ("PASS" if big_ok else
+               "dryrun (crossover judged at full size)" if dryrun
+               else "MISS")
+    rows.append((
+        "selfjoin/crossover",
+        f"crossover_m={crossover} "
+        f"(target: fft beats accumulation at m >= 1k) {verdict}"))
+
+    from repro.profile import SelfJoinEngine, topk_discords, topk_motifs
+    from repro.subseq import WindowView
+
+    D = season_dataset(n, T, L, strength=0.7, per_series_strength=True,
+                       seed=29)
+    view0 = None
+    for tech, enc in _encoders(m).items():
+        view = WindowView(enc, D, stride=stride, media="ssd")
+        if view0 is None:
+            view0 = view
+        eng = SelfJoinEngine(view, verify="numpy", batch_size=256)
+        view.reset()
+        t0 = time.perf_counter()
+        prof = eng.profile()
+        t_prof = time.perf_counter() - t0
+        observe_topk(f"selfjoin/{tech}", prof, t_prof)
+        t0 = time.perf_counter()
+        oracle = eng.scan_profile()
+        t_scan = time.perf_counter() - t0
+        same = (np.array_equal(prof.distances, oracle.distances)
+                and np.array_equal(prof.neighbors, oracle.neighbors))
+        motifs_same = (topk_motifs(prof, view.locate, 4)
+                       == topk_motifs(oracle, view.locate, 4))
+        discords_same = (topk_discords(prof, view.locate, 4)
+                         == topk_discords(oracle, view.locate, 4))
+        if not (same and motifs_same and discords_same):
+            diverged.append(tech)
+        rows.append((
+            f"selfjoin/{tech}",
+            f"windows={prof.n} pruned={prof.pruned_fraction.mean():.3f} "
+            f"verified_per_w={prof.raw_accesses.mean():.0f} "
+            f"io_profile_s={prof.io_seconds:.5f} "
+            f"io_scan_s={oracle.io_seconds:.5f} "
+            f"bitwise={'yes' if same else 'NO'} "
+            f"motifs={'yes' if motifs_same else 'NO'} "
+            f"discords={'yes' if discords_same else 'NO'} "
+            f"wall_profile_s={t_prof:.2f} wall_scan_s={t_scan:.2f}"))
+
+    # device residency: sharded stream + device verify over every local
+    # device, gated by the trace's transfer invariants
+    import jax
+
+    from repro.launch.mesh import make_mesh_compat
+    from repro.obs import check_trace
+
+    n_dev = len(jax.devices())
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    host = SelfJoinEngine(view0, verify="host", batch_size=256)
+    p_host = host.profile(use_index=False)
+    dev = SelfJoinEngine(view0, verify="device", mesh=mesh,
+                         batch_size=256)
+    t0 = time.perf_counter()
+    p_dev = dev.profile(explain=True)
+    t_dev = time.perf_counter() - t0
+    dev_same = (np.array_equal(p_dev.distances, p_host.distances)
+                and np.array_equal(p_dev.neighbors, p_host.neighbors))
+    problems = check_trace(p_dev.trace, device=True)
+    if not dev_same or problems:
+        diverged.append(f"device({';'.join(problems) or 'bitwise'})")
+    rows.append((
+        "selfjoin/device",
+        f"devices={n_dev} bitwise_vs_host={'yes' if dev_same else 'NO'} "
+        f"host_order_bytes={p_dev.trace.get('host_order_bytes')} "
+        f"rows_to_host={p_dev.trace.get('rows_to_host')} "
+        f"trace={'ok' if not problems else ';'.join(problems)} "
+        f"wall_s={t_dev:.2f}"))
+
+    for name, derived in rows:
+        emit_row(name, derived)
+    # exactness and device residency are hard contracts — any bitwise
+    # divergence, tolerance breach or transfer-invariant violation fails
+    # the run (the CI --strict gate), not just a print
+    if diverged:
+        raise RuntimeError("self-join contracts violated for: "
+                           + ", ".join(diverged))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny sizes (CI)")
+    args = ap.parse_args()
+    run(dryrun=args.dryrun)

@@ -15,6 +15,7 @@ Paper artifact map:
     index    -> (index subsystem: tree candidates vs linear sweep)
     sharded_verify -> (device-resident sharded verification vs host)
     serving  -> (service subsystem: coalescing queue + planner under load)
+    selfjoin -> (profile subsystem: FFT dot crossover + exact motifs)
     roofline -> EXPERIMENTS.md §Roofline (from results/dryrun.json)
 """
 
@@ -30,7 +31,7 @@ import time
 
 SUITES = ["entropy", "tlb", "pruning", "approx", "matching", "kernels",
           "extensions", "ingest", "subseq", "index", "sharded_verify",
-          "serving", "roofline", "perf"]
+          "serving", "selfjoin", "roofline", "perf"]
 
 RESULTS_DIR = "results"
 

@@ -1,0 +1,113 @@
+"""Motif + discord discovery walkthrough: plant a repeated pattern and
+a one-off anomaly in a seasonal corpus, then recover both exactly from
+the matrix profile — the corpus self-join (repro.profile).
+
+    PYTHONPATH=src python examples/motif_discovery.py
+
+The flow:
+
+1. a corpus of long seasonal series; a near-identical snippet is
+   implanted in TWO different series (the motif — the corpus's most
+   similar non-trivial window pair) and a one-off burst in a third
+   (the discord — the window farthest from everything else);
+2. ``SelfJoinEngine`` computes the exact matrix profile: every
+   window's nearest neighbor OUTSIDE its trivial-match zone (same
+   series, starts closer than the exclusion — a window trivially
+   matches its own one-sample shifts), through the same symbolic
+   pruning + bitwise verification machinery as subsequence search;
+3. ``topk_motifs`` / ``topk_discords`` read the answers straight off
+   the profile, greedily non-overlapping — and both are bit-identical
+   to the brute-force all-pairs oracle (``scan_profile``), which this
+   walkthrough checks;
+4. for profile-scale window lengths, the MASS-style FFT sliding dot
+   product (``kernels.fft_dot``) computes all-window distances in
+   O(T log T) per row under a documented tolerance contract — the
+   sweep half of the self-join at m >= 1k (exact verification stays
+   on the bitwise kernel path; ``benchmarks/bench_selfjoin.py``
+   records the FFT-vs-accumulation crossover).
+"""
+
+import numpy as np
+
+from repro.core import SSAX
+from repro.data.synthetic import season_dataset
+from repro.profile import SelfJoinEngine
+from repro.subseq import WindowView
+
+N, T = 12, 1200          # corpus: 12 series of 1200 samples
+M, STRIDE = 120, 4       # windows: length 120, every 4th offset
+L = 10
+
+
+def main():
+    rng = np.random.default_rng(23)
+    X = np.asarray(season_dataset(N, T, L, strength=0.6,
+                                  per_series_strength=True, seed=23),
+                   np.float64).copy()
+
+    # 1. plant: the motif pair in rows 2 and 9, the discord in row 5
+    o_a, o_b = 480, 700
+    snippet = 2.0 * np.sin(np.linspace(0, 6 * np.pi, M))
+    X[2, o_a:o_a + M] = snippet + 0.01 * rng.normal(size=M)
+    X[9, o_b:o_b + M] = snippet + 0.01 * rng.normal(size=M)
+    o_d = 300
+    X[5, o_d:o_d + M] += 6.0 * np.hanning(M)
+    X = X.astype(np.float32)
+
+    # 2. the exact matrix profile over every window
+    ssax = SSAX(T=M, W=M // L, L=L, A_seas=16, A_res=32, r2_season=0.7)
+    view = WindowView(ssax, X, stride=STRIDE, media="hdd")
+    eng = SelfJoinEngine(view, batch_size=256)
+    prof = eng.profile()
+    print(f"corpus: {N} series x {T} samples -> {view.n} windows "
+          f"(m={M}, stride={STRIDE}); exclusion={eng.exclusion} samples")
+    print(f"profile: pruned {prof.pruned_fraction.mean():.1%} of "
+          f"window verifications on average; modeled HDD "
+          f"{prof.io_seconds * 1e3:.1f}ms vs the oracle's full "
+          f"streaming pass")
+
+    # 3a. top motif: the planted pair, localized
+    (a, b, d), *rest = eng.topk_motifs(3)
+    rows, starts = view.locate(np.asarray([a, b], np.int64))
+    print(f"motif #1: row {rows[0]} @ {starts[0]}  <->  "
+          f"row {rows[1]} @ {starts[1]}  d={d:.4f}   "
+          f"(planted: row 2 @ {o_a} / row 9 @ {o_b})")
+    assert sorted(rows.tolist()) == [2, 9]
+
+    # 3b. top discord: the burst
+    (w, dd), *_ = eng.topk_discords(3)
+    r, s = (int(v[0]) for v in view.locate(np.asarray([w], np.int64)))
+    print(f"discord #1: row {r} @ {s}  d={dd:.4f}   "
+          f"(planted burst: row 5 @ {o_d})")
+    assert r == 5
+
+    # 3c. exactness: the engine's pruned profile IS the brute-force
+    # all-pairs profile, bit for bit
+    oracle = eng.scan_profile()
+    assert np.array_equal(prof.distances, oracle.distances)
+    assert np.array_equal(prof.neighbors, oracle.neighbors)
+    print("-> profile bit-identical to the brute-force all-pairs "
+          "oracle (distances AND neighbor ids)")
+
+    # 4. the FFT sliding dot product at profile scale: every window
+    # distance of one query against the whole corpus in one transform
+    import jax.numpy as jnp
+
+    from repro.kernels.fft_dot import fft_tolerance, windowed_euclid_fft
+    from repro.kernels.ref import windowed_euclid_ref
+    q = X[2, o_a:o_a + M]
+    q = (q - q.mean()) / q.std()
+    d_fft = np.asarray(windowed_euclid_fft(X, q[None], stride=STRIDE))
+    d_ref = np.asarray(windowed_euclid_ref(jnp.asarray(X),
+                                           jnp.asarray(q[None]),
+                                           STRIDE))
+    np.testing.assert_allclose(d_fft, d_ref, **fft_tolerance(M))
+    j = np.unravel_index(np.argmin(d_fft[0]), d_fft[0].shape)
+    print(f"FFT sweep: nearest window of the motif query is row {j[0]} "
+          f"@ {j[1] * STRIDE} — within the documented fft_tolerance"
+          f"({M}) of the exact expansion (the exact top-k path stays "
+          f"on the bitwise kernel; the FFT is the m>=1k sweep engine)")
+
+
+if __name__ == "__main__":
+    main()

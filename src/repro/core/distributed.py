@@ -834,11 +834,19 @@ class ShardedRepSweep:
         _, out_i = merge_topk_numpy(d_all, i_all, min(k, d_all.shape[1]))
         return out_i
 
-    def candidate_stream(self, queries_raw) -> DeviceOrderedStream:
+    def candidate_stream(self, queries_raw,
+                         mask_fn=None) -> DeviceOrderedStream:
         """Device-ordered exact candidate frontier: the blocked mirror
         bounds and the tail bounds are concatenated and lexsorted by
         (bound, global id) ON DEVICE — no (Q, N) host matrix, no host
-        argsort.  The stream yields global ids directly."""
+        argsort.  The stream yields global ids directly.
+
+        ``mask_fn``, if given, maps the (C,) int64 global-id vector to
+        a (Q, C) or (C,) boolean mask of candidates to SUPPRESS (their
+        bounds become +inf on device, so they fall past the finite
+        frontier and never reach verification) — e.g. the self-join
+        trivial-match zone.  The mask is computed and applied on
+        device; candidate order still never touches the host."""
         self._sync()
         qs = np.asarray(queries_raw, np.float32)
         if qs.ndim == 1:
@@ -864,7 +872,11 @@ class ShardedRepSweep:
         b = (bparts[0] if len(bparts) == 1
              else jnp.concatenate([jnp.asarray(p, jnp.float32)
                                    for p in bparts], axis=1))
-        return _order_stream(b, np.concatenate(iparts), width=self.store.n)
+        ids = np.concatenate(iparts)
+        if mask_fn is not None:
+            mask = jnp.asarray(mask_fn(jnp.asarray(ids)))
+            b = jnp.where(mask, jnp.float32(np.inf), jnp.asarray(b))
+        return _order_stream(b, ids, width=self.store.n)
 
     # -- device-resident verification -------------------------------------
     def shard_ranges(self):
@@ -1036,9 +1048,13 @@ class ShardedWindowSweep:
         exact non-exclusion path uses ``candidate_stream``."""
         return self.rep_sweep.repr_distances(queries_z)
 
-    def candidate_stream(self, queries_z) -> DeviceOrderedStream:
-        """Device-ordered window candidate stream (global window ids)."""
-        return self.rep_sweep.candidate_stream(queries_z)
+    def candidate_stream(self, queries_z,
+                         mask_fn=None) -> DeviceOrderedStream:
+        """Device-ordered window candidate stream (global window ids).
+        ``mask_fn`` suppresses window ids on device (bounds -> +inf)
+        before ordering — see ``ShardedRepSweep.candidate_stream``; the
+        self-join engine uses it for the trivial-match zone."""
+        return self.rep_sweep.candidate_stream(queries_z, mask_fn=mask_fn)
 
     @property
     def h2d_bytes(self) -> int:

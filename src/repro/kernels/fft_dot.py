@@ -1,0 +1,155 @@
+"""MASS-style FFT sliding dot product + windowed distance expansion.
+
+``kernels/windowed_euclid.py`` computes the sliding dot product of a
+z-normalized query against every corpus window in ``m`` accumulation
+steps inside the Pallas kernel — O(T * m) per row.  This module is the
+other half of MASS (Mueen et al.): the same dot products through one
+rfft/irfft convolution — O(T log T) per row, independent of ``m`` —
+which is what makes matrix-profile self-joins tractable at m >= 1k.
+The FFT runs in plain ``jnp.fft`` OUTSIDE Pallas (Pallas provides no
+FFT primitive; XLA's native FFT is already fused and batched), and the
+dot products feed the SAME rolling-statistics distance expansion as the
+kernel (one cumulative sum -> window sum / sum-of-squares, the
+``EPS``-clamped sigma of ``repro.core.normalize.znormalize``, the
+zero-variance guard, the final clamp at 0) — only the dot-product
+computation differs between the two paths.
+
+Tolerance contract (documented, property-tested)
+------------------------------------------------
+The FFT path is NOT bitwise-identical to the m-step accumulation: an
+f32 length-``nfft`` transform reorders the reduction and carries
+rounding of order ``eps * log(nfft)`` relative to the operand scale.
+Against the oracles (``kernels.ref.windowed_euclid_ref`` and the
+accumulation kernel), squared distances agree within
+
+    allclose(rtol=FFT_RTOL, atol=FFT_ATOL_PER_M * m)
+
+(:func:`fft_tolerance`) — absolute tolerance scales with ``m`` because
+z-normalized squared distances live in [0, ~4m].  Exact top-k
+verification therefore NEVER consumes FFT distances: the engines'
+verify paths stay on the bitwise f32 kernel/host reduction
+(``core.engine``), and the FFT path serves the profile sweep and the
+crossover benchmark (``benchmarks/bench_selfjoin.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.windowed_euclid import EPS, n_windows
+
+#: Documented agreement of the FFT distance path vs the m-step
+#: accumulation oracles (see module docstring).
+FFT_RTOL = 1e-3
+FFT_ATOL_PER_M = 1e-4
+
+
+def fft_tolerance(m: int) -> dict:
+    """``np.allclose`` kwargs of the documented FFT-vs-accumulation
+    contract for window length ``m``."""
+    return dict(rtol=FFT_RTOL, atol=FFT_ATOL_PER_M * float(m))
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def sliding_dot_fft(x, q, stride: int = 1):
+    """(N, T) rows x (Q, m) queries -> (Q, N, S) sliding dot products
+    ``dot[qi, n, s] = sum_i x[n, s*stride + i] * q[qi, i]`` via one
+    rfft/irfft linear correlation per (query, row) pair."""
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    N, T = x.shape
+    Q, m = q.shape
+    S = n_windows(T, m, stride)
+    # linear (non-circular) correlation needs T + m - 1 samples; the
+    # next power of two keeps the transform on XLA's fast path
+    nfft = _next_pow2(T + m - 1)
+    fx = jnp.fft.rfft(x, n=nfft, axis=-1)              # (N, F)
+    fq = jnp.fft.rfft(q[:, ::-1], n=nfft, axis=-1)     # (Q, F)
+    conv = jnp.fft.irfft(fq[:, None, :] * fx[None, :, :], n=nfft,
+                         axis=-1)                      # (Q, N, nfft)
+    # full convolution with the reversed query: the correlation at
+    # window start s sits at output position m - 1 + s
+    starts = m - 1 + jnp.arange(S) * stride
+    return conv[..., starts]
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def sliding_dot_accum(x, q, stride: int = 1):
+    """The m-step accumulation twin of :func:`sliding_dot_fft` — the
+    windowed kernel's inner loop as plain XLA (O(T * m) per row), the
+    fair off-TPU baseline for the FFT crossover benchmark (the Pallas
+    kernel itself runs in interpret mode off-TPU, which benchmarks the
+    interpreter, not the algorithm)."""
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    N, T = x.shape
+    Q, m = q.shape
+    S = n_windows(T, m, stride)
+    span = (S - 1) * stride + 1
+    pad = span - 1 + m - T
+    if pad > 0:                          # never taken: span - 1 + m <= T
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+
+    def body(i, acc):
+        xi = jax.lax.dynamic_slice(x, (0, i), (N, span))
+        return acc + q[:, i][:, None, None] * xi[:, ::stride][None]
+
+    return jax.lax.fori_loop(
+        0, m, body, jnp.zeros((Q, N, S), jnp.float32))
+
+
+def _window_stats(x, m: int, stride: int, S: int):
+    """Rolling per-window sum / sum-of-squares via one cumulative sum
+    each — the same O(1)-per-window statistics the Pallas kernel
+    computes from its slab."""
+    N = x.shape[0]
+    zero = jnp.zeros((N, 1), jnp.float32)
+    cs1 = jnp.concatenate([zero, jnp.cumsum(x, axis=1)], axis=1)
+    cs2 = jnp.concatenate([zero, jnp.cumsum(x * x, axis=1)], axis=1)
+    lo = jnp.arange(S) * stride
+    s1 = cs1[:, lo + m] - cs1[:, lo]                   # (N, S)
+    s2 = cs2[:, lo + m] - cs2[:, lo]
+    return s1, s2
+
+
+def _expand_distance(dot, s1, s2, q, m: int):
+    """The windowed kernel's exact distance expansion applied to
+    externally computed sliding dot products: with window mean mu and
+    EPS-clamped sigma,
+
+        d2 = sum(q^2) + (s2 - m*mu^2)/sig^2 - 2*(dot - mu*sum(q))/sig
+
+    zero-variance windows z-normalize to the zero vector so their
+    distance is exactly ``sum(q^2)``; the result clamps at 0."""
+    mu = s1 / m
+    var = s2 / m - mu * mu
+    sig = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), EPS)
+    q_sum = jnp.sum(q, axis=1)[:, None, None]          # (Q, 1, 1)
+    q_ss = jnp.sum(q * q, axis=1)[:, None, None]
+    norm2 = jnp.maximum(s2 - m * mu * mu, 0.0) / (sig * sig)
+    d2 = q_ss + norm2[None] - 2.0 * (dot - mu[None] * q_sum) / sig[None]
+    d2 = jnp.where(var[None] > 0.0, d2, q_ss)
+    return jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def windowed_euclid_fft(x, q, stride: int = 1):
+    """FFT twin of ``kernels.windowed_euclid_pallas``: (N, T) raw rows
+    vs (Q, m) z-normalized queries -> (Q, N, S) squared z-normalized
+    window distances, dot products via :func:`sliding_dot_fft`, the
+    rest of the expansion identical to the kernel.  Agreement with the
+    accumulation paths is governed by :func:`fft_tolerance`."""
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    m = q.shape[-1]
+    S = n_windows(x.shape[-1], m, stride)
+    s1, s2 = _window_stats(x, m, stride, S)
+    dot = sliding_dot_fft(x, q, stride=stride)
+    return _expand_distance(dot, s1, s2, q, m)

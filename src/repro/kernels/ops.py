@@ -109,15 +109,52 @@ def euclid_batch(x, q, use_kernel: bool = True):
     return euclid_pallas(x, q, interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "use_kernel"))
-def windowed_euclid(x, q, stride: int = 1, use_kernel: bool = True):
+@functools.partial(jax.jit, static_argnames=("stride", "use_kernel", "method"))
+def windowed_euclid(x, q, stride: int = 1, use_kernel: bool = True,
+                    method: str = "accum"):
     """(N, T) raw rows vs (m,) or (Q, m) z-normalized queries ->
     (N, S) or (Q, N, S) squared z-normalized window distances (the
     MASS-style distance profile).  Ragged N / S pad inside
-    ``windowed_euclid_pallas`` itself."""
+    ``windowed_euclid_pallas`` itself.
+
+    ``method`` picks the sliding-dot-product formulation:
+    ``"accum"`` (default) is the m-step accumulation — the Pallas
+    kernel (or its ref oracle with ``use_kernel=False``), bitwise f32
+    and the only path exact top-k verification consumes; ``"fft"`` is
+    the MASS rfft/irfft path (``kernels.fft_dot``, jnp outside Pallas,
+    O(T log T) per row) whose agreement with the accumulation paths is
+    governed by the documented ``fft_dot.fft_tolerance(m)`` contract —
+    use it for profile sweeps at large m, never for bitwise contracts.
+    """
+    if method == "fft":
+        from repro.kernels.fft_dot import windowed_euclid_fft
+        if q.ndim == 1:
+            return windowed_euclid_fft(x, q[None], stride=stride)[0]
+        return windowed_euclid_fft(x, q, stride=stride)
+    if method != "accum":
+        raise ValueError(f"unknown windowed_euclid method: {method!r}")
     if not use_kernel:
         if q.ndim == 1:
             return ref.windowed_euclid_ref(x, q[None], stride)[0]
         return ref.windowed_euclid_ref(x, q, stride)
     return windowed_euclid_pallas(x, q, stride=stride,
                                   interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "method"))
+def sliding_dot(x, q, stride: int = 1, method: str = "fft"):
+    """(N, T) rows vs (m,) or (Q, m) queries -> (N, S) or (Q, N, S)
+    sliding dot products.  ``method="fft"`` (default) is the MASS
+    rfft/irfft correlation; ``"accum"`` the m-step accumulation twin —
+    both from ``kernels.fft_dot``, checked against
+    ``ref.sliding_dot_ref``."""
+    from repro.kernels.fft_dot import sliding_dot_accum, sliding_dot_fft
+    if method == "fft":
+        fn = sliding_dot_fft
+    elif method == "accum":
+        fn = sliding_dot_accum
+    else:
+        raise ValueError(f"unknown sliding_dot method: {method!r}")
+    if q.ndim == 1:
+        return fn(x, q[None], stride=stride)[0]
+    return fn(x, q, stride=stride)

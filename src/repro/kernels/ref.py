@@ -51,6 +51,20 @@ def euclid_ref(x, q):
     return jnp.sum(jnp.square(d), axis=-1)
 
 
+def sliding_dot_ref(x, q, stride: int = 1):
+    """(N, T) rows vs (Q, m) queries -> (Q, N, S) sliding dot products
+    ``sum_i x[n, s*stride + i] * q[qi, i]``, windows materialized
+    explicitly — the ground truth for both the m-step accumulation and
+    the FFT paths in ``kernels.fft_dot``."""
+    m = q.shape[-1]
+    T = x.shape[-1]
+    S = (T - m) // stride + 1
+    starts = jnp.arange(S) * stride
+    idx = starts[:, None] + jnp.arange(m)[None, :]     # (S, m)
+    w = x[:, idx]                                      # (N, S, m)
+    return jnp.einsum("nsm,qm->qns", w, q)
+
+
 def windowed_euclid_ref(x, q, stride: int = 1):
     """(N, T) raw rows vs (Q, m) z-normalized queries -> (Q, N, S)
     squared distances to every z-normalized length-m window at ``stride``

@@ -1,0 +1,26 @@
+"""Matrix-profile self-join subsystem (exact motifs and discords).
+
+``SelfJoinEngine`` computes, for every window of an (N, T) corpus, its
+nearest NON-TRIVIAL neighbor — exactly — by treating each corpus window
+as a query against the corpus's own window set and routing candidates
+through the same lower-bound-ordered verification machinery as
+``repro.subseq`` (``core.engine.topk_verify``), with the trivial-match
+zone (same source row, starts closer than ``exclusion`` samples —
+``SubseqEngine``'s suppression predicate) excluded a priori.  The
+profile then yields ``topk_motifs`` (closest non-overlapping window
+pairs) and ``topk_discords`` (windows whose nearest neighbor is
+farthest) — bit-identical to the brute-force profile oracle
+(``SelfJoinEngine.scan_profile``) on every candidate path.
+
+The FFT sliding-dot-product half of the subsystem lives in
+``repro.kernels.fft_dot`` (MASS rfft/irfft, O(T log T) per row) behind
+``kernels.ops.windowed_euclid(..., method="fft")`` /
+``kernels.ops.sliding_dot`` with a documented tolerance contract —
+exact verification stays on the bitwise accumulation paths.
+"""
+
+from repro.profile.selfjoin import (MatrixProfile, SelfJoinEngine,
+                                    topk_discords, topk_motifs)
+
+__all__ = ["MatrixProfile", "SelfJoinEngine", "topk_discords",
+           "topk_motifs"]

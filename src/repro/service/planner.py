@@ -11,6 +11,12 @@ over one engine:
   reported back as a per-query error bar; without an index it falls
   back to representation-top-k verification (no certificate).
 
+A session configured with a ``repro.profile.SelfJoinEngine``
+additionally carries the corpus-level ``"selfjoin"`` tier (exact
+motif/discord requests over the matrix profile).  It is deliberately
+NOT in ``TIERS`` — per-query routing never lands there; only
+``kind="motifs"`` / ``"discords"`` requests are forced onto it.
+
 Routing combines two signals:
 
 * a **modeled cost** per tier — candidate-count priors scaled by the
@@ -105,11 +111,13 @@ class QueryPlanner:
     """
 
     def __init__(self, *, total: int = 0, has_index: bool = False,
-                 has_approx: bool = True, store=None, safety: float = 2.0,
+                 has_approx: bool = True, has_selfjoin: bool = False,
+                 store=None, safety: float = 2.0,
                  alpha: float = 0.3, approx_collect: int = 32):
         self.total = int(total)
         self.has_index = bool(has_index)
         self.has_approx = bool(has_approx)
+        self.has_selfjoin = bool(has_selfjoin)
         self.safety = float(safety)
         self.alpha = float(alpha)
         self._store = store
@@ -118,6 +126,14 @@ class QueryPlanner:
             "linear": _TierEstimate(*self._prior("linear", approx_collect)),
             "approx": _TierEstimate(*self._prior("approx", approx_collect)),
         }
+        if self.has_selfjoin:
+            # the self-join tier answers corpus-level requests (motifs /
+            # discords): its prior is a full-corpus candidate sweep, and
+            # the session's profile cache makes repeat requests all but
+            # free — the EWMA learns that after the first dispatch.  It
+            # is NOT in TIERS: per-query requests never route to it.
+            self._est["selfjoin"] = _TierEstimate(
+                self.modeled_cost(float(self.total)), float(self.total))
 
     # -- modeled cost ------------------------------------------------------
     def _prior(self, tier: str, approx_collect: int):
@@ -173,6 +189,8 @@ class QueryPlanner:
             return self.has_index
         if tier == "approx":
             return self.has_approx
+        if tier == "selfjoin":
+            return self.has_selfjoin
         return tier == "linear"
 
     def route(self, *, k: int = 1,

@@ -71,6 +71,10 @@ class MatchRequest:
     deadline_s: Optional[float] = None  # latency budget from submit
     tier: Optional[str] = None          # explicit tier override
     explain: bool = False               # attach a repro.obs trace
+    kind: str = "topk"                  # "topk" | "motifs" | "discords"
+    #   corpus self-join kinds carry no query of their own (the corpus
+    #   is both sides); the session routes them to the SelfJoinEngine
+    #   tier and fills ``result`` with the (window, ...) tuple list
 
     rid: int = field(default_factory=lambda: next(_RID))
     t_submit: float = 0.0
@@ -86,6 +90,8 @@ class MatchRequest:
     tier_served: Optional[str] = None
     plan: Optional[object] = None           # planner.PlanDecision
     trace: Optional[object] = None
+    result: Optional[object] = None         # self-join kinds: the
+    #   topk_motifs / topk_discords tuple list of ``repro.profile``
 
     error: Optional[str] = None
     shed_reason: Optional[str] = None

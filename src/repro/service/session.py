@@ -57,13 +57,21 @@ class MatchSession:
     safety:      planner deadline-downgrade margin.
     """
 
-    def __init__(self, engine, *, metrics=None, planner=None,
+    def __init__(self, engine, *, selfjoin=None, metrics=None,
+                 planner=None,
                  window_s: float = 0.002, max_batch: int = 64,
                  max_queue: int = 256,
                  approx_collect: Optional[int] = None,
                  safety: float = 2.0):
         self.engine = engine
         self._subseq = hasattr(engine, "view")
+        # optional repro.profile.SelfJoinEngine: enables the corpus-
+        # level "selfjoin" tier (kind="motifs"/"discords" requests)
+        self._selfjoin = selfjoin
+        if selfjoin is not None and self._subseq \
+                and selfjoin.view is not engine.view:
+            raise ValueError("selfjoin engine must share the session "
+                             "engine's WindowView")
         self.metrics = metrics if metrics is not None \
             else getattr(engine, "metrics", None)
         self._approx_collect = approx_collect
@@ -86,6 +94,7 @@ class MatchSession:
                         or store.data.shape[0])
         self.planner = planner if planner is not None else QueryPlanner(
             total=total, has_index=has_index, has_approx=has_approx,
+            has_selfjoin=selfjoin is not None,
             store=self._store, safety=safety,
             approx_collect=approx_collect or 32)
         if planner is None:
@@ -127,6 +136,22 @@ class MatchSession:
         self.queue.submit(req)
         return req
 
+    def submit_selfjoin(self, kind: str = "motifs", *, k: int = 1,
+                        deadline_s: Optional[float] = None,
+                        explain: bool = False) -> MatchRequest:
+        """Enqueue one corpus-level self-join request
+        (``kind="motifs"`` or ``"discords"``); requires the session to
+        have been built with a ``selfjoin=`` engine.  The resolved
+        request carries the ``repro.profile.topk_motifs`` /
+        ``topk_discords`` tuple list in ``req.result`` — exact (bit-
+        identical to the brute-force profile oracle), served from the
+        engine's cached matrix profile after the first dispatch."""
+        req = MatchRequest(query=np.empty(0, np.float32), k=int(k),
+                           deadline_s=deadline_s, tier="selfjoin",
+                           explain=explain, kind=kind)
+        self.queue.submit(req)
+        return req
+
     def serve(self, queries, *, k: int = 1,
               deadline_s: Optional[float] = None,
               tier: Optional[str] = None,
@@ -164,6 +189,15 @@ class MatchSession:
 
     # -- admission ---------------------------------------------------------
     def _validate(self, req: MatchRequest) -> Optional[str]:
+        if req.kind != "topk":
+            if req.kind not in ("motifs", "discords"):
+                return (f"unknown request kind {req.kind!r} "
+                        "(kinds: topk, motifs, discords)")
+            if self._selfjoin is None:
+                return "self-join tier is not configured on this session"
+            if req.k < 1:
+                return f"k must be >= 1, got {req.k}"
+            return None
         q = np.asarray(req.query)
         if q.ndim != 1 or q.shape[0] != self.query_len:
             return (f"query shape {q.shape} does not match service "
@@ -186,6 +220,7 @@ class MatchSession:
         per-request slices back.  Runs on the dispatcher thread."""
         now = time.monotonic()
         groups: dict = {}
+        selfjoin: List[MatchRequest] = []
         for req in batch:
             if req.t_deadline is not None and now >= req.t_deadline:
                 self.queue.shed(req, SHED_DEADLINE,
@@ -193,6 +228,16 @@ class MatchSession:
                 continue
             left = (req.t_deadline - now
                     if req.t_deadline is not None else None)
+            if req.kind != "topk":
+                # corpus-level requests are forced onto the selfjoin
+                # tier (the planner carries its estimate but never
+                # routes per-query traffic there)
+                with self._plan_lock:
+                    req.plan = self.planner.route(k=req.k,
+                                                  deadline_left=left,
+                                                  tier="selfjoin")
+                selfjoin.append(req)
+                continue
             with self._plan_lock:
                 plan = self.planner.route(k=req.k, deadline_left=left,
                                           tier=req.tier)
@@ -202,6 +247,8 @@ class MatchSession:
             groups.setdefault((plan.tier, req.k), []).append(req)
         for (tier, k), reqs in groups.items():
             self._run_group(tier, k, reqs)
+        if selfjoin:
+            self._run_selfjoin(selfjoin)
 
     @staticmethod
     def _bucket(qs: np.ndarray) -> np.ndarray:
@@ -255,6 +302,37 @@ class MatchSession:
                 self.metrics.histogram(
                     "serve.request_latency_s").observe(req.latency_s)
                 self.metrics.counter(f"serve.tier.{tier}").inc()
+            req.done.set()
+
+    def _run_selfjoin(self, reqs: Sequence[MatchRequest]) -> None:
+        """One self-join dispatch: compute (or reuse) the engine's
+        cached matrix profile, then answer every request from it —
+        motifs and discords are pure functions of the profile
+        (``repro.profile``), so every coalesced request sees the same
+        exact profile."""
+        from repro.profile import topk_discords, topk_motifs
+        eng = self._selfjoin
+        trace = None
+        if any(r.explain for r in reqs):
+            from repro.obs import Trace
+            trace = Trace("serve.selfjoin")
+        t0 = time.perf_counter()
+        prof = eng.profile(trace=trace)
+        wall = time.perf_counter() - t0
+        with self._plan_lock:
+            self.planner.observe("selfjoin", len(reqs), wall, prof)
+        for req in reqs:
+            if req.kind == "motifs":
+                req.result = topk_motifs(prof, eng.view.locate, req.k)
+            else:
+                req.result = topk_discords(prof, eng.view.locate, req.k)
+            req.tier_served = "selfjoin"
+            req.trace = trace
+            req.t_done = time.monotonic()
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "serve.request_latency_s").observe(req.latency_s)
+                self.metrics.counter("serve.tier.selfjoin").inc()
             req.done.set()
 
     def _run_tier(self, qs: np.ndarray, k: int, tier: str, trace):

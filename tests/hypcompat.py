@@ -1,0 +1,81 @@
+"""Hypothesis when installed, seeded deterministic draws otherwise.
+
+The container's tier-1 legs don't ship ``hypothesis``; the established
+``pytest.importorskip`` idiom silently drops every property test there.
+This shim keeps the property BODIES running everywhere: with hypothesis
+installed the real ``given`` / ``settings`` / ``st`` are re-exported
+unchanged (shrinking, example database, the works); without it, the
+same test runs ``max_examples`` times against seeded ``default_rng``
+draws — no shrinking, but the invariant is still exercised on a spread
+of cases instead of not at all.
+
+Only the strategy surface these tests use is shimmed: ``st.data()``
+draws of ``sampled_from`` / ``integers`` / ``booleans``.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+    class _StModule:
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def data():
+            return "data"
+
+    st = _StModule()
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy._sample(self._rng)
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(_data_marker):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                # ``settings`` is applied OUTSIDE ``given`` and tags the
+                # wrapper, so the count is read off ``run`` at call time
+                for i in range(getattr(run, "_max_examples", 10)):
+                    fn(*args, _Data(np.random.default_rng(0xC0FFEE + i)),
+                       **kwargs)
+            # hide the bound ``data`` param from pytest's fixture
+            # resolution (parametrize args before it stay visible)
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(
+                parameters=list(sig.parameters.values())[:-1])
+            del run.__wrapped__
+            return run
+        return deco

@@ -1,0 +1,139 @@
+"""Property tests (hypothesis) for the MASS-style FFT sliding dot
+product (``repro.kernels.fft_dot``): for arbitrary (m, stride, ragged
+T) the rfft/irfft path must agree with the m-step accumulation twin,
+the explicit-window oracle (``ref.sliding_dot_ref``) and — through the
+rolling-statistics distance expansion — the windowed kernel
+(``ops.windowed_euclid``) within the DOCUMENTED tolerance contract
+``fft_dot.fft_tolerance(m)``.  The contract is the whole point: the
+FFT path is fast but not bitwise, so exact top-k verification never
+consumes it — these tests pin down exactly how far it may drift."""
+
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st  # noqa: E402 — shim or real
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.fft_dot import (fft_tolerance, sliding_dot_accum,  # noqa: E402
+                                   sliding_dot_fft, windowed_euclid_fft)
+from repro.kernels.ref import sliding_dot_ref, windowed_euclid_ref  # noqa: E402
+
+
+def _case(data):
+    """One (x, q, stride) draw: bounded-range data (the contract is
+    relative to operand scale; unbounded draws test overflow, not the
+    transform), arbitrary stride, ragged T beyond the window grid."""
+    m = data.draw(st.sampled_from([8, 24, 33, 64]))
+    stride = data.draw(st.integers(1, 5))
+    extra = data.draw(st.integers(0, 17))
+    n = data.draw(st.integers(1, 4))
+    q_n = data.draw(st.integers(1, 3))
+    seed = data.draw(st.integers(0, 2**16))
+    T = m + 2 * stride + extra
+    rng = np.random.default_rng(seed)
+    scale = data.draw(st.sampled_from([1.0, 7.0]))
+    shift = data.draw(st.sampled_from([0.0, 3.0]))
+    x = (scale * rng.normal(size=(n, T)) + shift).astype(np.float32)
+    q = rng.normal(size=(q_n, m)).astype(np.float32)
+    q = (q - q.mean(1, keepdims=True)) \
+        / np.maximum(q.std(1, keepdims=True), 1e-6)
+    return x, q, m, stride
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fft_dot_matches_accumulation_and_oracle(data):
+    x, q, m, stride = _case(data)
+    d_fft = np.asarray(sliding_dot_fft(x, q, stride=stride))
+    d_acc = np.asarray(sliding_dot_accum(x, q, stride=stride))
+    d_ref = np.asarray(sliding_dot_ref(jnp.asarray(x), jnp.asarray(q),
+                                       stride))
+    tol = fft_tolerance(m)
+    # the dot products themselves scale with m * |x| — widen atol by
+    # the operand scale the same way the contract widens with m
+    scale = max(1.0, float(np.abs(x).max()))
+    tol = dict(rtol=tol["rtol"], atol=tol["atol"] * scale)
+    assert d_fft.shape == d_acc.shape == d_ref.shape
+    np.testing.assert_allclose(d_fft, d_acc, **tol)
+    np.testing.assert_allclose(d_fft, d_ref, **tol)
+    # the accumulation twin is near-bitwise to the explicit oracle
+    np.testing.assert_allclose(d_acc, d_ref, rtol=1e-5,
+                               atol=1e-4 * scale * m)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_fft_distance_matches_kernel_within_contract(data):
+    """The full distance expansion: FFT path vs the windowed kernel
+    (interpret mode) and the explicit-window reference, within the
+    documented ``fft_tolerance(m)`` squared-distance contract."""
+    x, q, m, stride = _case(data)
+    d_fft = np.asarray(windowed_euclid_fft(x, q, stride=stride))
+    d_ref = np.asarray(windowed_euclid_ref(jnp.asarray(x),
+                                           jnp.asarray(q), stride))
+    d_ker = np.asarray(ops.windowed_euclid(jnp.asarray(x),
+                                           jnp.asarray(q),
+                                           stride=stride))
+    tol = fft_tolerance(m)
+    np.testing.assert_allclose(d_fft, d_ref, **tol)
+    np.testing.assert_allclose(d_fft, d_ker, **tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_ops_method_dispatch(data):
+    """``ops.windowed_euclid(method="fft")`` routes to the FFT path and
+    agrees with ``method="accum"`` within the contract; ``ops.
+    sliding_dot`` dispatches both dot formulations; 1-D queries keep
+    the (N, S) shape contract; unknown methods raise."""
+    x, q, m, stride = _case(data)
+    d_fft = np.asarray(ops.windowed_euclid(jnp.asarray(x),
+                                           jnp.asarray(q),
+                                           stride=stride, method="fft"))
+    d_acc = np.asarray(ops.windowed_euclid(jnp.asarray(x),
+                                           jnp.asarray(q),
+                                           stride=stride,
+                                           method="accum"))
+    np.testing.assert_allclose(d_fft, d_acc, **fft_tolerance(m))
+    one = np.asarray(ops.windowed_euclid(jnp.asarray(x),
+                                         jnp.asarray(q[0]),
+                                         stride=stride, method="fft"))
+    np.testing.assert_array_equal(one, d_fft[0])
+    s_fft = np.asarray(ops.sliding_dot(jnp.asarray(x), jnp.asarray(q),
+                                       stride=stride, method="fft"))
+    s_acc = np.asarray(ops.sliding_dot(jnp.asarray(x), jnp.asarray(q),
+                                       stride=stride, method="accum"))
+    scale = max(1.0, float(np.abs(x).max()))
+    np.testing.assert_allclose(
+        s_fft, s_acc, rtol=fft_tolerance(m)["rtol"],
+        atol=fft_tolerance(m)["atol"] * scale)
+
+
+def test_unknown_method_raises():
+    x = jnp.zeros((2, 50), jnp.float32)
+    q = jnp.zeros((1, 10), jnp.float32)
+    with pytest.raises(ValueError, match="method"):
+        ops.windowed_euclid(x, q, method="nope")
+    with pytest.raises(ValueError, match="method"):
+        ops.sliding_dot(x, q, method="nope")
+
+
+def test_zero_variance_windows_follow_kernel_convention():
+    """Constant windows z-normalize to zero: the FFT expansion must
+    reproduce the kernel's d2 = sum(q^2) convention exactly there."""
+    x = np.ones((2, 60), np.float32)
+    x[1, 30:] = np.linspace(0, 1, 30)
+    q = np.random.default_rng(0).normal(size=(2, 12)).astype(np.float32)
+    q = (q - q.mean(1, keepdims=True)) / q.std(1, keepdims=True)
+    d_fft = np.asarray(windowed_euclid_fft(x, q, stride=1))
+    d_ref = np.asarray(windowed_euclid_ref(jnp.asarray(x),
+                                           jnp.asarray(q), 1))
+    q_ss = np.sum(q * q, axis=1)
+    # row 0 of x is constant everywhere: every window collapses to q_ss
+    np.testing.assert_allclose(
+        d_fft[:, 0, :],
+        np.broadcast_to(q_ss[:, None], d_fft[:, 0, :].shape),
+        rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(d_fft, d_ref, **fft_tolerance(12))

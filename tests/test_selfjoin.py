@@ -1,0 +1,331 @@
+"""Matrix-profile self-join (``repro.profile``): the one property the
+subsystem exists under is BIT-identity — ``SelfJoinEngine.profile`` must
+equal the brute-force oracle ``scan_profile`` exactly (distances AND
+neighbors), for every encoder, every candidate source (linear lower-
+bound matrix / split-tree index / sharded device stream), and both
+verification families.  Families pair with their own oracle: the numpy
+verifier and the kernel verifier are distinct bitwise reductions by
+design, so numpy engines compare against a numpy oracle and
+host/device engines against a ``verify="host"`` oracle — device must
+match host bitwise because it runs the identical kernel math.
+
+Plus: trivial-zone geometry, motif/discord purity (non-overlap,
+planted-pattern recovery), the device path's zero-host-transfer
+invariants, the profile cache, and the service's self-join tier.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+
+from repro.core import make_technique
+from repro.data.synthetic import season_dataset
+from repro.profile import (MatrixProfile, SelfJoinEngine, topk_discords,
+                           topk_motifs)
+from repro.subseq import SubseqEngine, WindowView
+
+L = 10
+TECHS = ["sax", "ssax", "tsax", "stsax"]
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _enc(name, m):
+    kw = {"sax": {}, "ssax": {"r2_season": 0.7},
+          "tsax": {"r2_trend": 0.3}, "stsax": {"r2_season": 0.5}}[name]
+    return make_technique(name, T=m, W=m // L, L=L, **kw)
+
+
+def _corpus(seed, n, T):
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        x = np.cumsum(rng.normal(size=(n, T)), axis=1)
+    elif kind == 1:
+        mask = rng.normal(size=(n, L))
+        x = np.tile(mask, (1, T // L + 1))[:, :T] \
+            + 0.3 * rng.normal(size=(n, T))
+    else:
+        x = (np.linspace(0, 3, T)[None] * rng.normal(size=(n, 1))
+             + 0.5 * rng.normal(size=(n, T)))
+    return x.astype(np.float32)
+
+
+def _view(tech, D, m, stride, index=False):
+    view = WindowView(_enc(tech, m), D, stride=stride, media="ssd")
+    if index:
+        view.build_index(leaf_fill=16)
+    return view
+
+
+def _same(a: MatrixProfile, b: MatrixProfile):
+    return (np.array_equal(a.distances, b.distances)
+            and np.array_equal(a.neighbors, b.neighbors))
+
+
+# --------------------------------------------------------------- exactness
+
+@pytest.mark.parametrize("tech", TECHS)
+@pytest.mark.parametrize("index", [False, True])
+def test_profile_bit_identical_to_oracle(tech, index):
+    """Linear and indexed paths, numpy family: profile, motifs and
+    discords all equal the brute-force oracle exactly."""
+    D = _corpus(3, 5, 300)
+    view = _view(tech, D, m=60, stride=6, index=index)
+    eng = SelfJoinEngine(view, verify="numpy", batch_size=64)
+    prof = eng.profile()
+    assert prof.source == ("index" if index else "linear")
+    oracle = eng.scan_profile()
+    assert _same(prof, oracle), tech
+    assert topk_motifs(prof, view.locate, 3) == \
+        topk_motifs(oracle, view.locate, 3)
+    assert topk_discords(prof, view.locate, 3) == \
+        topk_discords(oracle, view.locate, 3)
+    # the pruned paths must actually prune relative to the oracle scan
+    assert prof.raw_accesses.mean() <= oracle.raw_accesses.mean()
+
+
+@pytest.mark.parametrize("tech", ["ssax", "stsax"])
+def test_profile_kernel_family_matches_its_own_oracle(tech):
+    """The kernel-verifier family ("host") is a different bitwise
+    reduction from numpy — it must match ITS oracle exactly."""
+    D = _corpus(4, 4, 240)
+    view = _view(tech, D, m=60, stride=6)
+    eng = SelfJoinEngine(view, verify="host", batch_size=64)
+    assert _same(eng.profile(), eng.scan_profile())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_profile_property_engine_equals_oracle(data):
+    """Property: for arbitrary corpus shape, stride, exclusion and
+    encoder, the engine profile is bit-identical to the oracle and no
+    reported neighbor lies in its query's trivial zone."""
+    tech = data.draw(st.sampled_from(TECHS))
+    seed = data.draw(st.integers(0, 2**16))
+    n = data.draw(st.integers(2, 5))
+    m = data.draw(st.sampled_from([40, 60]))
+    stride = data.draw(st.sampled_from([4, 7, 11]))
+    T = m + stride * data.draw(st.integers(4, 12)) \
+        + data.draw(st.integers(0, 5))
+    excl = data.draw(st.sampled_from([1, m // 4, m // 2, m]))
+    index = data.draw(st.booleans())
+    view = _view(tech, _corpus(seed, n, T), m, stride, index=index)
+    eng = SelfJoinEngine(view, verify="numpy", exclusion=excl,
+                         batch_size=32)
+    prof = eng.profile()
+    assert _same(prof, eng.scan_profile()), (tech, seed, excl)
+    for w in range(prof.n):
+        nb = prof.neighbors[w]
+        if nb >= 0:
+            assert nb not in eng.trivial_ids(w), (w, nb)
+            assert np.isfinite(prof.distances[w])
+        else:
+            assert prof.distances[w] == np.inf
+
+
+# ---------------------------------------------------------------- geometry
+
+def test_trivial_zone_geometry():
+    """``trivial_ids``: contains the window itself, stays on the same
+    source row, and is exactly the |start - start'| < exclusion band."""
+    view = _view("sax", _corpus(0, 3, 240), m=60, stride=6)
+    eng = SelfJoinEngine(view, exclusion=20)
+    nw = view.windows_per_row
+    for wid in [0, 1, nw - 1, nw, 2 * nw + 3, view.n - 1]:
+        ids = eng.trivial_ids(wid)
+        assert wid in ids
+        assert np.all(ids // nw == wid // nw)
+        starts = (ids % nw) * view.stride
+        s0 = (wid % nw) * view.stride
+        assert np.all(np.abs(starts - s0) < eng.exclusion)
+        # the band is maximal: one step further is outside
+        lo, hi = ids.min(), ids.max()
+        if lo % nw > 0:
+            assert abs((lo - 1) % nw - wid % nw) * view.stride \
+                >= eng.exclusion
+        if hi % nw < nw - 1:
+            assert abs((hi + 1) % nw - wid % nw) * view.stride \
+                >= eng.exclusion
+
+
+def test_exclusion_validation():
+    view = _view("sax", _corpus(0, 2, 120), m=40, stride=4)
+    assert SelfJoinEngine(view).exclusion == max(1, 40 // 4)
+    with pytest.raises(ValueError, match="exclusion"):
+        SelfJoinEngine(view, exclusion=0)
+    with pytest.raises(ValueError, match="index"):
+        SelfJoinEngine(view).profile(use_index=True)
+
+
+# ---------------------------------------------------------- motifs/discords
+
+def _plant(n=5, T=300, m=60, seed=13):
+    """Corpus with a near-identical snippet in rows 0 and 1 (the motif)
+    and a one-off burst in row 2 (the discord)."""
+    rng = np.random.default_rng(seed)
+    D = np.asarray(season_dataset(n, T, L, strength=0.6,
+                                  per_series_strength=True, seed=seed),
+                   np.float64).copy()
+    o = (T - m) // 2
+    snip = np.sin(np.linspace(0, 6 * np.pi, m)) * 2.0
+    D[0, o:o + m] = snip + 0.01 * rng.normal(size=m)
+    D[1, o:o + m] = snip + 0.01 * rng.normal(size=m)
+    D[2, o:o + m] += 6.0 * np.hanning(m)
+    return D.astype(np.float32), o
+
+
+def test_motifs_and_discords_recover_planted_patterns():
+    D, o = _plant()
+    view = _view("ssax", D, m=60, stride=6)
+    eng = SelfJoinEngine(view, verify="numpy")
+    motifs = eng.topk_motifs(3)
+    a, b, d = motifs[0]
+    rows, starts = view.locate(np.asarray([a, b], np.int64))
+    assert sorted(rows.tolist()) == [0, 1]
+    assert all(abs(int(s) - o) <= 2 * view.stride for s in starts)
+    assert d < 1.0
+    discords = eng.topk_discords(3)
+    r_disc, _ = view.locate(np.asarray([discords[0][0]], np.int64))
+    assert int(r_disc[0]) == 2
+
+
+def test_motif_discord_non_overlap_and_order():
+    """Selected motif endpoints and discords never overlap each other
+    (same row within exclusion samples); motifs ascend in distance and
+    discords descend; nothing non-finite is ever reported."""
+    view = _view("tsax", _corpus(7, 5, 300), m=60, stride=6)
+    eng = SelfJoinEngine(view, verify="numpy")
+    prof = eng.profile()
+    motifs = topk_motifs(prof, view.locate, 6)
+    discords = topk_discords(prof, view.locate, 6)
+    assert [d for *_, d in motifs] == sorted(d for *_, d in motifs)
+    assert [d for _, d in discords] == \
+        sorted((d for _, d in discords), reverse=True)
+    assert all(np.isfinite(d) for *_, d in motifs)
+    assert all(np.isfinite(d) for _, d in discords)
+
+    def no_overlap(wids):
+        rows, starts = view.locate(np.asarray(wids, np.int64))
+        for i in range(len(wids)):
+            for j in range(i + 1, len(wids)):
+                assert not (rows[i] == rows[j]
+                            and abs(int(starts[i]) - int(starts[j]))
+                            < prof.exclusion), (wids[i], wids[j])
+    no_overlap([w for pair in motifs for w in pair[:2]])
+    no_overlap([w for w, _ in discords])
+
+
+def test_profile_cache_and_refresh():
+    view = _view("sax", _corpus(1, 3, 240), m=60, stride=6)
+    eng = SelfJoinEngine(view, verify="numpy")
+    p1 = eng.profile()
+    assert eng.profile() is p1                       # cache hit is free
+    assert eng.profile(refresh=True) is not p1       # forced recompute
+    p3 = eng.profile(explain=True)                   # EXPLAIN re-measures
+    assert p3 is not p1 and p3.trace is not None
+    assert _same(p1, p3)
+
+
+# ------------------------------------------------------------- device path
+
+def test_device_stream_bitwise_and_zero_host_transfers():
+    """In-process single-device mesh: the sharded stream path with
+    ``verify="device"`` equals the kernel-family host oracle bitwise
+    while ordering candidates AND verifying rows entirely on device."""
+    from repro.launch.mesh import make_mesh_compat
+    from repro.obs import check_trace
+    D = _corpus(5, 4, 240)
+    view = _view("stsax", D, m=60, stride=6)
+    host = SelfJoinEngine(view, verify="host", batch_size=64)
+    oracle = host.scan_profile()
+    mesh = make_mesh_compat((1,), ("data",))
+    dev = SelfJoinEngine(view, verify="device", mesh=mesh, batch_size=64)
+    prof = dev.profile(explain=True)
+    assert prof.source == "stream"
+    assert _same(prof, oracle)
+    assert check_trace(prof.trace, device=True) == []
+    assert prof.trace.get("host_order_bytes") == 0
+    assert prof.trace.get("rows_to_host") == 0
+
+
+def test_device_stream_multi_shard_subprocess():
+    """2 and 4 mocked hosts (XLA device count is process-global, hence
+    the subprocess): bit-identity against the host twin plus the
+    zero-transfer invariants, every encoder."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.core import make_technique
+        from repro.data.synthetic import season_dataset
+        from repro.launch.mesh import make_mesh_compat
+        from repro.obs import check_trace
+        from repro.profile import SelfJoinEngine
+        from repro.subseq import WindowView
+
+        D = season_dataset(4, 240, 10, strength=0.7,
+                           per_series_strength=True, seed=21)
+        kw = {"sax": {}, "ssax": {"r2_season": 0.7},
+              "tsax": {"r2_trend": 0.3}, "stsax": {"r2_season": 0.5}}
+        for tech, extra in kw.items():
+            enc = make_technique(tech, T=60, W=6, L=10, **extra)
+            view = WindowView(enc, D, stride=6, media="ssd")
+            oracle = SelfJoinEngine(view, verify="host").scan_profile()
+            for shards in (2, 4):
+                mesh = make_mesh_compat((shards,), ("data",))
+                eng = SelfJoinEngine(view, verify="device", mesh=mesh,
+                                     batch_size=64)
+                p = eng.profile(explain=True)
+                assert np.array_equal(p.distances, oracle.distances), \\
+                    (tech, shards)
+                assert np.array_equal(p.neighbors, oracle.neighbors), \\
+                    (tech, shards)
+                assert check_trace(p.trace, device=True) == []
+                assert p.trace.get("host_order_bytes") == 0
+                assert p.trace.get("rows_to_host") == 0
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+# ----------------------------------------------------------------- service
+
+def test_service_selfjoin_tier():
+    """The session's self-join tier: motif/discord requests are served
+    from the shared profile, match the oracle, and bad kinds shed with
+    a reason instead of hanging."""
+    from repro.obs import MetricsRegistry
+    from repro.service import MatchSession
+    D, _ = _plant()
+    view = _view("ssax", D, m=60, stride=6)
+    sub = SubseqEngine(view, verify="host", batch_size=64)
+    reg = MetricsRegistry()
+    sj = SelfJoinEngine(view, verify="host", batch_size=64, metrics=reg)
+    oracle = sj.scan_profile()
+    sess = MatchSession(sub, selfjoin=sj, metrics=reg, window_s=0.05,
+                        max_batch=4)
+    r_m = sess.submit_selfjoin("motifs", k=2)
+    r_d = sess.submit_selfjoin("discords", k=2)
+    r_bad = sess.submit_selfjoin("profiles", k=1)
+    sess.start()
+    assert r_m.wait(300) and r_m.ok, r_m.error
+    assert r_d.wait(300) and r_d.ok, r_d.error
+    assert r_bad.wait(300) and not r_bad.ok and r_bad.error
+    sess.close()
+    assert r_m.tier_served == "selfjoin"
+    assert r_m.result == topk_motifs(oracle, view.locate, 2)
+    assert r_d.result == topk_discords(oracle, view.locate, 2)
+    snap = reg.snapshot()
+    assert snap["counters"].get("selfjoin.queries", 0) > 0
