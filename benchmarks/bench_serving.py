@@ -22,6 +22,16 @@ reports what serving a paper-exact matcher actually costs:
   certificate.
 * **window sweep** — QPS / requests-per-dispatch vs coalescing
   window.
+* **ingest-while-serving** — 2 engine replicas over the shared store,
+  a writer thread appending rows throughout a closed-loop burst:
+  every answer must carry its admission-pinned corpus epoch and match
+  an epoch-pinned oracle (gate); the achieved QPS is compared to a
+  frozen-corpus burst with the same replicas (ratio >= 0.9 gated in
+  full runs; reported-only under ``--dryrun``, where timing is noise).
+* **replica failover** — kill one replica with requests in flight;
+  every request must be REQUEUED onto the survivor and served — the
+  leg gates zero sheds (``python -m benchmarks.bench_serving
+  --kill-replica`` runs just this leg).
 
 Under ``verify="device"`` (any mesh size, including the CI
 forced-8-device leg) the run additionally gates
@@ -248,6 +258,74 @@ def run(dryrun: bool = False):
                      f"p50={_pct([r.latency_s for r in ok], 50) * 1e3:.1f}"
                      "ms"))
 
+    # -- phase 7: ingest-while-serving over 2 replicas -------------------
+    # (runs after the fixed-corpus phases: the writer below grows the
+    # shared store, so ordering keeps the earlier numbers comparable)
+    replica = make_engine_service(tech, None, mesh, store=engine.store,
+                                  batch_size=64, verify="device",
+                                  media="ssd")
+    n_ing = max((max(n // 8, n_dev) // n_dev) * n_dev, n_dev)
+    D_ing = season_dataset(n_ing, T, 10, 0.7,
+                           per_series_strength=True, seed=55)
+    qps_rep = {}
+    for label, ingest in (("frozen", False), ("ingest", True)):
+        with MatchSession(engine, replicas=[replica], metrics=REGISTRY,
+                          window_s=0.002, max_batch=CONCURRENCY,
+                          max_queue=8 * CONCURRENCY) as s:
+            stop = threading.Event()
+            wt = None
+            if ingest:
+                def writer():
+                    chunk = max(n_dev, n_ing // 8)
+                    for lo in range(0, n_ing, chunk):
+                        if stop.is_set():
+                            break
+                        engine.ingest(D_ing[lo:lo + chunk])
+                        time.sleep(0.001)
+                wt = threading.Thread(target=writer)
+                wt.start()
+            ok, wall = _burst(s, Q, k)
+            if wt is not None:
+                stop.set()
+                wt.join()
+        if len(ok) != len(Q):
+            raise RuntimeError(
+                f"serving/{label}: {len(Q) - len(ok)} requests shed in "
+                "a closed-loop replicated burst")
+        qps_rep[label] = len(ok) / max(wall, 1e-9)
+        if ingest:
+            if any(r.epoch is None for r in ok):
+                raise RuntimeError("ingest-while-serving: a served "
+                                   "request carries no epoch pin")
+            # epoch-pinned bit-identity spot check: answers must equal
+            # the oracle at each request's ADMISSION frontier, not the
+            # live (already-grown) corpus
+            for r in ok[::max(len(ok) // 8, 1)]:
+                if r.tier_served == "approx":
+                    continue
+                o = engine.topk(
+                    r.query[None], k=r.k,
+                    source="index" if r.tier_served == "index"
+                    else None, epoch=r.epoch)
+                if not (np.array_equal(r.indices, o.indices[0])
+                        and np.array_equal(r.distances,
+                                           o.distances[0])):
+                    raise RuntimeError(
+                        "ingest-while-serving: answer diverged from "
+                        f"the epoch-pinned oracle at {r.epoch}")
+    ratio = qps_rep["ingest"] / max(qps_rep["frozen"], 1e-9)
+    rows.append(("serving/ingest_while_serving",
+                 f"replicas=2 qps_frozen={qps_rep['frozen']:.0f} "
+                 f"qps_ingest={qps_rep['ingest']:.0f} "
+                 f"ratio={ratio:.2f} epoch_pinned=yes"))
+    if not dryrun and ratio < 0.9:
+        raise RuntimeError(
+            f"ingest-while-serving QPS fell below 0.9x the frozen-"
+            f"corpus baseline: ratio={ratio:.2f}")
+
+    # -- phase 8: replica failover — requeue, never shed -----------------
+    rows.append(_failover_leg(engine, replica, Q, k))
+
     # -- gate: serving must keep the device path device-resident ---------
     hob = REGISTRY.snapshot()["counters"].get("match.host_order_bytes", 0)
     if int(hob) != 0:
@@ -260,5 +338,89 @@ def run(dryrun: bool = False):
     return rows
 
 
+def _failover_leg(engine, replica, Q, k):
+    """Kill replica 1 with requests in flight: every request must be
+    requeued onto the survivor and served — zero sheds (gated)."""
+    from repro.obs import REGISTRY
+    from repro.service import MatchSession
+
+    def _sheds(c):
+        return sum(v for name, v in c.items()
+                   if name.startswith("serve.shed."))
+
+    c0 = REGISTRY.snapshot()["counters"]
+    s = MatchSession(engine, replicas=[replica], metrics=REGISTRY,
+                     window_s=0.0, max_batch=4,
+                     max_queue=8 * CONCURRENCY)
+    # submit BEFORE start: the whole burst is backlog when the
+    # coalescer comes up, so batches are queued on both replicas'
+    # inboxes when the kill lands — the requeue path actually runs
+    reqs = [s.submit(Q[i % len(Q)], k=k)
+            for i in range(2 * CONCURRENCY)]
+    s.start()
+    time.sleep(0.005)
+    s.kill_replica(1)                # batches on it requeue, not shed
+    for r in reqs:
+        r.wait(240)
+    s.close()
+    not_ok = [r for r in reqs if not r.ok]
+    if not_ok:
+        raise RuntimeError(
+            f"failover: {len(not_ok)} requests shed on replica kill "
+            f"(first: {not_ok[0].error})")
+    c1 = REGISTRY.snapshot()["counters"]
+    if _sheds(c1) != _sheds(c0):
+        raise RuntimeError("failover: replica kill shed requests "
+                           "instead of requeueing them")
+    requeued = c1.get("serve.requeued", 0) - c0.get("serve.requeued", 0)
+    return ("serving/failover",
+            f"killed=1 served={len(reqs)}/{len(reqs)} "
+            f"requeued={requeued} shed=0")
+
+
+def run_failover(dryrun: bool = True):
+    """Standalone replica-failover leg (``--kill-replica``): minimal
+    engine setup, then the same gated kill/requeue sequence ``run()``
+    executes as phase 8."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_technique
+    from repro.core.distributed import make_engine_service
+    from repro.data.synthetic import season_dataset
+    from repro.launch.mesh import make_mesh_compat
+    from repro.obs import REGISTRY
+    from repro.service import MatchSession  # noqa: F401 — leg import
+
+    n, T, k = (256, 480, 4) if dryrun else (4096, 960, 8)
+    n_dev = len(jax.devices())
+    n = max((n // n_dev) * n_dev, n_dev)
+    X = season_dataset(n + CONCURRENCY, T, 10, 0.7,
+                       per_series_strength=True, seed=21)
+    Q, D = X[:CONCURRENCY], X[CONCURRENCY:]
+    tech = make_technique("ssax", T=T, W=48, L=10, r2_season=0.7)
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    engine = make_engine_service(tech, jnp.asarray(D), mesh,
+                                 batch_size=64, verify="device",
+                                 media="ssd", metrics=REGISTRY)
+    engine.store.build_index(leaf_fill=16 if dryrun else 64)
+    replica = make_engine_service(tech, None, mesh, store=engine.store,
+                                  batch_size=64, verify="device",
+                                  media="ssd")
+    name, derived = _failover_leg(engine, replica, Q, k)
+    emit_row(name, derived)
+    return [(name, derived)]
+
+
 if __name__ == "__main__":
-    run(dryrun=True)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kill-replica", action="store_true",
+                    help="run only the replica-failover leg")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size run (default: dryrun sizes)")
+    a = ap.parse_args()
+    if a.kill_replica:
+        run_failover(dryrun=not a.full)
+    else:
+        run(dryrun=not a.full)

@@ -1,0 +1,159 @@
+"""Walkthrough: epoch-pinned answers under live ingest.
+
+The store publishes an immutable :class:`repro.store.CorpusEpoch`
+frontier as the LAST step of every mutation, and every dispatch pins
+the epoch at admission — so an answer is bit-identical to the corpus
+as it stood when the query was admitted, no matter how much ingest
+happens while it is queued or running.  This script makes that
+contract tangible with a planted motif:
+
+1. build a seasonal corpus that does NOT contain a close match for a
+   probe query, and freeze epoch ``e0``;
+2. append a chunk that hides a near-duplicate of the probe (the
+   planted motif), producing epoch ``e1``;
+3. ask the engine the same question at both epochs — pinned at ``e0``
+   the motif is invisible (the answer is the pre-append nearest
+   neighbor), pinned at ``e1`` it is the top hit.  No index rebuild,
+   no store copy: the as-of read is a prefix slice + a leaf-id
+   filter;
+4. serve the probe through a two-replica :class:`MatchSession` while
+   a writer thread keeps appending — every request comes back tagged
+   with its admission epoch and verifies bit-identical against a
+   direct ``engine.topk`` oracle pinned to that same epoch.
+
+    PYTHONPATH=src python examples/ingest_while_serving.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_technique
+from repro.core.distributed import make_engine_service
+from repro.data.synthetic import season_dataset
+from repro.launch.mesh import make_mesh_compat
+from repro.obs import REGISTRY
+from repro.service import MatchSession
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = make_mesh_compat((n_dev,), ("data",))
+    n, T, L, k = 2048, 480, 10, 4
+    n = (n // n_dev) * n_dev
+
+    rng = np.random.default_rng(7)
+    X = season_dataset(n + 1 + 4 * n_dev * 4, T, L, 0.7,
+                       per_series_strength=True, seed=7)
+    D, probe, tail = X[:n], X[n], X[n + 1:]
+    tech = make_technique("ssax", T=T, W=48, L=L, r2_season=0.7)
+    engine = make_engine_service(tech, jnp.asarray(D), mesh,
+                                 batch_size=64, verify="device",
+                                 media="ssd", metrics=REGISTRY)
+    engine.store.build_index(leaf_fill=32)
+    print(f"engine: {n} x {T} rows sharded over {n_dev} devices, "
+          f"split-tree index ready")
+
+    # ---- 1. freeze the pre-append frontier -----------------------------
+    e0 = engine.store.current_epoch()
+    pre = engine.topk(probe[None], k=1, source="index")
+    d_pre = float(pre.distances[0, 0])
+    print(f"1. epoch e0 = {e0.n_rows} rows; probe's nearest neighbor "
+          f"today: row {int(pre.indices[0, 0])} at distance {d_pre:.3f}")
+
+    # ---- 2. append a chunk hiding the planted motif --------------------
+    chunk = np.array(tail[:n_dev - 1], np.float32)
+    motif = probe + rng.normal(0.0, 1e-3, probe.shape).astype(np.float32)
+    chunk = np.concatenate([chunk, motif[None]], axis=0)   # n_dev rows
+    motif_id = engine.store.n + len(chunk) - 1
+    engine.ingest(chunk)
+    e1 = engine.store.current_epoch()
+    print(f"2. appended {len(chunk)} rows (motif hidden at row "
+          f"{motif_id}); epoch e1 = {e1.n_rows} rows — index NOT "
+          f"rebuilt, mirrors uploaded O(chunk)")
+
+    # ---- 3. same question, two epochs ----------------------------------
+    at_e0 = engine.topk(probe[None], k=1, source="index", epoch=e0)
+    at_e1 = engine.topk(probe[None], k=1, source="index", epoch=e1)
+    print(f"3. pinned at e0: row {int(at_e0.indices[0, 0])} at "
+          f"{float(at_e0.distances[0, 0]):.3f} (motif invisible); "
+          f"pinned at e1: row {int(at_e1.indices[0, 0])} at "
+          f"{float(at_e1.distances[0, 0]):.4f} (the planted motif)")
+    assert int(at_e0.indices[0, 0]) == int(pre.indices[0, 0])
+    assert int(at_e0.indices[0, 0]) != motif_id
+    assert int(at_e1.indices[0, 0]) == motif_id
+
+    # ---- 4. serve through replicas while a writer keeps appending ------
+    replica = make_engine_service(tech, None, mesh, store=engine.store,
+                                  batch_size=64, verify="device",
+                                  media="ssd")
+    session = MatchSession(engine, replicas=[replica], metrics=REGISTRY,
+                           window_s=0.002, max_batch=4).start()
+    session.calibrate(probe[None], k=k)
+
+    stop = threading.Event()
+
+    def writer():
+        # chunks of n_dev rows: the shape step 2 already compiled, so
+        # the first append lands fast instead of behind a jit compile
+        rest = tail[n_dev - 1:]
+        rest = rest[:len(rest) // n_dev * n_dev]
+        step = n_dev
+        for lo in range(0, len(rest), step):
+            if stop.is_set():
+                return
+            engine.ingest(np.array(rest[lo:lo + step], np.float32))
+            time.sleep(0.002)
+
+    wt = threading.Thread(target=writer)
+    wt.start()
+    queries = np.concatenate([probe[None]] * 2
+                             + [np.array(tail[:14], np.float32)])
+    reqs = []
+    for q in queries:       # spread admissions so epochs advance between
+        reqs.append(session.submit(q, k=k))
+        time.sleep(0.02)
+    for r in reqs:
+        r.wait(120.0)
+    stop.set()
+    wt.join()
+
+    served = [r for r in reqs if r.ok]
+    epochs = sorted({r.epoch.n_rows for r in served})
+    mism = 0
+    for r in served:
+        if r.tier_served == "approx":
+            continue
+        oracle = engine.topk(
+            r.query[None], k=r.k,
+            source="index" if r.tier_served == "index" else None,
+            epoch=r.epoch)
+        if not (np.array_equal(r.indices, oracle.indices[0])
+                and np.array_equal(r.distances, oracle.distances[0])):
+            mism += 1
+    assert mism == 0
+    assert all(r.epoch is not None for r in served)
+    assert all(int(r.indices[0]) == motif_id for r in served[:2])
+    by_rep = {}
+    for r in served:
+        by_rep[r.replica] = by_rep.get(r.replica, 0) + 1
+    print(f"4. served {len(served)}/{len(reqs)} requests over 2 "
+          f"replicas (placement {by_rep}) while ingest grew the store "
+          f"to {engine.store.n} rows; answers pinned across "
+          f"{len(epochs)} epochs ({epochs[0]}..{epochs[-1]} rows), "
+          f"every exact answer bit-identical to a direct topk oracle "
+          f"at its pinned epoch; the probe finds the motif post-e1")
+
+    session.close()
+    print("done: ingest never blocks serving, and serving never sees "
+          "a torn corpus — answers are exact at their admission epoch")
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,7 @@ SAX, sSAX, tSAX and 1d-SAX all plug in.
 
 from __future__ import annotations
 
+import threading
 from functools import lru_cache, partial
 from typing import Callable
 
@@ -684,6 +685,8 @@ class ShardedRepSweep:
             raise ValueError("device-resident verification needs raw rows "
                              "in the store (store_raw=True)")
         self._synced_version = -1
+        self._synced_n = 0               # row frontier the mirrors cover
+        self._sync_lock = threading.Lock()
         self._head = 0
         self._mirrors = None             # per-rep-leaf RoundRobinMirror
         self._tail_rep = None            # host, < n_shards rows
@@ -718,28 +721,39 @@ class ShardedRepSweep:
     def _sync(self):
         if self._synced_version == self.store.version:
             return
-        from repro.store.symbolic import rep_leaves
-        n = self.store.n
-        head = (n // self.n_shards) * self.n_shards
-        leaves = rep_leaves(self.store.rep_view())
-        if head != self._head:
-            if self._mirrors is None:
-                self._mirrors = tuple(
-                    RoundRobinMirror(self.mesh, self.n_shards)
-                    for _ in leaves)
-            # O(chunk): only the head-aligned delta rows are uploaded
-            for mir, l in zip(self._mirrors, leaves):
-                mir.append(l[self._head:head])
-            if self.mirror_raw:
-                if self._raw_mirror is None:
-                    self._raw_mirror = RoundRobinMirror(self.mesh,
-                                                        self.n_shards)
-                self._raw_mirror.append(self.store.data[self._head:head])
-        self._tail_rep = (self._restructure(
-            tuple(jnp.asarray(l[head:]) for l in leaves))
-            if head < n else None)
-        self._head = head
-        self._synced_version = self.store.version
+        with self._sync_lock:
+            if self._synced_version == self.store.version:
+                return
+            from repro.store.symbolic import rep_leaves
+            # Capture the frontier FIRST: a writer may append while we
+            # sync, so everything below (leaves, tail, version stamp)
+            # is sliced to this (version, n) pair — never the live
+            # attributes, which could already be past it.
+            version = self.store.version
+            n = self.store.n
+            head = (n // self.n_shards) * self.n_shards
+            leaves = tuple(l[:n]
+                           for l in rep_leaves(self.store.rep_view()))
+            if head != self._head:
+                if self._mirrors is None:
+                    self._mirrors = tuple(
+                        RoundRobinMirror(self.mesh, self.n_shards)
+                        for _ in leaves)
+                # O(chunk): only head-aligned delta rows are uploaded
+                for mir, l in zip(self._mirrors, leaves):
+                    mir.append(l[self._head:head])
+                if self.mirror_raw:
+                    if self._raw_mirror is None:
+                        self._raw_mirror = RoundRobinMirror(self.mesh,
+                                                            self.n_shards)
+                    self._raw_mirror.append(
+                        self.store.data[self._head:head])
+            self._tail_rep = (self._restructure(
+                tuple(jnp.asarray(l[head:]) for l in leaves))
+                if head < n else None)
+            self._head = head
+            self._synced_n = n
+            self._synced_version = version
 
     @property
     def h2d_bytes(self) -> int:
@@ -775,7 +789,9 @@ class ShardedRepSweep:
         if self._tail_rep is None:
             return None, None
         d = self._pw(rep_q, self._tail_rep)
-        ids = np.arange(self._head, self.store.n, dtype=np.int64)
+        # _synced_n, not the live store.n: a concurrent append may have
+        # grown the store past the frontier this tail was sliced at
+        ids = np.arange(self._head, self._synced_n, dtype=np.int64)
         return d, ids
 
     # -- sweeps -----------------------------------------------------------
@@ -876,7 +892,7 @@ class ShardedRepSweep:
         if mask_fn is not None:
             mask = jnp.asarray(mask_fn(jnp.asarray(ids)))
             b = jnp.where(mask, jnp.float32(np.inf), jnp.asarray(b))
-        return _order_stream(b, ids, width=self.store.n)
+        return _order_stream(b, ids, width=self._synced_n)
 
     # -- device-resident verification -------------------------------------
     def shard_ranges(self):
@@ -912,6 +928,7 @@ class ShardedRepSweep:
         q_n = qs.shape[0]
         q_dev = jnp.asarray(qs)
         head = self._head
+        n_syn = self._synced_n           # frontier at closure creation
 
         def dist(aq, cand):
             # pad the active-query batch back to the full query set so
@@ -927,9 +944,9 @@ class ShardedRepSweep:
                 out = np.minimum(out, cand_dists_rows_rr(
                     self._raw_mirror.buf, q_dev, full, self.mesh,
                     self.n_shards, self._raw_mirror.per_live))
-            if self.store.n > head and (full >= head).any():
+            if n_syn > head and (full >= head).any():
                 out = np.minimum(out, _host_cand_dists_rows(
-                    self.store.data[head:], head, qs, full))
+                    self.store.data[head:n_syn], head, qs, full))
             return out[aq]
 
         return dist

@@ -616,21 +616,24 @@ class MatchEngine:
         return np.take_along_axis(part, np.argsort(part_d, axis=1,
                                                    kind="stable"), axis=1)
 
-    def index_source(self):
+    def index_source(self, epoch=None):
         """The backing store's split-tree index as a candidate source
         (``store.build_index()`` first).  With a ``stream_factory``
         present the tree's union bounds are device-ordered too
-        (``device_order=True``)."""
+        (``device_order=True``).  ``epoch`` restricts generation to the
+        items indexed before that frontier."""
         idx = getattr(self.store, "index", None)
         if idx is None:
             raise ValueError("store has no index; call "
                              "store.build_index() first")
-        return idx.source(device_order=self._stream_factory is not None)
+        return idx.source(device_order=self._stream_factory is not None,
+                          epoch=epoch)
 
     # -- matching --------------------------------------------------------
     def topk(self, queries_raw, k: int = 1, *, exact: bool = True,
              batch_size: Optional[int] = None, expand: int = 4,
-             source=None, trace=None, explain: bool = False) -> TopKResult:
+             source=None, trace=None, explain: bool = False,
+             epoch=None) -> TopKResult:
         """Top-k matches for a (Q, T) query batch (or a single (T,) query).
 
         exact=True:  pruned scan, provably identical to brute force.
@@ -642,6 +645,17 @@ class MatchEngine:
                      candidates only (the paper's approximate matching,
                      generalized to k-NN); ``source`` is ignored.
 
+        epoch: pin the answer to a published corpus frontier
+        (``repro.store.CorpusEpoch`` or a plain row count).  Only rows
+        with id < ``epoch.n_rows`` are generated, verified or returned
+        — exact results are bit-identical to a frozen copy of the store
+        truncated to that epoch, regardless of concurrent ``append`` /
+        ``ingest`` (the store is append-only, so the epoch prefix is
+        immutable).  None (the default) serves the live frontier.
+        Sources passed as OBJECTS must already carry their own epoch
+        (``SeriesIndex.source(epoch=...)``); the string/None forms are
+        epoch-wired here.
+
         trace / explain: ``trace`` records a per-query ``repro.obs``
         query trace into the given object; ``explain=True`` creates one
         and attaches it to the result as ``res.trace`` (render with
@@ -649,6 +663,7 @@ class MatchEngine:
         store accounting (observability neutrality, property-tested).
         """
         import time as _time
+        from repro.store.symbolic import epoch_rows
         qs = np.asarray(queries_raw)
         if qs.ndim == 1:
             qs = qs[None]
@@ -658,6 +673,9 @@ class MatchEngine:
         total = getattr(self.store, "n", None)
         if total is None:
             total = self.store.data.shape[0]
+        n_e = epoch_rows(epoch)
+        if n_e is not None:
+            total = min(total, n_e)
         observing = trace is not None or self.metrics is not None
         t0 = _time.perf_counter() if observing else 0.0
         sweep = getattr(self, "sweep", None)
@@ -671,16 +689,33 @@ class MatchEngine:
                               exact=bool(exact) and not approx_src,
                               q_n=int(qs.shape[0]), total=int(total),
                               source=src_name, verify=self.verify_mode)
+            if n_e is not None:
+                trace.meta["epoch_rows"] = int(n_e)
         hob0 = sweep.host_order_bytes if sweep is not None else 0
         h2d0 = sweep.h2d_bytes if sweep is not None else 0
         dfn = self._make_dist_fn(qs)
         if exact:
             from repro.index.candidates import LinearSweep, topk_from_source
             if source is None:
-                source = LinearSweep(self.repr_distances,
-                                     stream_fn=self._stream_factory)
+                if n_e is None:
+                    source = LinearSweep(self.repr_distances,
+                                         stream_fn=self._stream_factory)
+                else:
+                    # epoch-clamped linear sweep: the stream masks rows
+                    # past the frontier to +inf ON DEVICE (they never
+                    # reach verification); the host matrix path trims
+                    # columns to the epoch prefix — both are exactly
+                    # the sweep a store truncated at the epoch would run
+                    stream_fn = None
+                    if self._stream_factory is not None:
+                        def stream_fn(q, _n=n_e):
+                            return self._stream_factory(
+                                q, mask_fn=lambda ids: ids >= _n)
+                    source = LinearSweep(
+                        lambda q, _n=n_e: self.repr_distances(q)[:, :_n],
+                        stream_fn=stream_fn)
             elif source == "index":
-                source = self.index_source()
+                source = self.index_source(epoch=n_e)
             res = topk_from_source(
                 qs, source, self.store, k=k,
                 batch_size=batch_size or self.batch_size,
@@ -690,6 +725,11 @@ class MatchEngine:
             from repro.obs.trace import maybe_span
             with maybe_span(trace, "order"):
                 cand = self.candidates(qs, k * max(expand, 1))
+                if n_e is not None:
+                    # epoch filter on the approximate frontier: rows
+                    # past the pinned frontier are dropped (-1 padding,
+                    # ignored by verification), never returned
+                    cand = np.where(cand < n_e, cand, -1)
             with maybe_span(trace, "verify"):
                 res = verify_candidates(
                     qs, cand, self.store, k=k, verifier=self.verifier,
@@ -704,7 +744,7 @@ class MatchEngine:
 
     def topk_approx(self, queries_raw, k: int = 1, *,
                     collect: Optional[int] = None, trace=None,
-                    explain: bool = False) -> TopKResult:
+                    explain: bool = False, epoch=None) -> TopKResult:
         """Anytime/approximate top-k with a per-query error bar.
 
         When the backing store carries a split-tree index, routes
@@ -721,12 +761,13 @@ class MatchEngine:
         idx = getattr(self.store, "index", None)
         if idx is None:
             return self.topk(queries_raw, k=k, exact=False, trace=trace,
-                             explain=explain)
+                             explain=explain, epoch=epoch)
         src = idx.source(device_order=self._stream_factory is not None,
                          approx_collect=(collect if collect is not None
-                                         else max(4 * k, 32)))
+                                         else max(4 * k, 32)),
+                         epoch=epoch)
         return self.topk(queries_raw, k=k, source=src, trace=trace,
-                         explain=explain)
+                         explain=explain, epoch=epoch)
 
     def _observe(self, trace, res: TopKResult, sweep, total: int,
                  q_n: int, wall_s: float, hob0: int, h2d0: int) -> None:

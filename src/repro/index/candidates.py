@@ -130,10 +130,18 @@ class TreeCandidates:
     def __init__(self, tree: SplitTree, query_features: Callable, *,
                  prior_d=None, prior_i=None, seen=None,
                  device_order: bool = False,
-                 approx_collect: Optional[int] = None):
+                 approx_collect: Optional[int] = None,
+                 epoch=None):
         self.tree = tree
         self._query_features = query_features
         self._device_order = bool(device_order)
+        # as-of frontier: only items with id < epoch are generated (a
+        # ``repro.store.CorpusEpoch`` or plain row count; None = live).
+        # Inserts only extend the tree, so the filter happens inside the
+        # traversals (tree.seed_candidates / collect_bounds max_id) —
+        # no copy-on-write, bit-identical to a tree truncated there.
+        from repro.store.symbolic import epoch_rows
+        self._epoch = epoch_rows(epoch)
         if approx_collect is not None and approx_collect < 0:
             raise ValueError("approx_collect must be >= 0")
         self._approx_collect = approx_collect
@@ -162,7 +170,8 @@ class TreeCandidates:
             return np.empty(0, np.int64)
         m = k
         while True:
-            s = np.asarray(self.tree.seed_candidates(qf_r, m), np.int64)
+            s = np.asarray(self.tree.seed_candidates(
+                qf_r, m, max_id=self._epoch), np.int64)
             fresh = s[~np.isin(s, seen_r)]
             if len(fresh) >= need or len(s) < m:   # < m: walk exhausted
                 return fresh
@@ -175,12 +184,14 @@ class TreeCandidates:
         if qf.ndim == 1:
             qf = qf[None]
         q_n = qf.shape[0]
-        if tree.n == 0:
+        n_vis = tree.n if self._epoch is None \
+            else min(tree.n, self._epoch)
+        if n_vis == 0:
             return CandidateSet(
                 bounds=np.empty((q_n, 0)), col_ids=None,
                 approx_dropped=([np.empty(0)] * q_n if self.is_approx
                                 else None))
-        k = min(k, tree.n)
+        k = min(k, n_vis)
 
         seen = self._seen if self._seen is not None \
             else [np.empty(0, np.int64)] * q_n
@@ -223,7 +234,8 @@ class TreeCandidates:
             # verified; a short frontier (corpus < k) collects everything
             u = (float(merged_d[r, k - 1])
                  if merged_d.shape[1] >= k else np.inf)
-            ids_r, lb_r = tree.collect_bounds(qf[r], u)
+            ids_r, lb_r = tree.collect_bounds(qf[r], u,
+                                              max_id=self._epoch)
             drop = np.concatenate([seen[r], seeds[r]])
             keep = ~np.isin(ids_r, drop)   # verified ids never re-enter
             ids_r, lb_r = ids_r[keep], lb_r[keep]

@@ -134,7 +134,8 @@ class SeriesIndex:
 
     def source(self, *, prior_d=None, prior_i=None, seen=None,
                device_order: bool = False,
-               approx_collect: Optional[int] = None) -> TreeCandidates:
+               approx_collect: Optional[int] = None,
+               epoch=None) -> TreeCandidates:
         """This index as a ``CandidateSource`` for the match engine.
         ``prior_d`` / ``prior_i`` / ``seen`` enable frontier reuse across
         exclusion-widening rounds (see ``TreeCandidates``): already
@@ -143,16 +144,19 @@ class SeriesIndex:
         the scan instead of handing it a host matrix.  ``approx_collect``
         switches to the APPROXIMATE anytime mode: exact seed walk, then
         at most that many collected survivors per query, with the
-        dropped bounds carried as the result's error certificate."""
+        dropped bounds carried as the result's error certificate.
+        ``epoch`` (``repro.store.CorpusEpoch`` or row count) restricts
+        generation to items indexed before that frontier — the as-of
+        read behind snapshot-consistent serving under ingest."""
         return TreeCandidates(self.tree, self.query_features,
                               prior_d=prior_d, prior_i=prior_i, seen=seen,
                               device_order=device_order,
-                              approx_collect=approx_collect)
+                              approx_collect=approx_collect, epoch=epoch)
 
     def topk(self, queries_raw, store, *, k: int = 1, batch_size: int = 64,
              verifier=None, merge=None, dist_fn=None, on_verified=None,
              prior_d=None, prior_i=None, seen=None,
-             approx_collect: Optional[int] = None, trace=None):
+             approx_collect: Optional[int] = None, epoch=None, trace=None):
         """Exact top-k over ``store`` through the indexed traversal —
         bit-identical to the linear-sweep engine (same verification
         path, same tie-break).  ``dist_fn`` routes verification through
@@ -161,12 +165,17 @@ class SeriesIndex:
         ``repro.obs`` query trace (seed/collect/scan phases).
         ``approx_collect`` routes through the bounded-collect
         approximate mode — the result then carries ``kth_lb`` /
-        ``error_bar`` (see ``TreeCandidates``)."""
+        ``error_bar`` (see ``TreeCandidates``).  ``epoch`` pins the
+        answer to the items visible at that frontier (bit-identical to
+        an index truncated there, regardless of concurrent inserts)."""
+        from repro.store.symbolic import epoch_rows
         src = self.source(prior_d=prior_d, prior_i=prior_i, seen=seen,
-                          approx_collect=approx_collect)
+                          approx_collect=approx_collect, epoch=epoch)
+        n_e = epoch_rows(epoch)
+        total = self.n if n_e is None else min(self.n, n_e)
         return topk_from_source(queries_raw, src, store, k=k,
                                 batch_size=batch_size, verifier=verifier,
-                                merge=merge, total=self.n,
+                                merge=merge, total=total,
                                 dist_fn=dist_fn, on_verified=on_verified,
                                 trace=trace)
 

@@ -34,6 +34,7 @@ trees traverse identically regardless of construction history.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Optional
 
@@ -89,6 +90,12 @@ class SplitTree:
         self.root = _new_node(np.zeros(self.D, np.int8))
         self.n_nodes = 1
         self._breaks: dict = {}       # (dim, bits) -> breakpoint array
+        # structure mutex: a split rewires ``children`` dicts while a
+        # traversal iterates them, so inserts and walks are serialized.
+        # Walks are O(survivors) numpy work; verification — the
+        # dominant cost — runs outside the lock, so concurrent
+        # ingest-while-serving contends only on the cheap tree phases.
+        self._lock = threading.RLock()
 
     # -- items -----------------------------------------------------------
     @property
@@ -126,11 +133,12 @@ class SplitTree:
         m = feats.shape[0]
         if m == 0:
             return np.empty(0, np.int64)
-        self._grow(self._n + m)
-        self._feats[self._n:self._n + m] = feats
-        ids = np.arange(self._n, self._n + m, dtype=np.int64)
-        self._n += m
-        route(self, self.root, ids)
+        with self._lock:
+            self._grow(self._n + m)
+            self._feats[self._n:self._n + m] = feats
+            ids = np.arange(self._n, self._n + m, dtype=np.int64)
+            self._n += m
+            route(self, self.root, ids)
         return ids
 
     def insert_grouped(self, feats, n_groups: int) -> np.ndarray:
@@ -154,14 +162,15 @@ class SplitTree:
         m = feats.shape[0]
         if m == 0:
             return np.empty(0, np.int64)
-        self._grow(self._n + m)
-        self._feats[self._n:self._n + m] = feats
-        ids = np.arange(self._n, self._n + m, dtype=np.int64)
-        self._n += m
-        addr = root_addresses(self, feats, n_groups)
-        for a in np.unique(addr):
-            route(self, self.root, ids[addr == a])
-        self._canonicalize_leaves()
+        with self._lock:
+            self._grow(self._n + m)
+            self._feats[self._n:self._n + m] = feats
+            ids = np.arange(self._n, self._n + m, dtype=np.int64)
+            self._n += m
+            addr = root_addresses(self, feats, n_groups)
+            for a in np.unique(addr):
+                route(self, self.root, ids[addr == a])
+            self._canonicalize_leaves()
         return ids
 
     def _canonicalize_leaves(self):
@@ -207,44 +216,71 @@ class SplitTree:
         return self.adapter.member_lb(qf, self._feats[ids])
 
     # -- traversal -------------------------------------------------------
-    def seed_candidates(self, qf: np.ndarray, k: int) -> list:
-        """Best-first leaf walk until >= k member ids are collected — the
-        seed set whose verified distances upper-bound the true k-th NN."""
-        import heapq
-        heap = [(0.0, 0, self.root)]
-        counter = 1
-        out: list = []
-        while heap and len(out) < k:
-            _, _, node = heapq.heappop(heap)
-            if node.is_leaf:
-                out.extend(node.ids.tolist())
-                continue
-            for s in sorted(node.children):
-                child = node.children[s]
-                heapq.heappush(heap, (self.bbox_lb(qf, child), counter,
-                                      child))
-                counter += 1
-        return out
+    #
+    # As-of reads (``max_id``): item ids are assigned monotonically and
+    # inserts only ever EXTEND the tree (new members, expanded boxes,
+    # deeper splits) — nothing indexed before id ``max_id`` is ever
+    # rewritten.  So a traversal as-of an epoch frontier is just the
+    # filter ``id < max_id`` at the leaves: a node's (possibly later,
+    # looser) bounding box is still a valid lower bound for the epoch
+    # subset of its members, so pruning stays correct, and the final
+    # top-k is bit-identical to a tree holding only the first ``max_id``
+    # items (exactness of the downstream k-th-best verification holds
+    # for ANY valid-bound candidate set).
 
-    def collect_bounds(self, qf: np.ndarray, thresh: float):
+    def seed_candidates(self, qf: np.ndarray, k: int,
+                        max_id: Optional[int] = None) -> list:
+        """Best-first leaf walk until >= k member ids are collected — the
+        seed set whose verified distances upper-bound the true k-th NN.
+        ``max_id`` restricts to items inserted before that id (as-of an
+        epoch frontier); the walk keeps descending until k epoch-visible
+        members are found or the tree is exhausted."""
+        import heapq
+        with self._lock:
+            heap = [(0.0, 0, self.root)]
+            counter = 1
+            out: list = []
+            while heap and len(out) < k:
+                _, _, node = heapq.heappop(heap)
+                if node.is_leaf:
+                    ids = node.ids
+                    if max_id is not None:
+                        ids = ids[ids < max_id]
+                    out.extend(ids.tolist())
+                    continue
+                for s in sorted(node.children):
+                    child = node.children[s]
+                    heapq.heappush(heap, (self.bbox_lb(qf, child), counter,
+                                          child))
+                    counter += 1
+            return out
+
+    def collect_bounds(self, qf: np.ndarray, thresh: float,
+                       max_id: Optional[int] = None):
         """Compact (ids, member bounds) of every member that could still
         beat ``thresh`` (subtrees pruned by the box bound, members by the
-        exact feature bound) — O(survivors), never corpus-width."""
+        exact feature bound) — O(survivors), never corpus-width.
+        ``max_id`` filters to the members visible as-of an epoch
+        frontier (see the traversal note above)."""
         ids_out, lb_out = [], []
-        stack = [self.root]
-        while stack:
-            node = stack.pop()
-            if self.bbox_lb(qf, node) > thresh:
-                continue
-            if node.is_leaf:
-                if node.ids.size:
-                    mlb = self.member_lb(qf, node.ids)
-                    keep = mlb <= thresh
-                    ids_out.append(node.ids[keep])
-                    lb_out.append(mlb[keep])
-            else:
-                for s in sorted(node.children):
-                    stack.append(node.children[s])
+        with self._lock:
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                if self.bbox_lb(qf, node) > thresh:
+                    continue
+                if node.is_leaf:
+                    ids = node.ids
+                    if max_id is not None:
+                        ids = ids[ids < max_id]
+                    if ids.size:
+                        mlb = self.member_lb(qf, ids)
+                        keep = mlb <= thresh
+                        ids_out.append(ids[keep])
+                        lb_out.append(mlb[keep])
+                else:
+                    for s in sorted(node.children):
+                        stack.append(node.children[s])
         if not ids_out:
             return np.empty(0, np.int64), np.empty(0)
         return (np.concatenate(ids_out).astype(np.int64),

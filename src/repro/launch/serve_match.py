@@ -20,6 +20,12 @@ requests.  The run demonstrates the service contract end to end:
 * ``--explain`` renders the per-dispatch plan trace
   (``repro.obs.render_trace``) for the first request of each tier and
   validates it (device invariants included under ``--verify device``).
+* ``--replicas N`` serves through N engine replicas over the ONE
+  shared store (per-replica dispatch workers, planner-EWMA placement);
+  ``--ingest-while-serving`` runs a writer thread appending rows
+  throughout wave 1 — every request is pinned to its admission-time
+  corpus epoch and the oracle check compares against a store truncated
+  there, so exactness holds mid-ingest.
 
 ``--dryrun`` shrinks everything to a seconds-scale smoke (the CI
 path).
@@ -65,6 +71,11 @@ def main():
     ap.add_argument("--leaf-fill", type=int, default=64)
     ap.add_argument("--explain", action="store_true",
                     help="render + validate one dispatch trace per tier")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas over the shared store")
+    ap.add_argument("--ingest-while-serving", action="store_true",
+                    help="append rows concurrently with wave 1; "
+                         "answers stay exact at their pinned epochs")
     ap.add_argument("--dryrun", action="store_true",
                     help="seconds-scale smoke (the CI path)")
     args = ap.parse_args()
@@ -92,9 +103,12 @@ def main():
     mesh = make_mesh_compat((n_dev,), ("data",))
     n = max((args.n // n_dev) * n_dev, n_dev)
     n_q = args.clients * args.requests
-    X = season_dataset(n + n_q, args.T, args.L, args.strength,
-                       per_series_strength=True, seed=11)
-    Q, D = X[:n_q], X[n_q:]
+    n_ingest = (max(n // 8, n_dev) // n_dev) * n_dev \
+        if args.ingest_while_serving else 0
+    X = season_dataset(n + n_q + n_ingest, args.T, args.L,
+                       args.strength, per_series_strength=True, seed=11)
+    Q, D = X[:n_q], X[n_q:n_q + n]
+    D_ingest = X[n_q + n:]
     tech = make_technique(args.technique, T=args.T, W=48, L=args.L,
                           r2_season=args.strength)
 
@@ -106,10 +120,19 @@ def main():
                                  verify=args.verify, metrics=REGISTRY)
     engine.store.build_index(leaf_fill=args.leaf_fill)
     jax.block_until_ready(engine.rep)
+    # replicas share the ONE store (dataset=None adopts it); each keeps
+    # its own device mirrors, synced independently by store version
+    replicas = [make_engine_service(tech, None, mesh,
+                                    store=engine.store,
+                                    batch_size=args.batch,
+                                    media=args.store,
+                                    verify=args.verify)
+                for _ in range(max(args.replicas, 1) - 1)]
     print(f"[serve] engine + index ready in "
-          f"{time.perf_counter() - t0:.2f}s")
+          f"{time.perf_counter() - t0:.2f}s"
+          + (f" ({args.replicas} replicas)" if replicas else ""))
 
-    session = MatchSession(engine, metrics=REGISTRY,
+    session = MatchSession(engine, replicas=replicas, metrics=REGISTRY,
                            window_s=args.window_ms * 1e-3,
                            max_batch=args.max_batch,
                            max_queue=max(4 * n_q, 256)).start()
@@ -119,7 +142,10 @@ def main():
                       cal.items()))
 
     # -- wave 1: concurrent exact serving + bit-identity oracle ----------
+    # (with --ingest-while-serving a writer appends rows throughout;
+    # requests stay exact at their admission-pinned corpus epochs)
     results = [None] * n_q
+    writer_stop = threading.Event()
 
     def client(cid):
         for j in range(args.requests):
@@ -129,13 +155,28 @@ def main():
             req.wait(120)
             results[i] = req
 
+    def writer():
+        chunk = max(n_dev, len(D_ingest) // 16)
+        for lo in range(0, len(D_ingest), chunk):
+            if writer_stop.is_set():
+                break
+            engine.ingest(D_ingest[lo:lo + chunk])
+            time.sleep(0.001)
+
     t0 = time.perf_counter()
     threads = [threading.Thread(target=client, args=(c,))
                for c in range(args.clients)]
+    wt = None
+    if args.ingest_while_serving:
+        wt = threading.Thread(target=writer)
+        wt.start()
     for t in threads:
         t.start()
     for t in threads:
         t.join()
+    if wt is not None:
+        writer_stop.set()
+        wt.join()
     wall = time.perf_counter() - t0
 
     ok = [r for r in results if r is not None and r.ok]
@@ -152,14 +193,30 @@ def main():
           f"{_percentile(lat, 99) * 1e3:.1f}ms; "
           f"{batched / max(batches, 1):.1f} requests/dispatch; "
           f"tiers {tiers}")
+    if args.ingest_while_serving:
+        epochs = sorted({r.epoch.n_rows for r in ok
+                         if r.epoch is not None})
+        print(f"[serve] ingested to {engine.store.n} rows during "
+              f"wave 1; answers pinned across {len(epochs)} epochs "
+              f"({epochs[0] if epochs else 0}.."
+              f"{epochs[-1] if epochs else 0} rows)")
+    if args.replicas > 1:
+        by_rep = {}
+        for r in ok:
+            by_rep[r.replica] = by_rep.get(r.replica, 0) + 1
+        print(f"[serve] replica placement: {by_rep}")
 
     mism = 0
     for r in ok:
         if r.tier_served == "approx":
             continue
+        # the oracle answers at the request's PINNED epoch — under
+        # --ingest-while-serving the live corpus has moved on, and
+        # bit-identity is defined against the admission frontier
         oracle = engine.topk(
             r.query[None], k=r.k,
-            source="index" if r.tier_served == "index" else None)
+            source="index" if r.tier_served == "index" else None,
+            epoch=r.epoch)
         if not (np.array_equal(r.indices, oracle.indices[0])
                 and np.array_equal(r.distances, oracle.distances[0])):
             mism += 1

@@ -134,6 +134,9 @@ class QueryPlanner:
             # is NOT in TIERS: per-query requests never route to it.
             self._est["selfjoin"] = _TierEstimate(
                 self.modeled_cost(float(self.total)), float(self.total))
+        # per-replica dispatch-wall EWMAs (replicated sessions): the
+        # placement signal behind ``place`` — learned, not configured
+        self._replica_wall: dict = {}
 
     # -- modeled cost ------------------------------------------------------
     def _prior(self, tier: str, approx_collect: int):
@@ -163,6 +166,35 @@ class QueryPlanner:
         candidate counts the cost model learns from)."""
         cands = float(res.raw_accesses.mean()) if q_n else 0.0
         self._est[tier].observe(wall_s, cands, self.alpha)
+
+    def observe_replica(self, replica: int, wall_s: float) -> None:
+        """Fold one dispatch's wall time into the replica's EWMA (the
+        placement signal for replicated sessions)."""
+        rid = int(replica)
+        prev = self._replica_wall.get(rid)
+        if prev is None:
+            self._replica_wall[rid] = float(wall_s)
+        else:
+            self._replica_wall[rid] = \
+                prev + self.alpha * (float(wall_s) - prev)
+
+    def place(self, live, depths) -> int:
+        """Pick a replica for one batch: minimize (queued batches + 1)
+        × the replica's EWMA dispatch wall — i.e. expected time until
+        the batch would finish there.  Replicas never observed use the
+        mean of the observed EWMAs (or the exact-tier estimate when
+        none exist), so a fresh replica is neither shunned nor
+        blindly preferred.  Ties break on the lowest replica id —
+        deterministic placement under equal load."""
+        if not live:
+            raise ValueError("place() needs at least one live replica")
+        known = [w for r, w in self._replica_wall.items() if r in live]
+        default = (sum(known) / len(known)) if known else max(
+            self.estimate("index") if self.has_index else 0.0,
+            self.estimate("linear"))
+        return min(live, key=lambda r: (
+            (depths.get(r, 0) + 1)
+            * self._replica_wall.get(r, default), r))
 
     def seed_from_metrics(self, metrics) -> None:
         """Adopt an obs registry's existing latency history as the
@@ -219,10 +251,43 @@ class QueryPlanner:
         reason = "cost" if self.has_index else "only_tier"
         return PlanDecision(exact, reason, est)
 
-    # -- reporting ---------------------------------------------------------
+    # -- reporting / persistence -------------------------------------------
     def snapshot(self) -> dict:
-        """Plain-JSON view of the rolling estimates (launcher / bench
-        reporting)."""
+        """Plain-JSON view of the rolling tier estimates (launcher /
+        bench reporting, and the persisted half of the planner state —
+        see ``seed_from_snapshot``)."""
         return {tier: {"wall_s": e.wall_s, "cands": e.cands,
                        "n_obs": e.n_obs}
                 for tier, e in self._est.items()}
+
+    def replicas_snapshot(self) -> dict:
+        """Plain-JSON view of the per-replica EWMAs (persisted next to
+        ``snapshot()`` by the session's save path)."""
+        return {str(r): float(w) for r, w in self._replica_wall.items()}
+
+    def seed_from_snapshot(self, snap: dict,
+                           replicas: Optional[dict] = None) -> None:
+        """Adopt a persisted ``snapshot()`` as this planner's starting
+        estimates — a restarted service plans from the traffic the
+        previous process observed instead of the modeled priors.  Only
+        tiers this planner has NOT yet observed are seeded (live
+        observations always beat history); unknown tiers in the
+        snapshot are ignored.  ``replicas`` seeds the per-replica
+        placement EWMAs the same way."""
+        for tier, e in (snap or {}).items():
+            est = self._est.get(tier)
+            if est is None or est.n_obs:
+                continue
+            try:
+                est.wall_s = float(e["wall_s"])
+                est.cands = float(e["cands"])
+                est.n_obs = int(e.get("n_obs", 0))
+            except (KeyError, TypeError, ValueError):
+                continue
+        for r, w in (replicas or {}).items():
+            try:
+                rid = int(r)
+            except (TypeError, ValueError):
+                continue
+            if rid not in self._replica_wall:
+                self._replica_wall[rid] = float(w)

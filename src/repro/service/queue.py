@@ -35,6 +35,24 @@ callback (``repro.service.session.MatchSession``) owns planning,
 engine calls and response fill-in.  Deadline-expiry shedding at
 dispatch time also lives in the session (it holds the clock) through
 :meth:`CoalescingQueue.shed`.
+
+Epoch pinning: when the queue is built with ``epoch_fn`` (the store's
+``current_epoch``), every request is stamped with the corpus epoch
+current AT ADMISSION (``req.epoch``) — the downstream dispatch answers
+as of that frontier, so an answer is consistent with the corpus the
+caller saw when it submitted, regardless of concurrent ingest.
+
+Replicated dispatch: with ``n_replicas > 1`` the coalescer no longer
+dispatches inline; it routes each coalesced batch to one of N replica
+inboxes (placement by the injected ``place(live, depths)`` — the
+planner's EWMA arbiter — falling back to least-depth) and a worker
+thread per replica drains its inbox through ``dispatch(batch,
+replica)``.  A replica dispatch failure REQUEUES the batch's
+unresolved requests on another live replica (``serve.requeued``)
+instead of shedding, as does :meth:`kill` (``serve.replica_killed``);
+only a batch that has failed on every live replica is shed with
+``engine_error``.  With ``n_replicas == 1`` the dispatch path is
+byte-identical to the unreplicated queue.
 """
 
 from __future__ import annotations
@@ -80,6 +98,11 @@ class MatchRequest:
     t_submit: float = 0.0
     t_deadline: Optional[float] = None
     t_done: float = 0.0
+    epoch: Optional[object] = None      # corpus frontier pinned at
+    #   admission (``repro.store.CorpusEpoch``); the answer is exact as
+    #   of this frontier regardless of concurrent ingest
+    replica: Optional[int] = None       # replica that served it
+    requeues: int = 0                   # replica-failover reroutes
 
     indices: Optional[np.ndarray] = None    # (k,) best ids
     distances: Optional[np.ndarray] = None  # (k,) true d_ED
@@ -131,15 +154,30 @@ class CoalescingQueue:
                 ``queue_full``.
     metrics:    optional ``repro.obs.MetricsRegistry`` (``serve.*``).
     clock:      injectable monotonic clock (tests).
+    n_replicas: engine replicas behind ``dispatch``.  1 (default):
+                inline dispatch on the coalescer thread,
+                ``dispatch(batch)``.  > 1: per-replica inboxes + worker
+                threads, ``dispatch(batch, replica)``; failures requeue
+                on surviving replicas (see module docstring).
+    place:      optional ``place(live, depths) -> replica`` arbiter
+                (the planner's EWMA placement); default least-depth.
+    epoch_fn:   optional zero-arg frontier supplier (the store's
+                ``current_epoch``); stamped onto ``req.epoch`` at
+                admission.
     """
 
     def __init__(self, dispatch: Callable, *,
                  validate: Optional[Callable] = None,
                  window_s: float = 0.002, max_batch: int = 64,
                  max_queue: int = 256, metrics=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 n_replicas: int = 1,
+                 place: Optional[Callable] = None,
+                 epoch_fn: Optional[Callable] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
         self._dispatch = dispatch
         self._validate = validate
         self.window_s = float(window_s)
@@ -151,6 +189,18 @@ class CoalescingQueue:
         self._cond = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
+        self.n_replicas = int(n_replicas)
+        self._place = place
+        self._epoch_fn = epoch_fn
+        # replicated-dispatch state (used only when n_replicas > 1):
+        # per-replica batch inboxes + busy flags under one condition,
+        # the dead set, and one worker thread per replica
+        self._rcond = threading.Condition()
+        self._inbox = {r: [] for r in range(self.n_replicas)}
+        self._busy = {r: False for r in range(self.n_replicas)}
+        self._dead: set = set()
+        self._workers: List[threading.Thread] = []
+        self._wstop = False
 
     # -- admission ---------------------------------------------------------
     def shed(self, req: MatchRequest, reason: str, msg: str) -> None:
@@ -191,6 +241,11 @@ class CoalescingQueue:
             req.t_submit = now
             if req.deadline_s is not None:
                 req.t_deadline = now + req.deadline_s
+            if req.epoch is None and self._epoch_fn is not None:
+                # pin the corpus frontier AT ADMISSION: the answer is
+                # exact as of what the caller could observe now, not as
+                # of whenever dispatch happens to run
+                req.epoch = self._epoch_fn()
             self._q.append(req)
             self._cond.notify_all()
         if self.metrics is not None:
@@ -206,6 +261,14 @@ class CoalescingQueue:
         if self._thread is not None:
             return self
         self._stop = False
+        if self.n_replicas > 1 and not self._workers:
+            self._wstop = False
+            for r in range(self.n_replicas):
+                t = threading.Thread(target=self._worker, args=(r,),
+                                     name=f"match-replica-{r}",
+                                     daemon=True)
+                t.start()
+                self._workers.append(t)
         self._thread = threading.Thread(target=self._loop,
                                         name="match-dispatch", daemon=True)
         self._thread.start()
@@ -213,8 +276,10 @@ class CoalescingQueue:
 
     def close(self, *, drain: bool = True) -> None:
         """Stop the dispatcher.  ``drain=True`` serves everything still
-        queued (one final coalesced dispatch per ``max_batch``);
-        ``drain=False`` sheds the backlog with ``shutdown``."""
+        queued (one final coalesced dispatch per ``max_batch``, routed
+        through the replicas when replicated); ``drain=False`` sheds
+        the backlog (and any replica-inbox pending) with
+        ``shutdown``."""
         with self._cond:
             self._stop = True
             self._cond.notify_all()
@@ -228,11 +293,34 @@ class CoalescingQueue:
             if not batch:
                 break
             if drain:
-                self._run_batch(batch)
+                if self.n_replicas > 1:
+                    self._route_batch(batch)
+                else:
+                    self._run_batch(batch)
             else:
                 for r in batch:
                     self.shed(r, SHED_SHUTDOWN,
                               "service shut down before dispatch")
+        if self.n_replicas > 1:
+            with self._rcond:
+                if not drain:
+                    for inbox in self._inbox.values():
+                        for batch, _ in inbox:
+                            for r in batch:
+                                self.shed(r, SHED_SHUTDOWN,
+                                          "service shut down before "
+                                          "dispatch")
+                        inbox.clear()
+                else:       # wait for the workers to drain their inboxes
+                    while any(self._inbox[r] or self._busy[r]
+                              for r in self._inbox
+                              if r not in self._dead):
+                        self._rcond.wait()
+                self._wstop = True
+                self._rcond.notify_all()
+            for t in self._workers:
+                t.join()
+            self._workers = []
 
     def _loop(self) -> None:
         while True:
@@ -252,9 +340,14 @@ class CoalescingQueue:
                 batch = self._q[:self.max_batch]
                 del self._q[:self.max_batch]
             if batch:
-                self._run_batch(batch)
+                if self.n_replicas > 1:
+                    self._route_batch(batch)
+                else:
+                    self._run_batch(batch)
 
     def _run_batch(self, batch: List[MatchRequest]) -> None:
+        """Unreplicated dispatch (n_replicas == 1): inline on the
+        coalescer thread — byte-identical to the pre-replica queue."""
         if self.metrics is not None:
             self.metrics.counter("serve.batches").inc()
             self.metrics.counter("serve.batched_requests").inc(len(batch))
@@ -269,3 +362,113 @@ class CoalescingQueue:
             if not r.done.is_set():      # leave a caller blocked forever
                 self.shed(r, SHED_ENGINE_ERROR,
                           "dispatch returned without resolving request")
+
+    # -- replicated dispatch ----------------------------------------------
+    def _route_batch(self, batch: List[MatchRequest],
+                     attempts: int = 0, exclude: Optional[int] = None
+                     ) -> None:
+        """Place one coalesced batch on a live replica's inbox.
+        ``attempts`` counts replicas that already failed this batch;
+        ``exclude`` avoids re-placing on the replica that just failed
+        (it stays eligible for FUTURE batches — one poisoned batch must
+        not mark every replica it visits dead)."""
+        with self._rcond:
+            live = [r for r in range(self.n_replicas)
+                    if r not in self._dead and r != exclude]
+            if not live:
+                live = [r for r in range(self.n_replicas)
+                        if r not in self._dead]
+            if not live:
+                for r in batch:
+                    if not r.done.is_set():
+                        self.shed(r, SHED_ENGINE_ERROR,
+                                  "no live replicas")
+                return
+            depths = {r: len(self._inbox[r]) + int(self._busy[r])
+                      for r in live}
+            if self._place is not None:
+                rid = int(self._place(live, depths))
+                if rid not in depths:
+                    rid = min(live, key=lambda r: (depths[r], r))
+            else:
+                rid = min(live, key=lambda r: (depths[r], r))
+            self._inbox[rid].append((batch, attempts))
+            self._rcond.notify_all()
+
+    def _worker(self, rid: int) -> None:
+        while True:
+            with self._rcond:
+                while not self._inbox[rid] and not self._wstop \
+                        and rid not in self._dead:
+                    self._rcond.wait()
+                if self._wstop or rid in self._dead:
+                    return       # kill() / close() reroute or shed pending
+                batch, attempts = self._inbox[rid].pop(0)
+                self._busy[rid] = True
+            try:
+                self._run_replica_batch(batch, rid, attempts)
+            finally:
+                with self._rcond:
+                    self._busy[rid] = False
+                    self._rcond.notify_all()
+
+    def _run_replica_batch(self, batch: List[MatchRequest], rid: int,
+                           attempts: int) -> None:
+        if self.metrics is not None:
+            self.metrics.counter("serve.batches").inc()
+            self.metrics.counter("serve.batched_requests").inc(len(batch))
+        try:
+            self._dispatch(batch, rid)
+        except Exception as e:  # noqa: BLE001 — requeue, then shed
+            pending = [r for r in batch if not r.done.is_set()]
+            if pending and attempts + 1 < self.n_replicas and any(
+                    r != rid and r not in self._dead
+                    for r in range(self.n_replicas)):
+                # replica failure: the batch survives — requeue the
+                # unresolved requests on another live replica
+                for r in pending:
+                    r.requeues += 1
+                if self.metrics is not None:
+                    self.metrics.counter("serve.requeued").inc(
+                        len(pending))
+                self._route_batch(pending, attempts + 1, exclude=rid)
+                return
+            for r in pending:
+                self.shed(r, SHED_ENGINE_ERROR,
+                          f"{type(e).__name__}: {e}")
+        for r in batch:          # belt-and-braces: a dispatch must never
+            if not r.done.is_set():      # leave a caller blocked forever
+                self.shed(r, SHED_ENGINE_ERROR,
+                          "dispatch returned without resolving request")
+
+    def kill(self, rid: int) -> int:
+        """Simulate/handle replica death: mark ``rid`` dead (no future
+        placements; its worker exits) and REQUEUE its pending inbox
+        batches on the surviving replicas — death sheds nothing.
+        Returns the number of requests rerouted."""
+        if not 0 <= rid < self.n_replicas:
+            raise ValueError(f"no replica {rid}")
+        with self._rcond:
+            self._dead.add(rid)
+            pending = list(self._inbox[rid])
+            self._inbox[rid].clear()
+            self._rcond.notify_all()
+        if self.metrics is not None:
+            self.metrics.counter("serve.replica_killed").inc()
+        moved = 0
+        for batch, attempts in pending:
+            alive = [r for r in batch if not r.done.is_set()]
+            if not alive:
+                continue
+            for r in alive:
+                r.requeues += 1
+            moved += len(alive)
+            self._route_batch(alive, attempts)
+        if moved and self.metrics is not None:
+            self.metrics.counter("serve.requeued").inc(moved)
+        return moved
+
+    def live_replicas(self) -> List[int]:
+        with self._rcond:
+            return [r for r in range(self.n_replicas)
+                    if r not in self._dead]

@@ -24,10 +24,27 @@ Store I/O accounting is session-scoped: construction calls
 ``store.reset_counters()`` so a session's ``io`` numbers never bleed
 in from whatever ran before it (and resetting never perturbs results
 — covered by the metrics-concurrency tests).
+
+Epoch-pinned serving: when the engine's store publishes corpus epochs
+(``current_epoch`` — ``repro.store.SymbolicStore`` and
+``subseq.WindowView`` both do), every request is pinned to the epoch
+current at ADMISSION and the dispatch answers as of that frontier
+(``engine.topk(..., epoch=req.epoch)``) — bit-identical to a store
+frozen at the pin, no matter how much is ingested between admission
+and dispatch.  ``req.epoch`` reports the pin back to the caller.
+
+Replicated dispatch: ``replicas=[engine2, ...]`` adds engines sharing
+the primary's store behind the queue's per-replica workers; the
+planner's per-replica EWMAs arbitrate placement and a replica failure
+requeues (never sheds) — see ``service.queue``.  ``state_dir=``
+persists the planner's learned estimates across restarts
+(``save_state`` / seeded on construction).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from typing import List, Optional, Sequence
@@ -37,6 +54,9 @@ import numpy as np
 from repro.service.planner import TIERS, QueryPlanner
 from repro.service.queue import (SHED_DEADLINE, CoalescingQueue,
                                  MatchRequest)
+
+#: File name of the persisted planner state inside ``state_dir``.
+PLANNER_STATE = "planner.json"
 
 
 class MatchSession:
@@ -55,6 +75,13 @@ class MatchSession:
     approx_collect: bounded-collect size for the approx tier (default
                  ``max(4k, 32)`` per request, the engine's own default).
     safety:      planner deadline-downgrade margin.
+    replicas:    additional engines over the SAME store (same object —
+                 validated) served behind per-replica dispatch workers;
+                 the primary stays replica 0 and the oracle for
+                 ``topk``/exactness tests.
+    state_dir:   directory for persisted planner state; when it holds
+                 a ``planner.json`` from a previous ``save_state`` the
+                 planner starts from those learned estimates.
     """
 
     def __init__(self, engine, *, selfjoin=None, metrics=None,
@@ -62,9 +89,20 @@ class MatchSession:
                  window_s: float = 0.002, max_batch: int = 64,
                  max_queue: int = 256,
                  approx_collect: Optional[int] = None,
-                 safety: float = 2.0):
+                 safety: float = 2.0,
+                 replicas: Optional[Sequence] = None,
+                 state_dir: Optional[str] = None):
         self.engine = engine
+        self.engines = [engine] + list(replicas or [])
         self._subseq = hasattr(engine, "view")
+        for i, eng in enumerate(self.engines[1:], start=1):
+            shared = (getattr(eng, "view", None) is engine.view
+                      if self._subseq
+                      else getattr(eng, "store", None) is engine.store)
+            if not shared:
+                raise ValueError(
+                    f"replica {i} does not share the primary engine's "
+                    "store — replicas answer over ONE corpus")
         # optional repro.profile.SelfJoinEngine: enables the corpus-
         # level "selfjoin" tier (kind="motifs"/"discords" requests)
         self._selfjoin = selfjoin
@@ -99,14 +137,24 @@ class MatchSession:
             approx_collect=approx_collect or 32)
         if planner is None:
             self.planner.seed_from_metrics(self.metrics)
+        self.state_dir = state_dir
+        if state_dir is not None:
+            self._load_state(state_dir)
         # session-scoped I/O accounting (never perturbs results)
         if hasattr(self._store, "reset_counters"):
             self._store.reset_counters()
         self._plan_lock = threading.Lock()
+        # epoch pinning: stamped at admission when the store publishes
+        # a frontier (SymbolicStore / WindowView); legacy stores serve
+        # unpinned, exactly as before
+        epoch_fn = getattr(self._store, "current_epoch", None)
+        n_rep = len(self.engines)
         self.queue = CoalescingQueue(
             self._dispatch, validate=self._validate, window_s=window_s,
             max_batch=max_batch, max_queue=max_queue,
-            metrics=self.metrics)
+            metrics=self.metrics, n_replicas=n_rep,
+            place=self._place if n_rep > 1 else None,
+            epoch_fn=epoch_fn)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "MatchSession":
@@ -115,6 +163,49 @@ class MatchSession:
 
     def close(self, *, drain: bool = True) -> None:
         self.queue.close(drain=drain)
+        if self.state_dir is not None:
+            self.save_state()
+
+    def kill_replica(self, replica: int) -> int:
+        """Take one replica out of service (failure injection / drain):
+        pending batches on it are REQUEUED on the survivors, never
+        shed.  Returns the number of rerouted requests."""
+        return self.queue.kill(replica)
+
+    # -- planner persistence -----------------------------------------------
+    def save_state(self, directory: Optional[str] = None) -> str:
+        """Persist the planner's learned estimates (tier EWMAs + per-
+        replica placement EWMAs) as ``planner.json`` under
+        ``directory`` (default: the session's ``state_dir``).  A later
+        session built with ``state_dir=`` starts from them instead of
+        the modeled priors.  Atomic: written to a temp file, then
+        renamed."""
+        d = directory or self.state_dir
+        if d is None:
+            raise ValueError("no directory given and the session has "
+                             "no state_dir")
+        os.makedirs(d, exist_ok=True)
+        with self._plan_lock:
+            state = {"planner": self.planner.snapshot(),
+                     "replicas": self.planner.replicas_snapshot()}
+        path = os.path.join(d, PLANNER_STATE)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(state, f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+    def _load_state(self, directory: str) -> None:
+        path = os.path.join(directory, PLANNER_STATE)
+        if not os.path.exists(path):
+            return
+        try:
+            with open(path) as f:
+                state = json.load(f)
+        except (OSError, ValueError):
+            return                      # unreadable state: start fresh
+        self.planner.seed_from_snapshot(state.get("planner") or {},
+                                        state.get("replicas") or {})
 
     def __enter__(self) -> "MatchSession":
         return self.start()
@@ -213,11 +304,25 @@ class MatchSession:
                 return f"tier {req.tier!r} is not servable here"
         return None
 
+    # -- placement ---------------------------------------------------------
+    def _place(self, live, depths) -> int:
+        """Queue placement hook (replicated sessions): the planner's
+        EWMA arbiter under the plan lock."""
+        with self._plan_lock:
+            return self.planner.place(live, depths)
+
     # -- dispatch ----------------------------------------------------------
-    def _dispatch(self, batch: List[MatchRequest]) -> None:
+    def _dispatch(self, batch: List[MatchRequest],
+                  replica: int = 0) -> None:
         """One coalesced engine round: shed the already-expired, route
-        the rest, run one engine call per (tier, k) group, scatter the
-        per-request slices back.  Runs on the dispatcher thread."""
+        the rest, run one engine call per (tier, k, epoch) group,
+        scatter the per-request slices back.  Runs on the dispatcher
+        thread (or a replica worker when replicated — ``replica`` says
+        which engine serves this batch).
+
+        Requests carrying different pinned epochs never share an
+        engine call: the group key includes the epoch's visible row
+        count, so each call answers exactly as of its own frontier."""
         now = time.monotonic()
         groups: dict = {}
         selfjoin: List[MatchRequest] = []
@@ -244,11 +349,14 @@ class MatchSession:
             req.plan = plan
             if plan.downgraded and self.metrics is not None:
                 self.metrics.counter("serve.downgraded").inc()
-            groups.setdefault((plan.tier, req.k), []).append(req)
-        for (tier, k), reqs in groups.items():
-            self._run_group(tier, k, reqs)
+            ep_key = (None if req.epoch is None
+                      else int(getattr(req.epoch, "n_rows", req.epoch)))
+            groups.setdefault((plan.tier, req.k, ep_key),
+                              []).append(req)
+        for (tier, k, _), reqs in groups.items():
+            self._run_group(tier, k, reqs, replica=replica)
         if selfjoin:
-            self._run_selfjoin(selfjoin)
+            self._run_selfjoin(selfjoin, replica=replica)
 
     @staticmethod
     def _bucket(qs: np.ndarray) -> np.ndarray:
@@ -268,7 +376,24 @@ class MatchSession:
             [qs, np.repeat(qs[-1:], pow2 - q_n, axis=0)])
 
     def _run_group(self, tier: str, k: int,
-                   reqs: Sequence[MatchRequest]) -> None:
+                   reqs: Sequence[MatchRequest], *,
+                   replica: int = 0) -> None:
+        # re-check deadlines PER DISPATCH, immediately before the
+        # engine call: earlier groups of the same coalesced batch take
+        # real wall time, so a deadline alive at routing can be dead by
+        # now — serving it anyway would bill an expired request as met
+        now = time.monotonic()
+        live = []
+        for req in reqs:
+            if req.t_deadline is not None and now >= req.t_deadline:
+                self.queue.shed(req, SHED_DEADLINE,
+                                "deadline expired before dispatch")
+            else:
+                live.append(req)
+        reqs = live
+        if not reqs:
+            return
+        epoch = reqs[0].epoch           # group key pins one frontier
         qs = self._bucket(np.stack([r.query for r in reqs])
                           .astype(np.float32))
         trace = None
@@ -276,10 +401,13 @@ class MatchSession:
             from repro.obs import Trace
             trace = Trace("serve.dispatch")
         t0 = time.perf_counter()
-        res = self._run_tier(qs, k, tier, trace)
+        res = self._run_tier(qs, k, tier, trace, epoch=epoch,
+                             replica=replica)
         wall = time.perf_counter() - t0
         with self._plan_lock:
             self.planner.observe(tier, qs.shape[0], wall, res)
+            if len(self.engines) > 1:
+                self.planner.observe_replica(replica, wall)
         ids = getattr(res, "window_ids", None)
         if ids is None:
             ids = res.indices
@@ -296,6 +424,7 @@ class MatchSession:
             if error_bar is not None:
                 req.error_bar = float(np.atleast_1d(error_bar)[i])
             req.tier_served = tier
+            req.replica = replica
             req.trace = trace
             req.t_done = time.monotonic()
             if self.metrics is not None:
@@ -304,18 +433,27 @@ class MatchSession:
                 self.metrics.counter(f"serve.tier.{tier}").inc()
             req.done.set()
 
-    def _run_selfjoin(self, reqs: Sequence[MatchRequest]) -> None:
+    def _run_selfjoin(self, reqs: Sequence[MatchRequest],
+                      replica: int = 0) -> None:
         """One self-join dispatch: compute (or reuse) the engine's
         cached matrix profile, then answer every request from it —
         motifs and discords are pure functions of the profile
         (``repro.profile``), so every coalesced request sees the same
-        exact profile."""
+        exact profile.
+
+        Self-join requests are the one kind NOT answered at the
+        admission epoch: the profile is a whole-corpus artifact and its
+        cache keys on the live corpus, so the answer is as of the
+        DISPATCH-time frontier — ``req.epoch`` is re-pinned here to
+        report the frontier actually answered."""
         from repro.profile import topk_discords, topk_motifs
         eng = self._selfjoin
+        ep_fn = getattr(self._store, "current_epoch", None)
         trace = None
         if any(r.explain for r in reqs):
             from repro.obs import Trace
             trace = Trace("serve.selfjoin")
+        dispatch_epoch = ep_fn() if ep_fn is not None else None
         t0 = time.perf_counter()
         prof = eng.profile(trace=trace)
         wall = time.perf_counter() - t0
@@ -327,6 +465,8 @@ class MatchSession:
             else:
                 req.result = topk_discords(prof, eng.view.locate, req.k)
             req.tier_served = "selfjoin"
+            req.replica = replica
+            req.epoch = dispatch_epoch
             req.trace = trace
             req.t_done = time.monotonic()
             if self.metrics is not None:
@@ -335,31 +475,36 @@ class MatchSession:
                 self.metrics.counter("serve.tier.selfjoin").inc()
             req.done.set()
 
-    def _run_tier(self, qs: np.ndarray, k: int, tier: str, trace):
-        """One engine call for one (tier, k) group.  Exact tiers call
-        ``engine.topk`` with exactly the source a direct caller would
-        pass — the bit-identity contract depends on adding nothing
-        else."""
+    def _run_tier(self, qs: np.ndarray, k: int, tier: str, trace, *,
+                  epoch=None, replica: int = 0):
+        """One engine call for one (tier, k, epoch) group on one
+        replica.  Exact tiers call ``engine.topk`` with exactly the
+        source (and epoch) a direct caller would pass — the
+        bit-identity contract depends on adding nothing else."""
         collect = (self._approx_collect
                    if self._approx_collect is not None else None)
+        eng = self.engines[replica]
         if self._subseq:
             if tier == "approx":
-                return self.engine.topk_approx(qs, k=k, collect=collect,
-                                               trace=trace)
-            return self.engine.topk(qs, k=k,
-                                    use_index=(tier == "index"),
-                                    trace=trace)
+                return eng.topk_approx(qs, k=k, collect=collect,
+                                       trace=trace, epoch=epoch)
+            return eng.topk(qs, k=k,
+                            use_index=(tier == "index"),
+                            trace=trace, epoch=epoch)
         if tier == "approx":
-            return self.engine.topk_approx(qs, k=k, collect=collect,
-                                           trace=trace)
-        return self.engine.topk(qs, k=k,
-                                source="index" if tier == "index"
-                                else None, trace=trace)
+            return eng.topk_approx(qs, k=k, collect=collect,
+                                   trace=trace, epoch=epoch)
+        return eng.topk(qs, k=k,
+                        source="index" if tier == "index"
+                        else None, trace=trace, epoch=epoch)
 
     # -- reporting ---------------------------------------------------------
     def snapshot(self) -> dict:
         """Service-level JSON view: planner estimates + queue depth."""
         return {"planner": self.planner.snapshot(),
+                "replica_wall_s": self.planner.replicas_snapshot(),
+                "n_replicas": len(self.engines),
+                "live_replicas": self.queue.live_replicas(),
                 "queue_depth": self.queue.depth(),
                 "window_s": self.queue.window_s,
                 "max_batch": self.queue.max_batch}

@@ -2,6 +2,7 @@
 with incremental encoding and atomic on-disk snapshots (ISSUE 2 /
 ROADMAP "Streaming ingestion" + "Index persistence")."""
 
-from repro.store.symbolic import MEDIA, SymbolicStore, rep_leaves  # noqa: F401
+from repro.store.symbolic import (  # noqa: F401
+    MEDIA, CorpusEpoch, SymbolicStore, epoch_rows, rep_leaves)
 from repro.store.snapshot import (  # noqa: F401
     latest_snap, open_store, save_store)

@@ -33,6 +33,8 @@ them consistent under streaming ingestion:
 
 from __future__ import annotations
 
+from collections import deque
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -41,10 +43,58 @@ from repro.core.matching import MEDIA, RawStore
 
 _MIN_CAPACITY = 1024
 
+#: bounded observability window of recently published epochs — the
+#: frontier itself is fully determined by ``n_rows`` (append-only
+#: prefix stability), so the ledger is a debugging aid, not a lookup
+#: table the read path depends on
+_LEDGER_LEN = 1024
+
 
 def rep_leaves(rep):
     """Normalize an encoder representation (array or tuple) to a tuple."""
     return rep if isinstance(rep, tuple) else (rep,)
+
+
+@dataclass(frozen=True)
+class CorpusEpoch:
+    """One immutable published corpus frontier.
+
+    Every mutation (``SymbolicStore.append`` — and therefore
+    ``make_engine_service.ingest`` and ``WindowView.sync``, which route
+    through it) publishes a new epoch as its LAST step, with a single
+    attribute assignment: readers racing an append see either the old
+    or the new epoch, never a torn one.  Because the store, the split
+    tree and the device mirrors are all strictly append-only (prefixes
+    are never rewritten), the frontier is cheap — ``n_rows`` alone
+    pins everything a reader needs:
+
+    * store arrays: rows ``[0, n_rows)`` are complete and immutable
+      (``rep_view(epoch=)`` is a prefix slice, no copy-on-write);
+    * split tree: item ids are assigned monotonically, so an as-of
+      read is the row-count filter ``id < n_rows`` during traversal
+      (``SplitTree.seed_candidates`` / ``collect_bounds``);
+    * round-robin mirrors: the shard head/tail split at this frontier
+      is ``head = (n_rows // n_shards) * n_shards`` — derived per
+      sweep, with ids ``>= n_rows`` masked to +inf on device.
+
+    ``epoch`` is the store version at publication (monotone counter);
+    ``index_n`` records how many items the attached index covered when
+    the epoch was published (equal to ``n_rows`` while an incremental
+    index is maintained; 0 without one).
+    """
+
+    epoch: int
+    n_rows: int
+    index_n: int = 0
+
+
+def epoch_rows(epoch) -> Optional[int]:
+    """Resolve an epoch argument (``CorpusEpoch`` | int | None) to the
+    visible row count, or None for "live" — the one coercion every
+    layer that accepts ``epoch=`` shares."""
+    if epoch is None:
+        return None
+    return int(getattr(epoch, "n_rows", epoch))
 
 
 class SymbolicStore:
@@ -93,6 +143,12 @@ class SymbolicStore:
         self._rep_is_tuple = True
         self.version = 0                   # bumped on every append
         self.index = None                  # optional SeriesIndex over rows
+        # the published corpus frontier: swapped atomically (one
+        # attribute assignment) as the LAST step of every mutation, so
+        # a concurrent reader pins either the old or the new epoch,
+        # never a half-applied one
+        self._epoch = CorpusEpoch(epoch=0, n_rows=0, index_n=0)
+        self.epoch_ledger = deque([self._epoch], maxlen=_LEDGER_LEN)
         # the verification protocol (fetch accounting + I/O model) is the
         # one RawStore implements — delegated, not duplicated; its .data
         # is re-pointed at the live prefix after every append
@@ -193,7 +249,25 @@ class SymbolicStore:
                 self.index = None
             else:
                 self.index.insert_rows(rows)   # same path as bulk build
+        self._publish_epoch()
         return ids
+
+    def _publish_epoch(self) -> "CorpusEpoch":
+        """Publish the current frontier as a new epoch — the last step
+        of every mutation, after rows, representation AND index are all
+        fully applied, so the new epoch is never observable early."""
+        ep = CorpusEpoch(
+            epoch=self.version, n_rows=self._n,
+            index_n=int(self.index.n) if self.index is not None else 0)
+        self.epoch_ledger.append(ep)
+        self._epoch = ep                     # atomic publish
+        return ep
+
+    def current_epoch(self) -> "CorpusEpoch":
+        """The latest published frontier.  A query pinned to this epoch
+        answers bit-identically to a frozen copy of the store truncated
+        to ``epoch.n_rows``, regardless of concurrent appends."""
+        return self._epoch
 
     # -- views ------------------------------------------------------------
     @property
@@ -208,11 +282,20 @@ class SymbolicStore:
         """(N, T) raw rows — zero-copy view of the live prefix."""
         return self._io.data
 
-    def rep_view(self):
-        """Live representation, in the encoder's structure (zero-copy)."""
+    def rep_view(self, epoch=None):
+        """Representation in the encoder's structure (zero-copy).
+
+        ``epoch`` (a ``CorpusEpoch`` or a plain row count) bounds the
+        view to the rows visible at that frontier — because the store
+        is append-only, the as-of view is a prefix slice of the live
+        leaves, content-identical to a frozen copy at publish time."""
         if self._rep is None:
             self._grow(0)
-        leaves = tuple(l[:self._n] for l in self._rep)
+        n = self._n
+        n_e = epoch_rows(epoch)
+        if n_e is not None:
+            n = min(n, n_e)
+        leaves = tuple(l[:n] for l in self._rep)
         return leaves if self._rep_is_tuple else leaves[0]
 
     # -- RawStore verification protocol (delegated) ------------------------
@@ -267,6 +350,7 @@ class SymbolicStore:
         self.index = SeriesIndex.from_store(self, leaf_fill=leaf_fill,
                                             max_bits=max_bits,
                                             mesh=mesh, n_shards=n_shards)
+        self._publish_epoch()        # the index split-state token changed
         return self.index
 
     # -- persistence -------------------------------------------------------

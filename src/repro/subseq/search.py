@@ -197,7 +197,7 @@ class SubseqEngine:
     def topk(self, queries_raw, k: int = 1, *, exclusion: int = 0,
              batch_size: Optional[int] = None,
              use_index: object = "auto", trace=None,
-             explain: bool = False) -> SubseqResult:
+             explain: bool = False, epoch=None) -> SubseqResult:
         """Top-k windows for a (Q, m) query batch (or a single (m,)
         query), exact under z-normalized d_ED.
 
@@ -214,6 +214,12 @@ class SubseqEngine:
         (``explain=True`` creates one and attaches it as ``res.trace``);
         bit-identical results and accounting either way (observability
         neutrality, property-tested).
+
+        epoch: a ``view.current_epoch()`` frontier (or plain window
+        count) pinning the answer to windows visible at that frontier —
+        bit-identical to a view truncated there, regardless of windows
+        synced concurrently (the snapshot-consistency contract of
+        ingest-while-serving).
         """
         import time as _time
         if explain and trace is None:
@@ -227,7 +233,7 @@ class SubseqEngine:
         h2d0 = (self._sweep.h2d_bytes
                 if observing and self._sweep is not None else 0)
         res = self._topk(queries_raw, k, exclusion, batch_size, use_index,
-                         trace)
+                         trace, epoch)
         if observing:
             self._observe(trace, res, k, _time.perf_counter() - t0,
                           self.view.accesses - rows0, hob0, h2d0)
@@ -283,27 +289,36 @@ class SubseqEngine:
 
     def _topk(self, queries_raw, k: int, exclusion: int,
               batch_size: Optional[int], use_index: object,
-              trace) -> SubseqResult:
+              trace, epoch=None) -> SubseqResult:
         from repro.obs.trace import maybe_span
+        from repro.store.symbolic import epoch_rows
         zq = self.normalize_queries(queries_raw)
         bs = batch_size or self.batch_size
+        n_e = epoch_rows(epoch)
         idx = self.view.index if use_index in ("auto", True) else None
         if use_index is True and idx is None:
             raise ValueError("use_index=True but the view has no index; "
                              "call view.build_index() first")
         if trace is not None:
             trace.set("source", "index" if idx is not None else "linear")
+            if n_e is not None:
+                trace.meta["epoch_rows"] = int(n_e)
         acc = {"rows": 0, "fetches": 0, "io": 0.0}
         dfn = self._sweep.make_dist_fn(zq) if self._device else None
         if idx is not None:
             return self._topk_indexed(zq, idx, k, exclusion, bs, acc, dfn,
-                                      trace)
+                                      trace, epoch=n_e)
         if exclusion <= 0 and self._sweep is not None:
             # device-ordered candidate stream: the (Q, n_windows) bound
             # matrix never materializes on host — the suppression loop
             # below masks host columns, so it keeps the matrix path
             with maybe_span(trace, "order") as sp:
-                stream = self._sweep.candidate_stream(zq)
+                mask_fn = None
+                if n_e is not None:
+                    # windows past the pinned frontier -> +inf on device
+                    def mask_fn(ids, _n=n_e):
+                        return ids >= _n
+                stream = self._sweep.candidate_stream(zq, mask_fn=mask_fn)
                 if trace is not None:
                     from repro.obs.trace import block_until_ready
                     block_until_ready((stream._b, stream._i))
@@ -312,10 +327,13 @@ class SubseqEngine:
                 res = topk_verify(zq, None, self.view, k=k, batch_size=bs,
                                   verifier=self.verifier, merge=self.merge,
                                   dist_fn=dfn, stream=stream, trace=trace)
-            return self._wrap(res.indices, res.distances, res,
-                              int(stream.width), acc)
+            total = (int(stream.width) if n_e is None
+                     else min(int(stream.width), n_e))
+            return self._wrap(res.indices, res.distances, res, total, acc)
         with maybe_span(trace, "order"):
             rd = self.repr_distances(zq)
+            if n_e is not None:
+                rd = rd[:, :n_e]   # prefix-stable: as-of read is a slice
         nw = rd.shape[1]
         if exclusion <= 0:
             with maybe_span(trace, "verify"):
@@ -360,7 +378,8 @@ class SubseqEngine:
     def topk_approx(self, queries_raw, k: int = 1, *,
                     collect: Optional[int] = None,
                     batch_size: Optional[int] = None,
-                    trace=None, explain: bool = False) -> SubseqResult:
+                    trace=None, explain: bool = False,
+                    epoch=None) -> SubseqResult:
         """Anytime/approximate window top-k through the index's bounded
         collect (requires ``view.build_index()``): exact seed walk, at
         most ``collect`` (default ``max(4 * k, 32)``) collected
@@ -369,13 +388,20 @@ class SubseqEngine:
         ``MatchEngine.topk_approx``; an error bar of zero proves the
         answer exact despite the cap."""
         import time as _time
+        from repro.store.symbolic import epoch_rows
         idx = self.view.index
         if idx is None:
             raise ValueError("topk_approx needs the window index; call "
                              "view.build_index() first")
-        if idx.n != self.view.n:
-            raise ValueError(f"window index covers {idx.n} of "
-                             f"{self.view.n} windows; call view.sync()")
+        n_e = epoch_rows(epoch)
+        if n_e is None:
+            if idx.n != self.view.n:
+                raise ValueError(f"window index covers {idx.n} of "
+                                 f"{self.view.n} windows; call "
+                                 f"view.sync()")
+        elif idx.n < n_e:
+            raise ValueError(f"window index covers {idx.n} windows, "
+                             f"epoch pins {n_e}; call view.sync()")
         if explain and trace is None:
             from repro.obs import Trace
             trace = Trace("subseq.topk")
@@ -394,10 +420,11 @@ class SubseqEngine:
         res = idx.topk(zq, self.view, k=k,
                        batch_size=batch_size or self.batch_size,
                        verifier=self.verifier, merge=self.merge,
-                       dist_fn=dfn, trace=trace,
+                       dist_fn=dfn, trace=trace, epoch=n_e,
                        approx_collect=(collect if collect is not None
                                        else max(4 * k, 32)))
-        out = self._wrap(res.indices, res.distances, res, self.view.n,
+        total = self.view.n if n_e is None else min(self.view.n, n_e)
+        out = self._wrap(res.indices, res.distances, res, total,
                          {"rows": 0, "fetches": 0, "io": 0.0})
         out.kth_lb = res.kth_lb
         out.error_bar = res.error_bar
@@ -409,7 +436,8 @@ class SubseqEngine:
         return out
 
     def _topk_indexed(self, zq, idx, k: int, exclusion: int, bs: int,
-                      acc: dict, dfn, trace=None) -> SubseqResult:
+                      acc: dict, dfn, trace=None,
+                      epoch=None) -> SubseqResult:
         """Indexed candidate generation: route the tree's compact
         candidate set through the same verification scan
         (``repro.index.candidates.topk_from_source``) — bit-identical to
@@ -417,13 +445,25 @@ class SubseqEngine:
         handing ``TreeCandidates`` the accumulated verified frontier and
         seen-id set — each round only verifies never-seen windows (same
         contract as the linear path; each round remains an exact
-        top-k_fetch, so greedy selection stays exact)."""
-        if idx.n != self.view.n:
-            raise ValueError(f"window index covers {idx.n} of "
-                             f"{self.view.n} windows; call view.sync()")
-        nw_total = self.view.n
+        top-k_fetch, so greedy selection stays exact).
+
+        ``epoch`` (visible window count) relaxes the cover check: the
+        index only needs to reach the PINNED frontier, not the live view
+        — concurrent syncs past the pin are filtered by the as-of
+        traversal, not a staleness error."""
+        if epoch is None:
+            if idx.n != self.view.n:
+                raise ValueError(f"window index covers {idx.n} of "
+                                 f"{self.view.n} windows; call "
+                                 f"view.sync()")
+            nw_total = self.view.n
+        else:
+            if idx.n < epoch:
+                raise ValueError(f"window index covers {idx.n} windows, "
+                                 f"epoch pins {epoch}; call view.sync()")
+            nw_total = int(epoch)
         common = dict(batch_size=bs, verifier=self.verifier,
-                      merge=self.merge, dist_fn=dfn)
+                      merge=self.merge, dist_fn=dfn, epoch=epoch)
         if exclusion <= 0:
             res = idx.topk(zq, self.view, k=k, trace=trace, **common)
             return self._wrap(res.indices, res.distances, res, nw_total,

@@ -139,6 +139,20 @@ class WindowView:
     def version(self) -> int:
         return self._rep.version
 
+    def current_epoch(self):
+        """Pinnable frontier for subsequence queries (the unit is WINDOW
+        ids, not source rows).  Mid-``sync`` a chunk's representation
+        append publishes before its index insert, so when an index
+        exists the frontier is clamped to the index's row count — a
+        pinned epoch is then fully covered by BOTH structures and the
+        indexed and linear paths answer it identically."""
+        from repro.store.symbolic import CorpusEpoch
+        ep = self._rep.current_epoch()
+        if self.index is not None and self.index.n < ep.n_rows:
+            ep = CorpusEpoch(epoch=ep.epoch, n_rows=int(self.index.n),
+                             index_n=int(self.index.n))
+        return ep
+
     def locate(self, window_ids):
         """Window ids -> (source row, start sample); -1 ids pass through."""
         wid = np.asarray(window_ids, np.int64)

@@ -1,0 +1,369 @@
+"""Corpus-epoch pinning: snapshot-consistent reads under ingest.
+
+The tentpole contract of the epoch refactor: every mutation publishes
+an immutable frontier (``repro.store.CorpusEpoch``) as its LAST step,
+and a query pinned to epoch *e* answers **bit-identically to a frozen
+copy of the store truncated at e** — regardless of how many rows are
+appended between pinning and dispatch, with ZERO index rebuilds (as-of
+reads are id filters over the live split tree, never copies).
+
+Covered here:
+
+* the pinning property across all four encoders x linear/index source
+  x host/device verification, over interleavings of ``append`` and
+  pinned ``topk`` (oracle: a fresh engine built over the truncated
+  rows);
+* zero rebuilds — the index object survives every append by identity;
+* subsequence epochs (``WindowView.current_epoch`` clamps to index
+  coverage mid-sync);
+* the service satellites: planner-state persistence round-trip,
+  per-dispatch deadline re-check, replica placement/failover requeue,
+  and the threaded ingest-while-serving stress test with exact
+  shed accounting.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import MatchEngine, make_technique
+from repro.data.synthetic import season_dataset
+from repro.obs import MetricsRegistry
+from repro.service import (CoalescingQueue, MatchRequest, MatchSession,
+                           QueryPlanner)
+from repro.store import CorpusEpoch, SymbolicStore, epoch_rows
+
+L = 10
+TECHS = ["sax", "ssax", "tsax", "stsax"]
+
+
+def _enc(name, T):
+    kw = {"sax": {}, "ssax": {"r2_season": 0.7},
+          "tsax": {"r2_trend": 0.3}, "stsax": {"r2_season": 0.5}}[name]
+    return make_technique(name, T=T, W=T // (2 * L), L=L, **kw)
+
+
+def _mesh1():
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1,), ("data",))
+
+
+def _data(n, T, seed=11):
+    return season_dataset(n, T, L, 0.7, per_series_strength=True,
+                          seed=seed)
+
+
+def _build(tech, rows, T, verify):
+    """One engine over ``rows``, index built, per verification path."""
+    if verify == "host":
+        store = SymbolicStore.from_rows(_enc(tech, T), rows, media="ssd")
+        store.build_index(leaf_fill=16)
+        return MatchEngine(_enc(tech, T), store, verify="host",
+                           batch_size=32)
+    import jax.numpy as jnp
+    from repro.core.distributed import make_engine_service
+    eng = make_engine_service(_enc(tech, T), jnp.asarray(rows), _mesh1(),
+                              batch_size=32, verify="device")
+    eng.store.build_index(leaf_fill=16)
+    return eng
+
+
+def _append(engine, rows, verify):
+    if verify == "host":
+        engine.store.append(rows)
+    else:
+        engine.ingest(rows)
+
+
+# ---------------------------------------------------------------------------
+# tentpole property: pinned answers == frozen truncated store
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tech", TECHS)
+@pytest.mark.parametrize("source", ["linear", "index"])
+@pytest.mark.parametrize("verify", ["host", "device"])
+def test_epoch_pinned_topk_equals_frozen_store(tech, source, verify):
+    T, k, n0 = 240, 3, 40
+    X = _data(n0 + 24 + 3, T)
+    Q, D = X[:3], X[3:]
+    engine = _build(tech, D[:n0], T, verify)
+    idx0 = engine.store.index
+    src = "index" if source == "index" else None
+
+    # interleave appends with epoch pins; query every pinned epoch
+    # AFTER later appends have already landed
+    pins = [engine.store.current_epoch()]
+    for lo, hi in ((n0, n0 + 7), (n0 + 7, n0 + 24)):  # odd chunk sizes
+        _append(engine, D[lo:hi], verify)
+        pins.append(engine.store.current_epoch())
+    assert [p.n_rows for p in pins] == [n0, n0 + 7, n0 + 24]
+
+    for ep in pins:
+        got = engine.topk(Q, k=k, source=src, epoch=ep)
+        frozen = _build(tech, D[:ep.n_rows], T, verify)
+        want = frozen.topk(Q, k=k, source=src)
+        label = (tech, source, verify, ep.n_rows)
+        assert np.array_equal(got.indices, want.indices), label
+        assert np.array_equal(got.distances, want.distances), label
+        # pinned reads never see past the frontier
+        assert got.indices.max() < ep.n_rows, label
+
+    # zero index rebuilds: the SAME tree object served every epoch
+    assert engine.store.index is idx0
+    # and the live (unpinned) answer reflects the full corpus
+    live = engine.topk(Q, k=k, source=src)
+    want = engine.topk(Q, k=k, source=src,
+                       epoch=engine.store.current_epoch())
+    assert np.array_equal(live.indices, want.indices)
+
+
+def test_epoch_rows_coercion_and_publish_order():
+    """``epoch_rows`` accepts CorpusEpoch | int | None; mutations
+    publish AFTER the index insert (index_n always covers n_rows)."""
+    assert epoch_rows(None) is None
+    assert epoch_rows(7) == 7
+    assert epoch_rows(CorpusEpoch(epoch=3, n_rows=12, index_n=12)) == 12
+    T = 240
+    store = SymbolicStore.from_rows(_enc("ssax", T), _data(16, T),
+                                    media="ssd")
+    store.build_index(leaf_fill=8)
+    for m in (1, 5):
+        store.append(_data(m, T, seed=m))
+        ep = store.current_epoch()
+        assert ep.n_rows == store.n
+        assert ep.index_n == store.n      # index covered before publish
+        assert ep.epoch == store.version
+    assert store.epoch_ledger[-1] is store.current_epoch()
+
+
+def test_subseq_epoch_pinning():
+    """Window-level epochs: pinned subsequence answers equal a frozen
+    view truncated at the pin, for linear and indexed candidates."""
+    from repro.subseq import SubseqEngine, WindowView
+    n0, T, m, stride, k = 5, 360, 120, 6, 3
+    rows = _data(n0 + 4, T, seed=9)
+    q = rows[0, 40:40 + m][None]
+
+    def _view(upto):
+        v = WindowView(_enc("ssax", m), rows[:upto], stride=stride)
+        v.build_index(leaf_fill=16)
+        return v
+
+    view = _view(n0)
+    eng = SubseqEngine(view, verify="host")
+    pins = [view.current_epoch()]
+    view.append(rows[n0:n0 + 4])
+    pins.append(view.current_epoch())
+    for use_index in (False, True):
+        for ep, n_src in zip(pins, (n0, n0 + 4)):
+            got = eng.topk(q, k=k, use_index=use_index, epoch=ep)
+            frozen = SubseqEngine(_view(n_src), verify="host")
+            want = frozen.topk(q, k=k, use_index=use_index)
+            assert np.array_equal(got.window_ids, want.window_ids)
+            assert np.array_equal(got.distances, want.distances)
+
+
+# ---------------------------------------------------------------------------
+# satellite: planner-state persistence round-trip
+# ---------------------------------------------------------------------------
+def test_planner_state_roundtrip(tmp_path):
+    T, k = 240, 3
+    X = _data(40 + 4, T)
+    Q, D = X[:4], X[4:]
+    engine = _build("ssax", D, T, "host")
+    sd = str(tmp_path / "svc")
+    sess = MatchSession(engine, metrics=MetricsRegistry(),
+                        window_s=0.01, max_batch=8, state_dir=sd)
+    sess.start()
+    for r in sess.serve(Q, k=k):
+        assert r.ok, r.error
+    before = sess.planner.snapshot()
+    sess.close()                         # close persists planner.json
+    assert (tmp_path / "svc" / "planner.json").exists()
+    assert any(e["n_obs"] > 0 for e in before.values())
+
+    # a fresh session seeds from the persisted estimates
+    sess2 = MatchSession(engine, metrics=MetricsRegistry(),
+                         window_s=0.01, max_batch=8, state_dir=sd)
+    after = sess2.planner.snapshot()
+    for tier, e in before.items():
+        assert after[tier]["wall_s"] == pytest.approx(e["wall_s"])
+        assert after[tier]["n_obs"] == e["n_obs"]
+    # live observations are never clobbered by history
+    p = QueryPlanner(total=100, has_index=False)
+    p.observe("linear", 1, 0.5, type("R", (), {
+        "raw_accesses": np.array([3.0])})())
+    p.seed_from_snapshot({"linear": {"wall_s": 9.0, "cands": 1,
+                                     "n_obs": 50}})
+    assert p.estimate("linear") == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# satellite: deadlines re-checked per dispatch, not only at coalesce
+# ---------------------------------------------------------------------------
+def test_deadline_rechecked_at_dispatch():
+    T = 240
+    X = _data(32 + 2, T)
+    Q, D = X[:2], X[2:]
+    engine = _build("ssax", D, T, "host")
+    reg = MetricsRegistry()
+    sess = MatchSession(engine, metrics=reg, window_s=0.01, max_batch=8)
+    # a request whose deadline died between routing and its group's
+    # engine call must be shed as deadline_expired, not served late
+    req = MatchRequest(query=Q[0], k=1)
+    req.t_submit = time.monotonic() - 1.0
+    req.t_deadline = time.monotonic() - 0.5      # already expired
+    sess._run_group("linear", 1, [req])
+    assert req.done.is_set() and not req.ok
+    assert req.shed_reason == "deadline_expired"
+    snap = reg.snapshot()["counters"]
+    assert snap.get("serve.shed.deadline_expired") == 1
+    assert snap.get("serve.rejected") == 1
+    # a live-deadline request in the same group still gets served
+    ok_req = MatchRequest(query=Q[1], k=1)
+    ok_req.t_submit = time.monotonic()
+    ok_req.t_deadline = time.monotonic() + 60.0
+    sess._run_group("linear", 1, [ok_req])
+    assert ok_req.ok and ok_req.tier_served == "linear"
+
+
+# ---------------------------------------------------------------------------
+# satellite: replicas — shared store, EWMA placement, failover requeue
+# ---------------------------------------------------------------------------
+def test_replicated_session_exact_and_failover():
+    T, k = 240, 3
+    X = _data(48 + 6, T)
+    Q, D = X[:6], X[6:]
+    engine = _build("ssax", D, T, "host")
+    enc = _enc("ssax", T)
+    replica = MatchEngine(enc, engine.store, verify="host",
+                          batch_size=32)
+    with pytest.raises(ValueError):
+        MatchSession(engine, replicas=[
+            MatchEngine(enc, SymbolicStore.from_rows(enc, D[:8]),
+                        verify="host")])
+    reg = MetricsRegistry()
+    sess = MatchSession(engine, replicas=[replica], metrics=reg,
+                        window_s=0.005, max_batch=4)
+    sess.start()
+    oracle = engine.topk(Q, k=k, source="index")
+    reqs = [sess.submit(q, k=k, tier="index") for q in Q]
+    for i, r in enumerate(reqs):
+        assert r.wait(120) and r.ok, r.error
+        assert r.replica in (0, 1)
+        assert np.array_equal(r.indices, oracle.indices[i])
+    # kill a replica mid-flight: requests are requeued, never shed
+    sess.kill_replica(1)
+    assert sess.queue.live_replicas() == [0]
+    reqs2 = [sess.submit(q, k=k, tier="index") for q in Q]
+    for i, r in enumerate(reqs2):
+        assert r.wait(120) and r.ok, r.error
+        assert r.replica == 0
+        assert np.array_equal(r.indices, oracle.indices[i])
+    sess.close()
+    snap = reg.snapshot()["counters"]
+    assert snap.get("serve.rejected", 0) == 0
+    assert snap.get("serve.replica_killed") == 1
+
+
+def test_queue_requeues_batch_on_replica_failure():
+    """A replica dispatch failure reroutes the batch's unresolved
+    requests to a surviving replica (serve.requeued), shedding only
+    when every live replica has failed it."""
+    reg = MetricsRegistry()
+    served_on = []
+
+    def dispatch(batch, rid):
+        if rid == 0:
+            raise RuntimeError("replica 0 crashed")
+        for r in batch:
+            served_on.append(rid)
+            r.done.set()
+
+    q = CoalescingQueue(dispatch, n_replicas=2, metrics=reg,
+                        window_s=0.0, max_batch=4,
+                        place=lambda live, depths: 0 if 0 in live
+                        else live[0])
+    reqs = [MatchRequest(query=np.zeros(4, np.float32))
+            for _ in range(3)]
+    for r in reqs:
+        q.submit(r)
+    q.start()
+    for r in reqs:
+        assert r.wait(30)
+        assert r.error is None, r.error
+        assert r.requeues == 1
+    q.close()
+    assert served_on and all(rid == 1 for rid in served_on)
+    snap = reg.snapshot()["counters"]
+    assert snap.get("serve.requeued") == 3
+    assert snap.get("serve.rejected", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: threaded ingest + query stress — no torn reads, exact
+# epoch-pinned answers, exact shed accounting
+# ---------------------------------------------------------------------------
+def test_threaded_ingest_while_serving_stress():
+    T, k, n0, n_chunks, chunk = 240, 3, 40, 6, 5
+    X = _data(n0 + n_chunks * chunk + 4, T)
+    Q, D = X[:4], X[4:]
+    engine = _build("ssax", D[:n0], T, "host")
+    reg = MetricsRegistry()
+    sess = MatchSession(engine, metrics=reg, window_s=0.001,
+                        max_batch=16, max_queue=512)
+    sess.start()
+    stop = threading.Event()
+    served = []
+    served_lock = threading.Lock()
+
+    def writer():
+        for c in range(n_chunks):
+            lo = n0 + c * chunk
+            engine.store.append(D[lo:lo + chunk])
+            time.sleep(0.002)
+        stop.set()
+
+    def reader(tier):
+        while not stop.is_set():
+            reqs = [sess.submit(q, k=k, tier=tier) for q in Q]
+            for r in reqs:
+                assert r.wait(120)
+                if r.ok:
+                    with served_lock:
+                        served.append(r)
+
+    wt = threading.Thread(target=writer)
+    rts = [threading.Thread(target=reader, args=(t,))
+           for t in ("index", "linear")]
+    wt.start()
+    [t.start() for t in rts]
+    wt.join()
+    [t.join() for t in rts]
+    sess.close()
+
+    assert served, "stress loop served nothing"
+    # every served answer is tagged with its admission epoch and equals
+    # a frozen store truncated there (oracle cached per frontier)
+    oracles = {}
+    n_final = n0 + n_chunks * chunk
+    qkey = {q.tobytes(): i for i, q in enumerate(Q)}
+    for r in served:
+        assert r.epoch is not None
+        n_e = r.epoch.n_rows
+        assert n0 <= n_e <= n_final
+        src = "index" if r.tier_served == "index" else None
+        if (n_e, src) not in oracles:
+            frozen = _build("ssax", D[:n_e], T, "host")
+            oracles[(n_e, src)] = frozen.topk(Q, k=k, source=src)
+        want = oracles[(n_e, src)]
+        qi = qkey[r.query.tobytes()]
+        assert np.array_equal(r.indices, want.indices[qi]), \
+            (n_e, r.tier_served)
+        assert np.array_equal(r.distances, want.distances[qi])
+    # exact shed accounting survives concurrency
+    snap = reg.snapshot()["counters"]
+    sheds = sum(v for n, v in snap.items()
+                if n.startswith("serve.shed."))
+    assert sheds == snap.get("serve.rejected", 0)
